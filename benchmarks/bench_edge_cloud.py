@@ -1,0 +1,57 @@
+"""Fig 4 + §9.4: edge-vs-cloud placement -- daemon decision quality and
+the amortization rule (migrate iff speedup >= 1.5x, work >= 2x
+migration time)."""
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get
+from repro.core.channel import NetworkCondition
+from repro.core.daemon import CLOUD, EDGE, PrivacyAwareDaemon
+
+
+def run():
+    cfg = get("llama-1.5b")
+    d = PrivacyAwareDaemon()
+
+    # the paper's OpenBLAS anchor: edge 45s vs cloud 15.5s, migration 9s
+    # -> net speedup 1.41x; we sweep workload scale and report decisions
+    for toks, label in ((100, "tiny"), (50_000, "small"),
+                        (400_000, "medium"), (3_000_000, "large")):
+        dec = d.decide(sensitivity="public", cfg=cfg,
+                       prefill_tokens=toks, decode_tokens=toks // 10,
+                       workspace_bytes=5 * 10 ** 8)
+        net = (dec.est_local_s
+               / max(dec.est_remote_s + dec.migration_s, 1e-9))
+        emit(f"edge_cloud/decision/{label}", dec.est_local_s * 1e6,
+             f"target={dec.target};raw_speedup={dec.speedup:.2f}x;"
+             f"net_speedup={net:.2f}x;mig_s={dec.migration_s:.3f}")
+
+    # decision-boundary check: the paper's empirical thresholds
+    boundary_hits = 0
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        toks = int(10 ** rng.uniform(3, 6.5))
+        ws = int(10 ** rng.uniform(5, 8))
+        dec = d.decide(sensitivity="public", cfg=cfg, prefill_tokens=toks,
+                       decode_tokens=toks // 10, workspace_bytes=ws)
+        should = (dec.speedup >= 1.5
+                  and dec.est_local_s >= 2.0 * dec.migration_s)
+        if (dec.target == "remote") == should:
+            boundary_hits += 1
+    emit("edge_cloud/rule_consistency", 0.0,
+         f"{boundary_hits}/200 decisions match the paper's "
+         "speedup>=1.5 & work>=2x-migration rule")
+
+    # degraded network pushes the boundary toward local
+    d_slow = PrivacyAwareDaemon(net=NetworkCondition(bandwidth_bps=1e7))
+    moved = 0
+    for toks in (50_000, 200_000, 800_000):
+        a = d.decide(sensitivity="public", cfg=cfg, prefill_tokens=toks,
+                     decode_tokens=toks // 10, workspace_bytes=10 ** 8)
+        b = d_slow.decide(sensitivity="public", cfg=cfg,
+                          prefill_tokens=toks, decode_tokens=toks // 10,
+                          workspace_bytes=10 ** 8)
+        moved += int(a.target == "remote" and b.target == "local")
+    emit("edge_cloud/bandwidth_sensitivity", 0.0,
+         f"{moved}/3 remote decisions flip local on a 10Mbps link")

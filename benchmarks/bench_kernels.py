@@ -1,0 +1,48 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp-blockwise vs oracle
+on CPU -- correctness anchors + FLOP counts for §Roofline.
+
+Wall-times on CPU interpret mode are NOT TPU perf (interpret executes
+the kernel body in Python); the benchmark's value is (a) allclose
+anchoring, (b) the FLOP/byte counts that feed the roofline, (c) a
+regression canary on kernel semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.models.attention import flash_causal
+
+
+def run():
+    rng = np.random.default_rng(0)
+    B, S, H, KV, D = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+
+    o_ref = ref.reference_attention(q, k, v)
+    o_pal = flash_attention(q, k, v, block_q=64, block_k=64,
+                            interpret=True)
+    err = float(jnp.abs(o_pal - o_ref).max())
+    flops = 2 * 2 * B * H * D * S * S / 2  # exact causal
+    t_blk = timeit(lambda: jax.block_until_ready(
+        flash_causal(q, k, v, block=64)))
+    emit("kernels/flash_attention_blockwise", t_blk * 1e6,
+         f"err_vs_oracle={err:.1e};flops={flops:.3e}")
+
+    T, Hh, Dh = 128, 2, 32
+    r = jnp.asarray(rng.standard_normal((B, T, Hh, Dh)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((B, T, Hh, Dh)), jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((B, T, Hh, Dh)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 0.99, (B, T, Hh, Dh)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((Hh, Dh)), jnp.float32)
+    s0 = jnp.zeros((B, Hh, Dh, Dh), jnp.float32)
+    o1, s1 = rwkv6_scan(r, kk, vv, w, u, s0, chunk=32, interpret=True)
+    o2, s2 = ref.rwkv6_ref(r, kk, vv, w, u, s0)
+    emit("kernels/rwkv6_scan", 0.0,
+         f"err_vs_oracle={float(jnp.abs(o1-o2).max()):.1e};"
+         f"chunked_flops~{2*B*T*Hh*(Dh*Dh*3 + 32*Dh):.2e}")

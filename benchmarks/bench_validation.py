@@ -1,0 +1,108 @@
+"""Table 3 + §9.8: validation detection/false-positive rates and the
+parallel-vs-serial overhead.
+
+Synthetic labeled corpus: sequences with planted marker tokens (harmful
+/ PII / medical / compliance ranges) and statistically-planted
+hallucination stretches (low-logprob windows); the zoo's thresholds
+trade off like the paper's model-based validators."""
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.validation import (COMPLIANCE, HARMFUL, MEDICAL, PII,
+                                   ValidationFramework, default_zoo)
+
+KINDS = {
+    "hallucination": None,
+    "harmful": HARMFUL,
+    "privacy": PII,
+    "medical": MEDICAL,
+    "compliance": COMPLIANCE,
+}
+PAPER = {"hallucination": (94.2, 2.1), "harmful": (99.7, 0.3),
+         "privacy": (96.8, 1.2), "medical": (97.1, 1.8),
+         "compliance": (98.9, 0.7)}
+
+
+def _sample(rng, kind, positive):
+    toks = list(rng.integers(100, 400, 24))
+    logprobs = list(rng.uniform(-2.5, -0.2, 24))
+    if positive:
+        if kind == "hallucination":
+            i = rng.integers(4, 18)
+            for j in range(i, i + 5):
+                logprobs[j] = float(rng.uniform(-9.0, -5.0))
+        else:
+            toks[rng.integers(2, 22)] = int(
+                rng.integers(KINDS[kind].start, KINDS[kind].stop))
+    return toks, logprobs
+
+
+def run():
+    rng = np.random.default_rng(0)
+    n = 600
+    zoo = {v.kind: v for v in default_zoo(seed=1)}
+    for kind in KINDS:
+        v = zoo[kind]
+        tp = fp = 0
+        for i in range(n):
+            positive = i % 2 == 0
+            toks, lps = _sample(rng, kind, positive)
+            verdict = v.check(toks, lps)
+            if positive and not verdict.ok:
+                tp += 1
+            if not positive and not verdict.ok:
+                fp += 1
+        det = 100.0 * tp / (n // 2)
+        fpr = 100.0 * fp / (n // 2)
+        p_det, p_fp = PAPER[kind]
+        emit(f"validation/{kind}", 0.0,
+             f"detect={det:.1f}%(paper {p_det}%);fp={fpr:.1f}%"
+             f"(paper {p_fp}%)")
+
+    # parallel vs serial overhead (paper: 180ms/5.2% vs 520ms serial;
+    # throughput -3% parallel vs -18% serial).  Parallel mode truly
+    # overlaps: validators run in a worker thread while generation
+    # continues; serial mode validates after generation AND blocks per
+    # stride (post-hoc systems re-rank synchronously).
+    from concurrent.futures import ThreadPoolExecutor
+    vf = ValidationFramework(stride=4)
+    gen_cost = 0.003           # per-token generation cost stand-in
+    val_cost = 0.002           # per-check validator model cost
+
+    def checked(toks, lps):
+        time.sleep(val_cost)
+        return vf.validate_post_hoc(toks, lps)
+
+    pool = ThreadPoolExecutor(1)   # persistent validator sidecar
+
+    def generate_with(mode):
+        toks, lps = _sample(rng, "harmful", False)
+        t0 = time.perf_counter()
+        if mode == "parallel":
+            fut = None
+            for i in range(len(toks)):
+                time.sleep(gen_cost)     # decode continues...
+                if (i + 1) % vf.stride == 0:
+                    if fut is not None:
+                        fut.result()     # intervention point
+                    fut = pool.submit(checked, toks[:i + 1],
+                                      lps[:i + 1])
+            if fut is not None:
+                fut.result()
+        else:
+            for i in range(len(toks)):
+                time.sleep(gen_cost)
+                if (i + 1) % vf.stride == 0:
+                    checked(toks[:i + 1], lps[:i + 1])  # blocks decode
+        return time.perf_counter() - t0
+
+    base = 24 * gen_cost
+    par = np.median([generate_with("parallel") for _ in range(8)])
+    ser = np.median([generate_with("serial") for _ in range(8)])
+    emit("validation/overhead_parallel", par * 1e6,
+         f"+{100*(par-base)/base:.1f}% vs gen (paper 3-5%)")
+    emit("validation/overhead_serial", ser * 1e6,
+         f"+{100*(ser-base)/base:.1f}% vs gen (paper ~18%)")

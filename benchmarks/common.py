@@ -1,0 +1,39 @@
+"""Benchmark plumbing: timing, CSV rows, shared fixtures."""
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def timeit(fn, *, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def tiny_cfg(arch="llama-1.5b", **kw):
+    from repro.configs import get
+    from repro.configs.tiny import make_tiny
+    return make_tiny(get(arch), **kw)
+
+
+def tiny_engine(cfg=None, seed=0, slots=2, max_len=64, params=None):
+    import jax
+    from repro.models.init import init_params
+    from repro.serving.engine import Engine
+    cfg = cfg or tiny_cfg()
+    if params is None:
+        params = init_params(cfg, jax.random.key(0))
+    return Engine(cfg, params, slots=slots, max_len=max_len, seed=seed)

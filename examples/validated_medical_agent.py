@@ -1,0 +1,75 @@
+"""Scenario 3 (collaborative medical diagnosis): confidential placement
++ attested migration + parallel validation that intervenes mid-stream.
+
+    PYTHONPATH=src python examples/validated_medical_agent.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.configs.tiny import make_tiny
+from repro.core.daemon import PrivacyAwareDaemon
+from repro.core.validation import MEDICAL, ValidationFramework
+from repro.models.init import init_params
+from repro.serving.engine import Engine, Request
+
+
+def main():
+    cfg = make_tiny(get("llama-1.5b"))
+    params = init_params(cfg, jax.random.key(0))
+
+    # 1. the daemon pins patient data to hospital infrastructure
+    daemon = PrivacyAwareDaemon()          # default: confidential stays
+    dec = daemon.decide(sensitivity="confidential", cfg=get("llama-1.5b"),
+                        prefill_tokens=200_000, decode_tokens=20_000,
+                        workspace_bytes=10 ** 8)
+    print(f"placement for confidential case: {dec.target} ({dec.reason})")
+
+    hospital = PrivacyAwareDaemon(max_remote_sensitivity="confidential")
+    dec = hospital.decide(sensitivity="confidential",
+                          cfg=get("llama-1.5b"),
+                          prefill_tokens=200_000, decode_tokens=20_000,
+                          workspace_bytes=10 ** 8)
+    print(f"with hospital private-cloud policy: {dec.target} "
+          f"(speedup {dec.speedup:.1f}x)")
+
+    # 2. diagnosis generation with in-stream validation
+    engine = Engine(cfg, params, slots=1, max_len=96, seed=4)
+    req = Request("dx-patient-7", np.arange(8), max_new_tokens=32,
+                  temperature=0.8, top_k=16)
+    engine.add_request(req)
+    vf = ValidationFramework(stride=2)
+
+    emitted = []
+
+    def emit():
+        if not engine.requests:
+            return None
+        toks = engine.step()
+        t = toks.get("dx-patient-7")
+        if t is None:
+            return None
+        emitted.append(t)
+        # plant a synthetic medical-error marker to show intervention
+        if len(emitted) == 9:
+            return MEDICAL.start + 2
+        return t
+
+    tokens, report = vf.validate_stream(emit)
+    if report.intervened:
+        bad = [v for v in report.verdicts if not v.ok][0]
+        print(f"\nvalidator '{bad.kind}' INTERVENED at position "
+              f"{bad.position}: suggestion blocked before reaching "
+              f"the physician ({len(tokens)} safe tokens kept)")
+    print(f"validation mode: {report.mode}, wall {report.wall_s*1000:.0f}ms"
+          f" (parallel with generation -- paper: +3-5% vs +18% serial)")
+
+
+if __name__ == "__main__":
+    main()

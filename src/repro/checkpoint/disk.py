@@ -1,0 +1,103 @@
+"""Distributed disk checkpointing with restart + elastic resharding.
+
+Layout (tensorstore-style, stdlib-only):
+    <dir>/step_<n>/
+        MANIFEST.json      {step, leaf paths, shapes, dtypes, tree def}
+        <leaf_id>.npy      one file per pytree leaf
+
+Restore is *mesh-agnostic*: arrays are loaded on host then device_put
+against the target sharding -- restoring a 16x16-trained checkpoint onto
+a 2x16x16 mesh (elastic scale-up) or a 1-chip debug mesh is the same
+code path the MVVM migration layer uses (core/migration.py reuses
+``serialize_tree``/``deserialize_tree``)."""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    keyed = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        keyed[key] = leaf
+    return keyed, treedef
+
+
+def save(directory: str, step: int, tree, *, keep: int = 3) -> str:
+    """Atomic checkpoint write (tmp dir + rename)."""
+    keyed, _ = _flatten(tree)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": {}}
+    for i, (key, leaf) in enumerate(sorted(keyed.items())):
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":  # numpy can't serialize ml_dtypes natively
+            arr = arr.view(np.uint16)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {
+            "file": fname, "shape": list(arr.shape), "dtype": dtype}
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(directory, keep)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like_tree, *, shardings=None):
+    """Restore into the structure of ``like_tree`` (abstract ok).
+
+    ``shardings``: optional matching pytree of NamedSharding -- enables
+    restore-onto-a-different-mesh (elastic restart)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    keyed_like, treedef = _flatten(like_tree)
+    flat_shard = None
+    if shardings is not None:
+        keyed_shard, _ = _flatten(shardings)
+        flat_shard = keyed_shard
+    out = {}
+    for key in keyed_like:
+        meta = manifest["leaves"][key]
+        arr = np.load(os.path.join(path, meta["file"]))
+        if meta["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if flat_shard is not None:
+            arr = jax.device_put(arr, flat_shard[key])
+        else:
+            arr = jnp.asarray(arr)
+        out[key] = arr
+    ordered = [out[k] for k in keyed_like]  # keyed_like preserves tree order
+    return jax.tree.unflatten(treedef, ordered)
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(
+        int(m.group(1)) for d in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", d)))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,3 @@
+from repro.configs.base import (SHAPES, ArchEntry, BlockDef, LayerSpec,
+                                ModelConfig, MoESpec, ShapeSpec, entry, get,
+                                names, register)

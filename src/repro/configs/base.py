@@ -1,0 +1,260 @@
+"""Model / shape configuration dataclasses and the arch registry.
+
+Every assigned architecture is a ``ModelConfig`` built from
+``BlockDef``s: a block is a short heterogeneous run of layers
+(e.g. gemma3's [local x5, global] or jamba's [mamba, attn, mamba x6])
+that repeats ``repeats`` times.  The model stacks parameters per block
+position and scans over repeats, so compile time is O(block size), not
+O(num_layers) -- essential for the 512-device dry-run on one CPU core.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# layer / block / model configs
+# ---------------------------------------------------------------------------
+
+MIXERS = ("attn", "local", "rwkv", "mamba", "none")
+FFNS = ("dense", "moe", "none")
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    d_expert: int
+    num_shared: int = 0
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"          # attn | local | rwkv | mamba | none
+    ffn: str = "dense"           # dense | moe | none
+    window: int = 0              # sliding window size for mixer == "local"
+
+    def __post_init__(self):
+        assert self.mixer in MIXERS, self.mixer
+        assert self.ffn in FFNS, self.ffn
+
+
+@dataclass(frozen=True)
+class BlockDef:
+    layers: tuple[LayerSpec, ...]
+    repeats: int = 1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | ssm | moe | hybrid | vlm | audio
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    blocks: tuple[BlockDef, ...]
+    moe: Optional[MoESpec] = None
+
+    # attention details
+    rope_theta: float = 10000.0
+    attn_softcap: float = 0.0          # gemma2: 50.0
+    logit_softcap: float = 0.0         # gemma2: 30.0
+    norm_eps: float = 1e-6
+    act: str = "silu"                  # swiglu gate activation
+    qk_norm: bool = False
+
+    # ssm details
+    rwkv_head_dim: int = 64
+    rwkv_lora: int = 64                # low-rank dim for data-dependent mixes
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+
+    # encoder-decoder (whisper) -- encoder is bidirectional attn over frames
+    encoder_blocks: tuple[BlockDef, ...] = ()
+    decoder_len: int = 0               # fixed decoder length when enc-dec
+    cross_attention: bool = False
+
+    # vlm: number of stub patch-embedding positions prepended to text
+    num_patches: int = 0
+
+    # misc
+    dtype: str = "bfloat16"
+    vocab_pad_multiple: int = 1024
+    tie_embeddings: bool = False
+    max_position: int = 1 << 20
+    # logical-axis rule overrides, e.g. (("heads", None),) to replicate attn
+    sharding_overrides: tuple[tuple[str, object], ...] = ()
+
+    # ------------------------------------------------------------------
+    @property
+    def num_layers(self) -> int:
+        return sum(len(b.layers) * b.repeats for b in self.blocks)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return (self.vocab_size + m - 1) // m * m
+
+    @property
+    def d_inner(self) -> int:  # mamba inner dim
+        return self.mamba_expand * self.d_model
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    @property
+    def overrides(self) -> dict:
+        return dict(self.sharding_overrides)
+
+    def layer_specs(self) -> list[LayerSpec]:
+        out = []
+        for b in self.blocks:
+            out.extend(list(b.layers) * b.repeats)
+        return out
+
+    def param_count(self) -> int:
+        """Analytic parameter count (excludes any padding)."""
+        from repro.models import schema  # lazy: avoids import cycle
+        import jax
+        import math
+        tree = schema.model_schema(self)
+        leaves = jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, schema.ParamDef))
+        return sum(math.prod(p.shape) for p in leaves)
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: routed top-k + shared only)."""
+        if self.moe is None:
+            return self.param_count()
+        from repro.models import schema
+        import jax
+        import math
+        total = 0
+        moe = self.moe
+        tree = schema.model_schema(self)
+        flat, _ = jax.tree.flatten_with_path(
+            tree, is_leaf=lambda x: isinstance(x, schema.ParamDef))
+        for path, leaf in flat:
+            n = math.prod(leaf.shape)
+            keys = jax.tree_util.keystr(path)
+            # routed expert weights live at ...['moe']['w_*'], not shared
+            if ("'moe'" in keys and "'shared'" not in keys
+                    and any(w in keys for w in
+                            ("'w_gate'", "'w_up'", "'w_down'"))):
+                n = n * moe.top_k // moe.num_experts
+            total += n
+        return total
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# input shapes (the 4 assigned shape cells)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+    # sharding rule overrides active for this shape (e.g. sequence-shard
+    # the KV cache for long-context decode)
+    rule_overrides: tuple[tuple[str, object], ...] = ()
+
+    @property
+    def overrides(self) -> dict:
+        return dict(self.rule_overrides)
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    # FSDP: parameter d_model dims shard over "data" during training
+    # (ZeRO-3 via GSPMD) -- without it optimizer state alone exceeds HBM
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train",
+                          rule_overrides=(("embed", ("data",)),)),
+    # decode caches sequence-shard over "model" (flash-decode split-K):
+    # kv_heads grab the axis first when they divide it (deepseek/gemma2);
+    # otherwise the sequence dim takes it -- never the head_dim, whose
+    # sharding collides with the head-sharded output projection and
+    # makes GSPMD all-gather the whole V cache per layer (measured:
+    # 53.7 GB/step on stablelm decode_32k; see EXPERIMENTS.md §Perf).
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill",
+                             rule_overrides=(("cache_seq", ("model",)),
+                                             ("kv_dim", None))),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode",
+                            rule_overrides=(("cache_seq", ("model",)),
+                                            ("kv_dim", None))),
+    "long_500k": ShapeSpec(
+        "long_500k", 524288, 1, "decode",
+        # batch=1: shard the KV cache / recurrent state along sequence
+        rule_overrides=(("cache_seq", ("data",)), ("batch", None)),
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, "ArchEntry"] = {}
+
+
+@dataclass(frozen=True)
+class ArchEntry:
+    config: ModelConfig
+    shapes: tuple[str, ...]          # which of SHAPES apply
+    skip_notes: tuple[tuple[str, str], ...] = ()  # shape -> reason
+
+    @property
+    def notes(self) -> dict:
+        return dict(self.skip_notes)
+
+
+def register(config: ModelConfig, shapes: tuple[str, ...],
+             skip_notes: tuple[tuple[str, str], ...] = ()) -> ModelConfig:
+    _REGISTRY[config.name] = ArchEntry(config, shapes, skip_notes)
+    return config
+
+
+def get(name: str) -> ModelConfig:
+    _load_all()
+    return _REGISTRY[name].config
+
+
+def entry(name: str) -> ArchEntry:
+    _load_all()
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    # import every config module so it registers itself
+    import importlib
+    for mod in (
+        "stablelm_12b", "gemma3_4b", "deepseek_7b", "gemma2_27b",
+        "rwkv6_7b", "internvl2_26b", "whisper_base", "deepseek_moe_16b",
+        "granite_moe_1b", "jamba_52b", "llama_1p5b",
+    ):
+        importlib.import_module(f"repro.configs.{mod}")

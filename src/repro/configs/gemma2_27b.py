@@ -1,0 +1,27 @@
+"""gemma2-27b [dense]: 46L d=4608 32H (GQA kv=16) ff=36864 V=256000.
+
+local(4096)+global alternating, attn softcap 50, logit softcap 30
+[arXiv:2408.00118; hf].  long_500k runs: 23/46 layers window-bounded;
+decode against the 23 global-layer KVs is O(S) per token and the
+sequence-sharded cache fits (DESIGN.md §Arch-applicability)."""
+
+from repro.configs.base import (BlockDef, LayerSpec, ModelConfig, register)
+
+CONFIG = register(
+    ModelConfig(
+        name="gemma2-27b",
+        family="dense",
+        d_model=4608,
+        num_heads=32,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=36864,
+        vocab_size=256000,
+        act="gelu",
+        attn_softcap=50.0,
+        logit_softcap=30.0,
+        blocks=(BlockDef((LayerSpec("local", "dense", window=4096),
+                          LayerSpec("attn", "dense")), repeats=23),),
+    ),
+    shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+)

@@ -1,0 +1,75 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation -- the dry-run lowers
+train/prefill/serve steps against these.  The same builders produce real
+arrays (``concrete=True``) for smoke tests and examples."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.model import make_cache
+
+
+def _arr(shape, dtype, concrete, rng=None, maxval=None):
+    if not concrete:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if np.issubdtype(dtype, np.integer):
+        rng = rng or np.random.default_rng(0)
+        return jnp.asarray(rng.integers(0, maxval or 2, size=shape,
+                                        dtype=np.int32))
+    rng = rng or np.random.default_rng(0)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, *, concrete=False,
+                seed=0):
+    """The model-input batch for a shape cell (without caches)."""
+    rng = np.random.default_rng(seed)
+    B, S = shape.global_batch, shape.seq_len
+    d: dict = {}
+    if shape.kind == "decode":
+        d["tokens"] = _arr((B, 1), jnp.int32, concrete, rng, cfg.vocab_size)
+        d["positions"] = _arr((B, 1), jnp.int32, concrete, rng, S)
+    elif cfg.encoder_blocks:
+        # audio: seq_len = encoder frames (stub embeddings), fixed dec len
+        d["frames"] = _arr((B, S, cfg.d_model), jnp.bfloat16, concrete, rng)
+        d["tokens"] = _arr((B, cfg.decoder_len), jnp.int32, concrete, rng,
+                           cfg.vocab_size)
+    elif cfg.num_patches:
+        d["patch_embeds"] = _arr((B, cfg.num_patches, 1024), jnp.bfloat16,
+                                 concrete, rng)
+        d["tokens"] = _arr((B, S - cfg.num_patches), jnp.int32, concrete,
+                           rng, cfg.vocab_size)
+    else:
+        d["tokens"] = _arr((B, S), jnp.int32, concrete, rng, cfg.vocab_size)
+    return d
+
+
+def cache_specs_abstract(cfg: ModelConfig, shape: ShapeSpec):
+    """Abstract cache tree for decode shapes (ShapeDtypeStructs)."""
+    B, S = shape.global_batch, shape.seq_len
+    cross_len = S if cfg.encoder_blocks else 0
+    max_len = cfg.decoder_len if cfg.encoder_blocks else S
+    tree = jax.eval_shape(
+        lambda: make_cache(cfg, B, max_len, cross_len=cross_len))
+    return tree
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, *, concrete=False,
+                seed=0):
+    """Full step-function inputs: batch (+ caches for decode)."""
+    d = batch_specs(cfg, shape, concrete=concrete, seed=seed)
+    if shape.kind == "decode":
+        if concrete:
+            B = shape.global_batch
+            S = shape.seq_len
+            cross_len = S if cfg.encoder_blocks else 0
+            max_len = cfg.decoder_len if cfg.encoder_blocks else S
+            d["caches"] = make_cache(cfg, B, max_len, cross_len=cross_len)
+        else:
+            d["caches"] = cache_specs_abstract(cfg, shape)
+    return d

@@ -1,0 +1,25 @@
+"""stablelm-12b [dense]: 40L d=5120 32H (GQA kv=8) ff=13824 V=100352.
+
+[hf:stabilityai/stablelm-2-1_6b family; hf].  Pure full attention ->
+long_500k skipped (unbounded quadratic-history KV; see DESIGN.md
+§Arch-applicability)."""
+
+from repro.configs.base import (BlockDef, LayerSpec, ModelConfig, register)
+
+CONFIG = register(
+    ModelConfig(
+        name="stablelm-12b",
+        family="dense",
+        d_model=5120,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=160,
+        d_ff=13824,
+        vocab_size=100352,
+        qk_norm=True,
+        blocks=(BlockDef((LayerSpec("attn", "dense"),), repeats=40),),
+    ),
+    shapes=("train_4k", "prefill_32k", "decode_32k"),
+    skip_notes=(("long_500k", "pure full attention: 500k decode KV is "
+                 "unbounded; sub-quadratic archs only"),),
+)

@@ -1,0 +1,30 @@
+"""MVVM core: the paper's contribution as composable JAX-side modules.
+
+workspace    -- the migratable agent state (KV/SSM caches, tokens, rng)
+attestation  -- measurements, Merkle trees, quotes, capability vectors
+channel      -- simulated network + attested TLS-style sessions
+migration    -- checkpoint/compress/encrypt/transfer/reshard-restore
+replication  -- multi-tier replicas, vector clocks, 200ms failover
+speculation  -- token-level spec decoding + request-level fast/slow merge
+validation   -- parallel-with-generation safety validators
+daemon       -- privacy-aware placement scheduler (roofline cost model)
+"""
+
+from repro.core.attestation import (Attester, AttestationError, MerkleTree,
+                                    Quote, TrustAuthority, capabilities,
+                                    measure_config, semantic_attest)
+from repro.core.channel import (AttestedSession, Channel, NetworkCondition,
+                                SimClock)
+from repro.core.daemon import (CLOUD, EDGE, DeviceProfile,
+                               PlacementDecision, PrivacyAwareDaemon)
+from repro.core.migration import (MigrationReport, Migrator, Snapshot,
+                                  criu_restore, criu_snapshot, qemu_snapshot)
+from repro.core.replication import (FailoverEvent, ReplicaTier,
+                                    ReplicationManager)
+from repro.core.speculation import (SpecStats, SpeculationOutcome,
+                                    SpeculativeExecutor,
+                                    autoregressive_generate,
+                                    speculative_generate)
+from repro.core.validation import (ValidationFramework, ValidationReport,
+                                   Validator, default_zoo)
+from repro.core.workspace import AgentWorkspace, VectorClock

@@ -1,0 +1,151 @@
+"""Multi-tier replication with quality degradation (paper §3.5, §9.6).
+
+Tiers (cloud / edge / device) each hold an Engine over a different
+quality point: full-precision full model, int8-quantized model, or a
+distilled narrow config.  A ``ReplicationManager``:
+
+  * keeps replicas in sync with incremental page deltas of the primary's
+    workspace (the ~12%-of-KV sync of §9.6), stamped with vector clocks;
+  * monitors ``NetworkCondition`` and fails over to the best reachable
+    tier within a latency budget (paper: 200ms, 80% functionality);
+  * degrades quality under bandwidth limits (lightweight models,
+    "trading 8% accuracy for stable response times");
+  * merges diverged replicas on reconnect (vector clocks: dominance
+    merges fast-forward; concurrent edits -> primary wins, divergent
+    suffix re-validated).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.channel import NetworkCondition
+from repro.core.migration import (Snapshot, apply_delta, delta_fraction,
+                                  make_delta, _pack_workspace,
+                                  _unpack_workspace, page_hashes)
+from repro.core.workspace import AgentWorkspace, VectorClock
+from repro.serving.engine import Engine
+
+
+@dataclass
+class ReplicaTier:
+    name: str                        # "cloud" | "edge" | "device"
+    engine: Engine
+    quality: float                   # relative answer quality in [0,1]
+    functionality: float             # fraction of features available
+    cond: NetworkCondition = field(default_factory=NetworkCondition)
+    snapshot: Optional[Snapshot] = None
+    vclock: VectorClock = field(default_factory=VectorClock)
+
+    @property
+    def reachable(self) -> bool:
+        return self.cond.up and self.cond.loss < 0.95
+
+
+@dataclass
+class FailoverEvent:
+    t: float
+    src: str
+    dst: str
+    latency_s: float
+    quality: float
+    reason: str
+
+
+class ReplicationManager:
+    def __init__(self, tiers: list[ReplicaTier], primary: str = "cloud"):
+        self.tiers = {t.name: t for t in tiers}
+        self.primary = primary
+        self.events: list[FailoverEvent] = []
+        self.sync_bytes_total = 0
+        self.sync_count = 0
+        self.last_delta_fraction = 1.0
+
+    # -- synchronization ----------------------------------------------------
+    def sync(self, ws: AgentWorkspace, src: str | None = None) -> dict:
+        """Incremental sync of the primary workspace to all reachable
+        replicas.  Returns per-tier wire bytes."""
+        src = src or self.primary
+        blob = _pack_workspace(ws)
+        snap = Snapshot(blob, page_hashes(blob))
+        out = {}
+        for name, tier in self.tiers.items():
+            if name == src or not tier.reachable:
+                continue
+            if tier.snapshot is None:
+                payload = blob
+                frac = 1.0
+            else:
+                payload = make_delta(tier.snapshot, snap)
+                frac = delta_fraction(tier.snapshot, snap)
+            tier.snapshot = snap
+            tier.vclock = tier.vclock.merge(ws.vclock)
+            self.sync_bytes_total += len(payload)
+            self.last_delta_fraction = frac
+            out[name] = len(payload)
+        self.sync_count += 1
+        return out
+
+    # -- failover -----------------------------------------------------------
+    def pick_tier(self, *, bandwidth_floor: float = 1e6) -> ReplicaTier:
+        """Best reachable tier: highest quality whose link sustains
+        interactive traffic; bandwidth-limited networks prefer
+        lightweight tiers (quality degradation)."""
+        ranked = sorted(self.tiers.values(), key=lambda t: -t.quality)
+        for tier in ranked:
+            if not tier.reachable:
+                continue
+            if tier.cond.bandwidth_bps < bandwidth_floor \
+                    and tier.quality > 0.5 and tier.name != "device":
+                continue  # heavy tier over a starved link: skip
+            return tier
+        # total disconnection: the on-device tier always works
+        return self.tiers["device"]
+
+    def failover(self, reason: str = "network") -> tuple[ReplicaTier, float]:
+        """Switch the active tier; returns (tier, failover latency).
+
+        Latency = detection + restoring the last synced snapshot into the
+        target tier's engine (measured, real work)."""
+        t0 = time.perf_counter()
+        tier = self.pick_tier()
+        if tier.snapshot is not None:
+            like = jax.eval_shape(lambda: tier.engine.state)
+            try:
+                ws = _unpack_workspace(tier.snapshot.blob, like)
+                from repro.core.migration import place_tree
+                ws.engine_state = place_tree(ws.engine_state)
+                ws.attach(tier.engine)
+            except Exception:
+                tier.functionality *= 0.8  # degraded restore
+        latency = time.perf_counter() - t0
+        self.events.append(FailoverEvent(
+            t=time.time(), src=self.primary, dst=tier.name,
+            latency_s=latency, quality=tier.quality, reason=reason))
+        self.primary = tier.name
+        return tier, latency
+
+    # -- reconnection merge ---------------------------------------------------
+    def merge_on_reconnect(self, local_ws: AgentWorkspace,
+                           remote_ws: AgentWorkspace) -> AgentWorkspace:
+        """Vector-clock merge of diverged replicas (paper: eventual
+        consistency, temporary divergence during partitions)."""
+        if remote_ws.vclock.dominates(local_ws.vclock):
+            winner = remote_ws
+        elif local_ws.vclock.dominates(remote_ws.vclock):
+            winner = local_ws
+        else:
+            # concurrent: keep the higher-quality (primary) side, but
+            # union request outputs so no user-visible work is lost
+            winner = remote_ws
+            by_rid = {r["rid"]: r for r in winner.requests}
+            for r in local_ws.requests:
+                if r["rid"] not in by_rid:
+                    winner.requests.append(r)
+        winner.vclock = local_ws.vclock.merge(remote_ws.vclock)
+        return winner

@@ -1,0 +1,120 @@
+"""Pallas flash-decode: one-token attention against a (ring-buffered)
+KV cache, GQA-aware.
+
+Grid = (batch, kv_heads, kv_blocks): all G query heads of a KV group are
+processed as one (G, D) block, so each KV tile is loaded from HBM once
+per group (not once per query head) and the score matmul is (G x D) @
+(D x Bk) -- MXU-shaped even at decode.  kv_blocks is the innermost
+"arbitrary" axis; fp32 online-softmax accumulators persist in VMEM
+scratch (flash-decode split-K).
+
+Validity masking comes from the cache's ``abs_pos`` slot map (supports
+ring-buffered sliding-window caches and partially-filled caches in one
+rule); for global caches (window=0) blocks entirely beyond the current
+position are skipped.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, ap_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale, window, softcap,
+            block_k, nk, skip_beyond_pos):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    pos = pos_ref[0, 0]
+    live = jnp.bool_(True)
+    if skip_beyond_pos:
+        # global caches fill slots in absolute order: skip empty tail
+        live = ki * block_k <= pos
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (Bk, D)
+        v = v_ref[0, 0]                              # (Bk, D)
+        ap = ap_ref[0]                               # (Bk,) int32
+        s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        valid = jnp.logical_and(ap >= 0, ap <= pos)
+        if window:
+            valid = jnp.logical_and(valid, ap > pos - window)
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        m_prev, l_prev = m_scr[:, 0], l_scr[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, abs_pos, positions, *,
+                     window=0, softcap=0.0, block_k=512, interpret=False):
+    """q: (B,1,H,D); caches: (B,Sc,KV,D); abs_pos: (B,Sc);
+    positions: (B,).  Returns (B,1,H,D)."""
+    B, _, H, D = q.shape
+    Sc, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    block_k = min(block_k, Sc)
+    assert Sc % block_k == 0
+    nk = Sc // block_k
+    scale = D ** -0.5
+
+    qt = q.reshape(B, KV, G, D)                       # group-major heads
+    kt = k_cache.transpose(0, 2, 1, 3)                # (B, KV, Sc, D)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    pos2 = positions.reshape(B, 1).astype(jnp.int32)
+
+    kern = functools.partial(
+        _kernel, scale=scale, window=window, softcap=softcap,
+        block_k=block_k, nk=nk, skip_beyond_pos=(window == 0))
+    out = pl.pallas_call(
+        kern,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, block_k), lambda b, h, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos2, qt, kt, vt, abs_pos)
+    return out.reshape(B, 1, H, D)

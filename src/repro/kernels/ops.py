@@ -1,0 +1,130 @@
+"""Kernel dispatch layer.
+
+Every hot op has (a) a Pallas TPU kernel (``<name>.py``) and (b) a pure
+jnp oracle (``ref.py``).  Dispatch policy:
+
+  * TPU backend        -> pallas_call kernel (VMEM-tiled)
+  * CPU / dry-run      -> the blockwise jnp implementation in
+                          ``models.attention`` (same FLOP profile as the
+                          kernel, so §Roofline derived from the CPU-
+                          compiled HLO is faithful)
+  * ``REPRO_FORCE_REF=1`` or ``set_backend("ref")`` -> oracle (tests)
+
+``interpret=True`` Pallas execution is reachable via
+``set_backend("interpret")`` -- used by the kernel test sweeps on CPU.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_ref
+
+_BACKEND_OVERRIDE: str | None = None  # None | "ref" | "pallas" | "interpret"
+
+
+def set_backend(name: str | None):
+    global _BACKEND_OVERRIDE
+    _BACKEND_OVERRIDE = name
+
+
+def backend() -> str:
+    if _BACKEND_OVERRIDE:
+        return _BACKEND_OVERRIDE
+    if os.environ.get("REPRO_FORCE_REF"):
+        return "ref"
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else "jnp_block"
+
+
+def _pallas_ok() -> bool:
+    return backend() in ("pallas", "interpret")
+
+
+def _interpret() -> bool:
+    return backend() == "interpret"
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def attention_causal(q, k, v, *, softcap=0.0, block=512):
+    if _pallas_ok():
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=True, window=0,
+                                  softcap=softcap,
+                                  interpret=_interpret())
+    if backend() == "ref":
+        return attn_ref.reference_attention(q, k, v, causal=True,
+                                            softcap=softcap)
+    return attn_ref.flash_causal(q, k, v, softcap=softcap, block=block)
+
+
+def attention_windowed(q, k, v, *, window, softcap=0.0, block=512,
+                       q_offset=0):
+    if _pallas_ok():
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=True, window=window,
+                                  softcap=softcap,
+                                  interpret=_interpret())
+    if backend() == "ref":
+        return attn_ref.reference_attention(q, k, v, causal=True,
+                                            window=window, softcap=softcap,
+                                            q_offset=q_offset)
+    return attn_ref.flash_windowed(q, k, v, window=window, softcap=softcap,
+                                   block=block, q_offset=q_offset)
+
+
+def attention_full(q, k, v, *, softcap=0.0, block=512, kv_len=None):
+    if _pallas_ok():
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=False, window=0,
+                                  softcap=softcap,
+                                  interpret=_interpret())
+    if backend() == "ref":
+        return attn_ref.reference_attention(q, k, v, causal=False,
+                                            softcap=softcap, kv_len=kv_len)
+    return attn_ref.flash_full(q, k, v, softcap=softcap, block=block,
+                               kv_len=kv_len)
+
+
+def decode_attention(q, k_cache, v_cache, abs_pos, positions, *,
+                     window=0, softcap=0.0):
+    if _pallas_ok():
+        from repro.kernels import decode_attention as da
+        return da.decode_attention(q, k_cache, v_cache, abs_pos, positions,
+                                   window=window, softcap=softcap,
+                                   interpret=_interpret())
+    return attn_ref.decode_attend(q, k_cache, v_cache, abs_pos, positions,
+                                  window=window, softcap=softcap)
+
+
+# --------------------------------------------------------------------------
+# speculative verification
+# --------------------------------------------------------------------------
+
+def spec_verify(draft_tokens, draft_probs, target_probs, rng):
+    """Token-level speculative-decoding acceptance (see kernels/ref.py)."""
+    if _pallas_ok():
+        from repro.kernels import spec_verify as sv
+        return sv.spec_verify(draft_tokens, draft_probs, target_probs, rng,
+                              interpret=_interpret())
+    from repro.kernels import ref
+    return ref.spec_verify_ref(draft_tokens, draft_probs, target_probs, rng)
+
+
+# --------------------------------------------------------------------------
+# int8 quantized matmul (edge-tier replicas)
+# --------------------------------------------------------------------------
+
+def int8_matmul(x, w_q, w_scale):
+    if _pallas_ok():
+        from repro.kernels import int8_matmul as im
+        return im.int8_matmul(x, w_q, w_scale, interpret=_interpret())
+    from repro.kernels import ref
+    return ref.int8_matmul_ref(x, w_q, w_scale)

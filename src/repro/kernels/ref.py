@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Attention oracles live in models/attention.py (reference_attention is
+the O(S^2) oracle; flash_* are the blockwise CPU implementations); they
+are re-exported here so kernel tests have one import surface.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (decode_attend, flash_causal, flash_full,
+                                    flash_windowed, reference_attention)
+
+__all__ = [
+    "reference_attention", "flash_causal", "flash_windowed", "flash_full",
+    "decode_attend", "spec_verify_ref", "int8_matmul_ref", "rwkv6_ref",
+]
+
+
+def spec_verify_ref(draft_tokens, draft_probs, target_probs, rng):
+    """Speculative-decoding acceptance (Leviathan et al. rejection rule).
+
+    draft_tokens: (g,) int32 proposed tokens
+    draft_probs:  (g, V) draft distribution at each proposal position
+    target_probs: (g+1, V) target distribution at those positions + bonus
+    Returns (n_accepted (), next_token ()) -- output distribution equals
+    the target model's (greedy case: longest matching prefix + target
+    argmax)."""
+    g = draft_tokens.shape[0]
+    k_u, k_s = jax.random.split(rng)
+    u = jax.random.uniform(k_u, (g,))
+    idx = jnp.arange(g)
+    p_tok = target_probs[idx, draft_tokens]
+    q_tok = draft_probs[idx, draft_tokens]
+    ratio = p_tok / jnp.maximum(q_tok, 1e-30)
+    acc = u < jnp.minimum(ratio, 1.0)
+    # prefix length of accepted proposals (first False)
+    n = jnp.argmin(jnp.concatenate([acc, jnp.array([False])]).astype(
+        jnp.int32))
+    # resample distribution at the cut position
+    safe_n = jnp.minimum(n, g - 1)
+    resid = jnp.maximum(target_probs[n] -
+                        jnp.where(n < g, draft_probs[safe_n], 0.0), 0.0)
+    rs = resid.sum()
+    dist = jnp.where(rs > 1e-9, resid / jnp.maximum(rs, 1e-30),
+                     target_probs[n])
+    nxt = jax.random.categorical(k_s, jnp.log(dist + 1e-30))
+    return n.astype(jnp.int32), nxt.astype(jnp.int32)
+
+
+def int8_matmul_ref(x, w_q, w_scale):
+    """x: (..., K) bf16; w_q: (K, N) int8; w_scale: (N,) fp32."""
+    y = jnp.einsum("...k,kn->...n", x.astype(jnp.float32),
+                   w_q.astype(jnp.float32))
+    return (y * w_scale).astype(x.dtype)
+
+
+def rwkv6_ref(r, k, v, w, u, state):
+    """Sequential RWKV6 recurrence oracle.
+
+    r,k,v,w: (B,T,H,D) fp32 (w = per-step decay in (0,1)); u: (H,D);
+    state: (B,H,D,D).  Returns (out (B,T,H,D), final state)."""
+    B, T, H, D = r.shape
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state

@@ -1,0 +1,93 @@
+"""Pallas speculative-decoding acceptance kernel.
+
+Computes the Leviathan-et-al. rejection rule entirely on-device: given
+gamma draft proposals with draft/target distributions and pre-drawn
+uniforms, emit (n_accepted, residual resample distribution).  The token
+gathers are expressed as one-hot reductions (gather-free -- TPU-friendly
+for the (gamma, V) block sizes of serving, V up to ~256k in one VMEM
+block per gamma row at fp32... blocked over V when larger).
+
+Sampling from the residual happens outside (jax.random.categorical) so
+kernel and oracle are bit-comparable given the same uniforms.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tok_ref, dp_ref, tp_ref, u_ref, n_ref, dist_ref, *, g):
+    toks = tok_ref[0]                               # (g,) int32
+    dp = dp_ref[...]                                # (g, V)
+    tp = tp_ref[...]                                # (g+1, V)
+    u = u_ref[0]                                    # (g,)
+    V = dp.shape[-1]
+    vio = lax.broadcasted_iota(jnp.int32, (g, V), 1)
+    onehot = (vio == toks[:, None]).astype(jnp.float32)
+    p_tok = jnp.sum(tp[:g] * onehot, axis=-1)
+    q_tok = jnp.sum(dp * onehot, axis=-1)
+    ratio = p_tok / jnp.maximum(q_tok, 1e-30)
+    acc = (u < jnp.minimum(ratio, 1.0)).astype(jnp.int32)
+    # prefix length: first rejection
+    prefix = jnp.cumprod(acc)
+    n = jnp.sum(prefix)
+    n_ref[0, 0] = n
+    # residual at the cut: max(tp[n] - dp[min(n, g-1)]*(n<g), 0)
+    gio = lax.broadcasted_iota(jnp.int32, (g + 1, V), 0)
+    tp_n = jnp.sum(jnp.where(gio == n, tp, 0.0), axis=0)
+    dp_n = jnp.sum(jnp.where(
+        lax.broadcasted_iota(jnp.int32, (g, V), 0)
+        == jnp.minimum(n, g - 1), dp, 0.0), axis=0)
+    resid = jnp.maximum(tp_n - jnp.where(n < g, 1.0, 0.0) * dp_n, 0.0)
+    rs = jnp.sum(resid)
+    dist_ref[0] = jnp.where(rs > 1e-9, resid / jnp.maximum(rs, 1e-30),
+                            tp_n)
+
+
+def spec_accept(draft_tokens, draft_probs, target_probs, u, *,
+                interpret=False):
+    """Returns (n_accepted (), dist (V,))."""
+    g, V = draft_probs.shape
+    n, dist = pl.pallas_call(
+        functools.partial(_kernel, g=g),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, g), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((g, V), lambda i: (0, 0)),
+            pl.BlockSpec((g + 1, V), lambda i: (0, 0)),
+            pl.BlockSpec((1, g), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, V), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, V), jnp.float32),
+        ],
+        interpret=interpret,
+    )(draft_tokens.reshape(1, g).astype(jnp.int32),
+      draft_probs.astype(jnp.float32),
+      target_probs.astype(jnp.float32),
+      u.reshape(1, g).astype(jnp.float32))
+    return n[0, 0], dist[0]
+
+
+def spec_verify(draft_tokens, draft_probs, target_probs, rng, *,
+                interpret=False):
+    """Kernel-backed equivalent of ref.spec_verify_ref."""
+    k_u, k_s = jax.random.split(rng)
+    g = draft_tokens.shape[0]
+    u = jax.random.uniform(k_u, (g,))
+    n, dist = spec_accept(draft_tokens, draft_probs, target_probs, u,
+                          interpret=interpret)
+    nxt = jax.random.categorical(k_s, jnp.log(dist + 1e-30))
+    return n.astype(jnp.int32), nxt.astype(jnp.int32)

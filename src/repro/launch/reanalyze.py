@@ -1,0 +1,56 @@
+"""Re-derive roofline JSONs from saved HLO dumps -- no recompilation.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze \
+        [--hlo results/hlo] [--out results/dryrun]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+import zstandard as zstd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo", default="results/hlo")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, get
+    from repro.launch import hlo_analysis, roofline
+
+    dctx = zstd.ZstdDecompressor()
+    for f in sorted(glob.glob(os.path.join(args.hlo, "*.hlo.zst"))):
+        base = os.path.basename(f)[:-len(".hlo.zst")]
+        arch, shape_name, meshk = base.split("__")
+        jpath = os.path.join(args.out, f"{base}.json")
+        old = json.load(open(jpath)) if os.path.exists(jpath) else {}
+        txt = dctx.decompress(open(f, "rb").read()).decode()
+        cost = hlo_analysis.analyze(txt)
+        cfg = get(arch)
+        shape = SHAPES[shape_name]
+        chips = 512 if meshk == "multi" else 256
+        n, na = cfg.param_count(), cfg.active_param_count()
+        mf = roofline.model_flops(cfg, shape, n, na) / chips
+        mb = roofline.model_bytes(cfg, shape, n, na, chips)
+        coll = dict(cost.coll)
+        coll["total"] = cost.coll_bytes
+        rl = roofline.Roofline(
+            arch=arch, shape=shape_name,
+            mesh="2x16x16" if meshk == "multi" else "16x16",
+            flops=cost.flops, hbm_bytes=cost.bytes,
+            coll_bytes=cost.coll_bytes, coll_breakdown=coll,
+            peak_memory_bytes=old.get("peak_memory_bytes", 0.0),
+            model_flops=mf, model_bytes=mb).finalize()
+        rec = {**old, **rl.to_dict()}
+        with open(jpath, "w") as fh:
+            json.dump(rec, fh, indent=1, default=str)
+        print(f"{base}: mem={rl.memory_s:.4f}s comp={rl.compute_s:.4f}s "
+              f"coll={rl.collective_s:.4f}s dom={rl.dominant} "
+              f"frac={rl.roofline_fraction:.3f}")
+
+
+if __name__ == "__main__":
+    main()

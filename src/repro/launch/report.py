@@ -1,0 +1,84 @@
+"""Render §Dry-run / §Roofline markdown tables from results/dryrun JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def load(d):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO flops | roofline frac | peak mem/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{fmt_bytes(r['peak_memory_bytes'])} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | compile s | HLO GFLOPs/dev | "
+           "HBM GB/dev | coll GB/dev | ar/ag/rs/a2a/cp GB | "
+           "args/dev | temps/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        cb = r["coll_breakdown"]
+        g = 1e9
+        parts = "/".join(
+            f"{cb.get(k, 0)/g:.2f}" for k in
+            ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute"))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('compile_s', 0):.0f} | {r['flops']/g:.1f} | "
+            f"{r['hbm_bytes']/g:.2f} | {r['coll_bytes']/g:.3f} | "
+            f"{parts} | {fmt_bytes(r.get('argument_size'))} | "
+            f"{fmt_bytes(r.get('temp_size'))} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--section", choices=["roofline", "dryrun", "both"],
+                    default="both")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if args.section in ("roofline", "both"):
+        print("### Roofline (single pod 16x16, per-device terms)\n")
+        print(roofline_table(rows, "16x16"))
+        print("\n### Roofline (multi-pod 2x16x16)\n")
+        print(roofline_table(rows, "2x16x16"))
+    if args.section in ("dryrun", "both"):
+        print("\n### Dry-run raw (both meshes)\n")
+        print(dryrun_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; XLA reports
+them for the per-device SPMD module, so terms divide by *one* chip's
+peak -- the "chips x" in the denominator is already folded in by SPMD
+partitioning.  collective_bytes is parsed from the optimized HLO text:
+the sum of result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (per device, i.e. the
+bytes this chip injects into the interconnect fabric).
+
+Hardware constants: TPU v5e-class -- 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (3D ring: ~2 concurrently usable links per collective
+phase is folded into LINK_BW_EFF).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Bytes of all array shapes in an HLO result signature."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind result bytes summed over the module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["total"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # avoid double counting start/done pairs
+        b = _shape_bytes(m.group(1))
+        out[m.group(2)] += b
+        out["total"] += b
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: float            # per-device collective bytes
+    coll_breakdown: dict
+    peak_memory_bytes: float
+    model_flops: float           # 6*N*D (train) / 2*N_active*tokens (decode)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.flops / PEAK_FLOPS
+        self.memory_s = self.hbm_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / LINK_BW
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    model_bytes: float = 0.0     # analytic minimal HBM stream (see below)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * chips): remat & padding waste."""
+        return self.model_flops / max(self.flops, 1.0)
+
+    @property
+    def useful_bytes_ratio(self) -> float:
+        return self.model_bytes / max(self.hbm_bytes, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-time / bound-time.
+
+        Useful time is the larger of the two irreducible floors: the
+        model FLOPs at peak and the minimal HBM stream (weights + caches
+        + one activation pass) at full bandwidth -- decode is legitimately
+        memory-bound, so scoring it on FLOPs alone would pin every
+        serving cell at ~0."""
+        useful_s = max(self.model_flops / PEAK_FLOPS,
+                       self.model_bytes / HBM_BW)
+        return useful_s / max(self.bound_s, 1e-12)
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d.update(dominant=self.dominant,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 roofline_fraction=self.roofline_fraction,
+                 bound_s=self.bound_s)
+        return d
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int) -> float:
+    """Useful-work FLOPs for the cell, per device."""
+    toks = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                 else 1)
+    if shape.kind == "train":
+        total = 6.0 * n_active * toks
+    else:
+        total = 2.0 * n_active * toks
+    return total
+
+
+def model_bytes(cfg, shape, n_params: int, n_active: int,
+                chips: int) -> float:
+    """Analytic minimal per-device HBM stream for the cell (the memory-
+    roofline floor):
+
+      weights : active params, bf16, one read per step; each device
+                holds/streams its TP shard (1/16 of the model -- DP/pod
+                replicas stream their own copy)
+      caches  : decode reads its cache shard once; prefill writes it once
+      acts    : train/prefill stream each activation slab a handful of
+                times (fwd + remat + bwd ~ 3 passes x ~(4d+2ff_eff)
+                bytes/token/layer); decode activations are negligible
+
+    Deliberately an *envelope* (no optimizer traffic, no resharding):
+    the fraction it induces is conservative."""
+    tp = 16
+    w = 2.0 * n_active / tp
+    mesh_div = chips
+    toks_dev = shape.global_batch * shape.seq_len / mesh_div
+    L = max(cfg.num_layers, 1)
+    if cfg.moe is not None:
+        ff_eff = cfg.moe.top_k * cfg.moe.d_expert \
+            + cfg.moe.num_shared * cfg.moe.d_expert
+    else:
+        ff_eff = cfg.d_ff
+    act_per_tok_layer = 2.0 * (4 * cfg.d_model + 2 * ff_eff)
+    # cache bytes over the fleet: full-length KV for "attn" layers,
+    # window-bounded for "local", O(1) recurrent state for rwkv/mamba
+    S, B = shape.seq_len, shape.global_batch
+    cache = 0.0
+    for ls in cfg.layer_specs():
+        if ls.mixer == "attn":
+            cache += 2.0 * B * S * cfg.num_kv_heads * cfg.head_dim * 2
+        elif ls.mixer == "local":
+            cache += 2.0 * B * min(ls.window, S) \
+                * cfg.num_kv_heads * cfg.head_dim * 2
+        elif ls.mixer == "rwkv":
+            cache += 4.0 * B * cfg.rwkv_heads * cfg.rwkv_head_dim ** 2
+        elif ls.mixer == "mamba":
+            cache += 4.0 * B * cfg.d_inner * (cfg.mamba_d_state
+                                              + cfg.mamba_d_conv)
+    if cfg.cross_attention:
+        cache += 2.0 * B * S * cfg.num_kv_heads * cfg.head_dim * 2 \
+            * sum(b.repeats * len(b.layers) for b in cfg.blocks)
+    cache /= mesh_div
+    if shape.kind == "train":
+        return w + 3.0 * toks_dev * L * act_per_tok_layer
+    if shape.kind == "prefill":
+        return w + toks_dev * L * act_per_tok_layer + cache
+    # decode: weights + cache shard read once
+    return w + cache
+
+
+def extract(compiled, *, arch, shape, mesh_name, chips, cfg, shape_spec,
+            n_params, n_active) -> Roofline:
+    """Derive roofline terms from the compiled per-device SPMD module.
+
+    Uses the trip-count-aware HLO analyzer (launch/hlo_analysis.py):
+    XLA's cost_analysis() counts while bodies once, which would
+    undercount scan-over-layers programs by orders of magnitude."""
+    from repro.launch import hlo_analysis
+    txt = compiled.as_text()
+    cost = hlo_analysis.analyze(txt)
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                     + getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "output_size_in_bytes", 0)
+                     - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = 0.0
+    mf = model_flops(cfg, shape_spec, n_params, n_active) / chips
+    mb = model_bytes(cfg, shape_spec, n_params, n_active, chips)
+    coll = dict(cost.coll)
+    coll["total"] = cost.coll_bytes
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name,
+                    flops=cost.flops, hbm_bytes=cost.bytes,
+                    coll_bytes=cost.coll_bytes,
+                    coll_breakdown=coll, peak_memory_bytes=peak,
+                    model_flops=mf, model_bytes=mb).finalize()

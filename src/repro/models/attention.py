@@ -1,0 +1,257 @@
+"""Attention implementations (pure-jnp reference path).
+
+These are the implementations the dry-run lowers (the CPU backend cannot
+lower Pallas), so their FLOP/byte profile must match what the TPU Pallas
+kernels do:
+
+* ``flash_causal``  -- blockwise online-softmax attention that iterates the
+  *lower triangle only* (a 1-D scan over (i,j) block pairs with j<=i via
+  triangular indexing), so HLO FLOPs equal the exact causal cost instead
+  of the 2x full-matrix cost.  This keeps §Roofline's MODEL_FLOPS /
+  HLO_FLOPs ratio honest.
+* ``flash_windowed`` -- banded attention: each query block dynamic-slices
+  its (window + block) KV band, cost O(S*W).
+* ``flash_full``    -- non-causal (encoder / cross attention).
+* ``decode_attend`` -- one-token attention against a (possibly ring-
+  buffered) KV cache with per-request positions.
+
+All support GQA (KV heads broadcast over query-head groups) and optional
+attention-logit softcap (gemma2).  Softmax statistics are fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def _gqa_scores(q, k, softcap, scale):
+    """q: (B, Sq, KV, G, D), k: (B, Skv, KV, D) -> (B, KV, G, Sq, Skv)."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    return _softcap(s, softcap)
+
+
+def _gqa_out(p, v):
+    """p: (B, KV, G, Sq, Skv) fp32, v: (B, Skv, KV, D) -> (B,Sq,KV,G,D)."""
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32)
+
+
+def reference_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        q_offset=0, kv_len=None):
+    """O(S^2)-memory oracle used by tests and tiny smoke configs.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KV, D).  ``q_offset`` is the absolute
+    position of q[0] (for decode/prefill continuation).
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, D)
+    s = _gqa_scores(qr, k, softcap, D ** -0.5)  # (B,KV,G,Sq,Skv)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    if kv_len is not None:  # (B,) valid prefix of kv
+        mask = mask[None] & (kpos[None] < kv_len[:, None, None])
+        mask = mask[:, None, None]
+    else:
+        mask = mask[None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _gqa_out(p, v)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise flash (exact-FLOPs causal via triangular scan)
+# ---------------------------------------------------------------------------
+
+def _block_step(acc, m, l, qb, kb, vb, mask, softcap, scale):
+    """One online-softmax update.  qb:(B,Bq,KV,G,D) kb/vb:(B,Bk,KV,D)."""
+    s = _gqa_scores(qb, kb, softcap, scale)            # (B,KV,G,Bq,Bk) f32
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+        preferred_element_type=jnp.float32)
+    return acc_new, m_new, l_new
+
+
+def flash_causal(q, k, v, *, softcap=0.0, block=512):
+    """Exact-FLOPs causal flash attention.
+
+    Scans the T(T+1)/2 lower-triangular (q-block, kv-block) pairs as one
+    1-D scan; block indices are recovered with an integer triangular
+    root.  Accumulators live per q-block, so memory is O(S*D) like any
+    flash implementation.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    block = min(block, S)
+    assert S % block == 0, (S, block)
+    n = S // block
+    scale = D ** -0.5
+    qb = q.reshape(B, n, block, KV, G, D)
+    kb = k.reshape(B, n, block, KV, D)
+    vb = v.reshape(B, n, block, KV, D)
+
+    acc = jnp.zeros((n, B, KV, G, block, D), jnp.float32)
+    m = jnp.full((n, B, KV, G, block), NEG_INF, jnp.float32)
+    l = jnp.zeros((n, B, KV, G, block), jnp.float32)
+
+    tri = jnp.arange(block)[:, None] >= jnp.arange(block)[None, :]
+
+    def step(carry, t):
+        acc, m, l = carry
+        # triangular root: i = row, j = col of the t-th pair (j <= i)
+        i = ((jnp.sqrt(8.0 * t.astype(jnp.float32) + 1.0) - 1.0) / 2.0)
+        i = i.astype(jnp.int32)
+        i = jnp.where((i + 1) * (i + 2) // 2 <= t, i + 1, i)  # fix fp error
+        i = jnp.where(i * (i + 1) // 2 > t, i - 1, i)
+        j = t - i * (i + 1) // 2
+        qi = lax.dynamic_index_in_dim(qb, i, 1, keepdims=False)
+        kj = lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+        vj = lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+        mask = jnp.where(i == j, tri, True)[None, None, None]
+        a, mm, ll = (lax.dynamic_index_in_dim(x, i, 0, keepdims=False)
+                     for x in (acc, m, l))
+        a, mm, ll = _block_step(a, mm, ll, qi, kj, vj, mask, softcap, scale)
+        acc = lax.dynamic_update_index_in_dim(acc, a, i, 0)
+        m = lax.dynamic_update_index_in_dim(m, mm, i, 0)
+        l = lax.dynamic_update_index_in_dim(l, ll, i, 0)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = lax.scan(step, (acc, m, l),
+                              jnp.arange(n * (n + 1) // 2))
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    # (n,B,KV,G,block,D) -> (B, S, H, D)
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D)
+    return o.astype(q.dtype)
+
+
+def flash_windowed(q, k, v, *, window: int, softcap=0.0, block=512,
+                   q_offset=0):
+    """Banded causal attention: query block i attends the KV band
+    [i*block + off - window + 1, i*block + off + block).  Cost O(S*W)."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    block = min(block, S)
+    assert S % block == 0
+    n = S // block
+    scale = D ** -0.5
+    band = window + block          # static band length
+    Skv = k.shape[1]
+    # pad KV on the left so every band slice is in-bounds
+    pad = band
+    kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    qb = q.reshape(B, n, block, KV, G, D)
+
+    qpos_in = jnp.arange(block)
+    kpos_in = jnp.arange(band)
+
+    def step(_, i):
+        qi = lax.dynamic_index_in_dim(qb, i, 1, keepdims=False)
+        start = i * block + q_offset + block - band + pad  # band end = q end
+        kj = lax.dynamic_slice_in_dim(kp, start, band, 1)
+        vj = lax.dynamic_slice_in_dim(vp, start, band, 1)
+        # absolute positions of band entries vs queries
+        qpos = i * block + q_offset + qpos_in
+        kpos = start - pad + kpos_in
+        mask = ((kpos[None, :] <= qpos[:, None])
+                & (kpos[None, :] > qpos[:, None] - window)
+                & (kpos[None, :] >= 0))[None, None, None]
+        acc = jnp.zeros((B, KV, G, block, D), jnp.float32)
+        m = jnp.full((B, KV, G, block), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, KV, G, block), jnp.float32)
+        acc, m, l = _block_step(acc, m, l, qi, kj, vj, mask, softcap, scale)
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, o.astype(q.dtype)
+
+    _, o = lax.scan(step, None, jnp.arange(n))
+    # (n, B, KV, G, block, D) -> (B,S,H,D)
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D)
+    return o
+
+
+def flash_full(q, k, v, *, softcap=0.0, block=512, kv_len=None):
+    """Non-causal blockwise attention (encoder / cross-attention)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Skv = k.shape[1]
+    bq = min(block, Sq)
+    bk = min(block, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    nq, nk = Sq // bq, Skv // bk
+    scale = D ** -0.5
+    qb = q.reshape(B, nq, bq, KV, G, D)
+    kb = k.reshape(B, nk, bk, KV, D)
+    vb = v.reshape(B, nk, bk, KV, D)
+
+    def q_step(_, i):
+        qi = lax.dynamic_index_in_dim(qb, i, 1, keepdims=False)
+
+        def kv_step(carry, j):
+            acc, m, l = carry
+            kj = lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+            vj = lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+            if kv_len is not None:
+                kpos = j * bk + jnp.arange(bk)
+                mask = (kpos[None, :] < kv_len[:, None])[:, None, None, None]
+            else:
+                mask = jnp.ones((1, 1, 1, 1, bk), bool)
+            return _block_step(acc, m, l, qi, kj, vj, mask, softcap, scale), None
+
+        acc = jnp.zeros((B, KV, G, bq, D), jnp.float32)
+        m = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, KV, G, bq), jnp.float32)
+        (acc, m, l), _ = lax.scan(kv_step, (acc, m, l), jnp.arange(nk))
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, o.astype(q.dtype)
+
+    _, o = lax.scan(q_step, None, jnp.arange(nq))
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, D)
+    return o
+
+
+def decode_attend(q, k_cache, v_cache, abs_pos, positions, *,
+                  window=0, softcap=0.0):
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, Sc, KV, D); abs_pos: (B, Sc)
+    absolute position of each cache slot (-1 = empty); positions: (B,)
+    absolute position of the query token.
+    """
+    B, _, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qr = q.reshape(B, 1, KV, G, D)
+    s = _gqa_scores(qr, k_cache, softcap, D ** -0.5)  # (B,KV,G,1,Sc)
+    valid = (abs_pos >= 0) & (abs_pos <= positions[:, None])
+    if window:
+        valid &= abs_pos > (positions[:, None] - window)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = _gqa_out(p, v_cache)
+    return o.reshape(B, 1, H, D).astype(q.dtype)

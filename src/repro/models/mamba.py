@@ -1,0 +1,125 @@
+"""Mamba-1 selective-SSM block (the Jamba mixer).
+
+Recurrent state is O(1): a (B, d_inner, d_state) SSM state plus a
+(B, d_conv-1, d_inner) causal-conv tail -- like rwkv6 this makes the
+hybrid Jamba workspace small and cheap to migrate for most layers.
+
+Forms:
+  * ``mamba_parallel`` -- chunked scan for train/prefill.  Within a chunk
+    the linear recurrence h_t = a_t h_{t-1} + b_t is solved with a
+    cumulative-product trick in log space; chunks are scanned
+    sequentially carrying (h, conv tail).
+  * ``mamba_step``     -- O(1) decode recurrence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+
+def _ssm_inputs(p, x, cfg: ModelConfig):
+    """x: (B,T,d_inner) post-conv post-silu.  Returns dt, B_, C fp32."""
+    st = cfg.mamba_d_state
+    dt_rank = p["dt_proj"].shape[0]
+    xdbc = jnp.einsum("bti,ir->btr", x, p["x_proj"])
+    dt, B_, C = jnp.split(xdbc, [dt_rank, dt_rank + st], axis=-1)
+    dt = jnp.einsum("btr,ri->bti", dt, p["dt_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    return dt, B_.astype(jnp.float32), C.astype(jnp.float32)
+
+
+def _conv_causal(p, x, tail):
+    """Depthwise causal conv1d.  x: (B,T,di), tail: (B,dc-1,di)."""
+    dc = p["conv_w"].shape[0]
+    xt = jnp.concatenate([tail, x], axis=1)
+    out = sum(
+        xt[:, i:i + x.shape[1]] * p["conv_w"][i][None, None]
+        for i in range(dc))
+    out = out + p["conv_b"][None, None]
+    return out, xt[:, -(dc - 1):]  # new tail
+
+
+def mamba_parallel(p, x, cfg: ModelConfig, *, state=None, conv_tail=None,
+                   chunk=64, mesh=None, rules=None):
+    """x: (B,T,d).  Returns (out (B,T,d), ssm_state, conv_tail)."""
+    from repro import sharding as shd
+    B, T, d = x.shape
+    di, st = cfg.d_inner, cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+
+    def pin(a, logical):  # keep the time scan free of resharding
+        return shd.constrain(a, mesh, logical, rules) \
+            if mesh is not None else a
+
+    xz = jnp.einsum("btd,dki->btki", x, p["in_proj"])
+    xz = pin(xz, ("batch", None, None, "inner"))
+    xi, z = xz[:, :, 0], xz[:, :, 1]
+    if conv_tail is None:
+        conv_tail = jnp.zeros((B, dc - 1, di), x.dtype)
+    xi, conv_tail = _conv_causal(p, xi, conv_tail)
+    xi = jax.nn.silu(xi)
+    dt, B_, C = _ssm_inputs(p, xi, cfg)
+    dt = pin(dt, ("batch", None, "inner"))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # (di, st)
+    if state is None:
+        state = jnp.zeros((B, di, st), jnp.float32)
+    state = pin(state, ("batch", "inner", "state"))
+
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    n = T // chunk
+    xf = pin(xi.astype(jnp.float32), ("batch", None, "inner"))
+
+    def resh(a):  # (B,T,...) -> (n,B,c,...)
+        return a.reshape(B, n, chunk, *a.shape[2:]).transpose(
+            1, 0, 2, *range(3, a.ndim + 1))
+
+    # In-chunk sequential scan (exact, no log-space overflow risk; the
+    # Pallas kernel path replaces this on TPU); cross-chunk lax.scan.
+    def step_seq(h, xs):
+        dtb, Bb, Cb, xb = xs
+
+        def inner(hc, s):
+            dts, Bs, Cs, xs_ = s
+            a = jnp.exp(dts[..., None] * A[None])      # (B,di,st)
+            hc = a * hc + (dts * xs_)[..., None] * Bs[:, None, :]
+            hc = pin(hc, ("batch", "inner", "state"))
+            y = jnp.einsum("bis,bs->bi", hc, Cs)
+            return hc, y
+
+        h, y = lax.scan(inner, h,
+                        tuple(a.transpose(1, 0, *range(2, a.ndim))
+                              for a in (dtb, Bb, Cb, xb)))
+        return h, y.transpose(1, 0, 2)
+
+    xs = tuple(resh(a) for a in (dt, B_, C, xf))
+    state, y = lax.scan(step_seq, state, xs)
+    y = y.transpose(1, 0, 2, 3).reshape(B, T, di)
+    y = y + p["D"].astype(jnp.float32) * xf
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bti,id->btd", y.astype(x.dtype), p["out_proj"])
+    return out, state, conv_tail
+
+
+def mamba_step(p, x, cfg: ModelConfig, *, state, conv_tail):
+    """O(1) decode.  x: (B,1,d)."""
+    B = x.shape[0]
+    di, st = cfg.d_inner, cfg.mamba_d_state
+    xz = jnp.einsum("btd,dki->btki", x, p["in_proj"])
+    xi, z = xz[:, :, 0], xz[:, :, 1]
+    xi, conv_tail = _conv_causal(p, xi, conv_tail)
+    xi = jax.nn.silu(xi)
+    dt, B_, C = _ssm_inputs(p, xi, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :, None] * A[None])
+    state = a * state + (dt[:, 0] * xi[:, 0].astype(jnp.float32)
+                         )[..., None] * B_[:, 0, None, :]
+    y = jnp.einsum("bis,bs->bi", state, C[:, 0])
+    y = y + p["D"].astype(jnp.float32) * xi[:, 0].astype(jnp.float32)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = jnp.einsum("bi,id->bd", y.astype(x.dtype), p["out_proj"])
+    return out[:, None], state, conv_tail

@@ -1,0 +1,187 @@
+"""Top-level model: embedding, scanned block groups, heads, cache trees.
+
+The model is ``repeat(block)`` groups (configs.base.BlockDef); parameters
+and caches carry a leading ``repeats`` dim per group and are consumed by
+``lax.scan`` so HLO size is O(block), not O(num_layers).  One `forward`
+serves all three modes:
+
+  train   : full sequence, no cache, returns logits + aux losses
+  prefill : full sequence, writes caches (the agent-workspace KV state)
+  decode  : one token per request against the caches
+
+Encoder-decoder (whisper) runs the encoder inside prefill/train; VLM
+(internvl2) prepends projected stub patch embeddings.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro import sharding as shd
+from repro.models.layers import layer_apply, make_layer_cache, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+_CACHE_LOGICAL = {
+    "k": ("batch", "cache_seq", "kv_heads", "kv_dim"),
+    "v": ("batch", "cache_seq", "kv_heads", "kv_dim"),
+    "abs_pos": ("batch", "cache_seq"),
+    "state": ("batch", "heads", None, None),
+    "x_tm": ("batch", "embed"),
+    "x_cm": ("batch", "embed"),
+    "ssm": ("batch", "inner", "state"),
+    "conv": ("batch", None, "inner"),
+}
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               cross_len: int = 0):
+    """Full model cache: [group][layer_in_block] stacked over repeats."""
+    groups = []
+    for block in cfg.blocks:
+        layers = []
+        for ls in block.layers:
+            one = make_layer_cache(cfg, ls, batch, max_len,
+                                   cross=cfg.cross_attention,
+                                   cross_len=cross_len)
+            layers.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (block.repeats,) + a.shape).copy(), one))
+        groups.append(layers)
+    return groups
+
+
+def cache_specs(cache, mesh, rules=None):
+    """PartitionSpecs for a cache pytree, keyed by leaf dict name."""
+    flat, treedef = jax.tree.flatten_with_path(cache)
+    specs = []
+    for path, leaf in flat:
+        name = None
+        for k in reversed(path):
+            if isinstance(k, jax.tree_util.DictKey):
+                name = str(k.key)
+                break
+        logical = _CACHE_LOGICAL.get(name, ())
+        logical = ("stack",) + logical if len(logical) + 1 == leaf.ndim \
+            else logical[:leaf.ndim]
+        if len(logical) != leaf.ndim:
+            logical = tuple([None] * leaf.ndim)
+        specs.append(shd.resolve(logical, mesh, leaf.shape, rules))
+    return jax.tree.unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# block-group scan
+# ---------------------------------------------------------------------------
+
+def _run_groups(params_blocks, x, *, cfg: ModelConfig, blocks, mode,
+                positions, caches, mesh, rules, enc_out, causal,
+                remat=True):
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for gi, block in enumerate(blocks):
+        p_group = params_blocks[gi]
+        c_group = caches[gi] if caches is not None else None
+
+        def body(x, xs, _block=block):
+            p_r, c_r = xs
+            ncs, aux = [], jnp.zeros((), jnp.float32)
+            for li, lspec in enumerate(_block.layers):
+                x, nc, a = layer_apply(
+                    p_r[li], x, cfg=cfg, lspec=lspec, mode=mode,
+                    positions=positions,
+                    cache=c_r[li] if c_r is not None else None,
+                    mesh=mesh, rules=rules, enc_out=enc_out, causal=causal)
+                ncs.append(nc)
+                aux = aux + a
+            return x, (ncs, aux)
+
+        if mode == "train" and remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, (ncg, auxes) = lax.scan(body, x, (p_group, c_group))
+        aux_total = aux_total + auxes.sum()
+        new_caches.append(ncg)
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    return params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("btd,dv->btv", x, head)
+
+
+def forward(params, batch, *, cfg: ModelConfig, mode: str,
+            positions=None, caches=None, mesh=None, rules=None,
+            remat=True):
+    """Returns (logits, new_caches, aux_loss).
+
+    batch: {"tokens": (B, S_t)} plus optional
+           "patch_embeds": (B, P, 1024)   (vlm stub frontend)
+           "frames": (B, S_f, d_model)    (audio stub frontend)
+    """
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+
+    enc_out = batch.get("enc_out")  # precomputed at prefill for decode
+    if cfg.encoder_blocks and mode != "decode" and enc_out is None:
+        frames = batch["frames"].astype(jnp.dtype(cfg.dtype))
+        fpos = jnp.broadcast_to(jnp.arange(frames.shape[1])[None],
+                                frames.shape[:2])
+        enc_p = params["encoder"]
+        enc_out, _, _ = _run_groups(
+            enc_p["blocks"], frames, cfg=cfg, blocks=cfg.encoder_blocks,
+            mode="train", positions=fpos, caches=None, mesh=mesh,
+            rules=rules, enc_out=None, causal=False, remat=remat)
+        enc_out = rmsnorm(enc_out, enc_p["final_norm"]["scale"],
+                          cfg.norm_eps)
+
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.num_patches and mode != "decode":
+        pe = jnp.einsum("bpk,kd->bpd",
+                        batch["patch_embeds"].astype(jnp.dtype(cfg.dtype)),
+                        params["patch_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+    if mesh is not None:
+        x = shd.constrain(x, mesh, ("batch", None, "embed"), rules)
+
+    S = x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    x, new_caches, aux = _run_groups(
+        params["blocks"], x, cfg=cfg, blocks=cfg.blocks, mode=mode,
+        positions=positions, caches=caches, mesh=mesh, rules=rules,
+        enc_out=enc_out, causal=True, remat=remat)
+
+    x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = lm_logits(params, x, cfg)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    if mesh is not None:
+        logits = shd.constrain(logits, mesh, ("batch", None, "vocab"),
+                               rules)
+    return logits, (new_caches if mode != "train" else None), aux
+
+
+def vocab_mask_logits(logits, cfg: ModelConfig):
+    """-inf on padded vocab entries (sampling / eval)."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    mask = jnp.arange(logits.shape[-1]) < cfg.vocab_size
+    return jnp.where(mask, logits, -1e30)

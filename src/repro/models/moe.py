@@ -1,0 +1,268 @@
+"""Mixture-of-Experts FFN: dense oracle + expert-parallel production path.
+
+Production path (``moe_ep``) is a shard_map over the mesh:
+  * tokens are row-sharded over every available mesh axis;
+  * routing is computed locally; tokens are packed into per-expert
+    capacity-bounded send buffers (sort-based dispatch, no (T,E,C)
+    one-hot tensors -- those are infeasible at fine-grained-MoE scale);
+  * an all_to_all over the "model" (expert-parallel) axis moves token
+    groups to their expert owners and back;
+  * when the token count does not divide the full mesh (small decode
+    batches) the dispatch degrades to *replicated-EP*: every model-axis
+    column computes only its local experts' tokens and the combine is a
+    psum -- the standard small-batch decode EP schedule.
+
+The dense oracle (``moe_dense``) runs every token through every expert,
+mask-weighted; smoke tests + property tests assert ep == dense (up to
+capacity drops, which are disabled for the comparison).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoESpec
+from repro import sharding as shd
+
+
+def _router(p, x, moe: MoESpec):
+    """x: (T, d) -> (weights (T,k), ids (T,k), probs (T,E))."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = lax.top_k(probs, moe.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)  # renormalize
+    return w, ids, probs
+
+
+def _expert_ffn(wg, wu, wd, h):
+    """h: (..., d); expert weights (..., d, dx)/(..., dx, d)."""
+    g = jnp.einsum("...td,...df->...tf", h, wg)
+    u = jnp.einsum("...td,...df->...tf", h, wu)
+    return jnp.einsum("...tf,...fd->...td", jax.nn.silu(g) * u, wd)
+
+
+def _aux_loss(probs, ids, moe: MoESpec):
+    """Switch-style load-balancing loss (computed on local shard)."""
+    E = moe.num_experts
+    assign = jax.nn.one_hot(ids, E, dtype=jnp.float32).sum(1)  # (T,E)
+    frac_tokens = assign.mean(0)
+    frac_probs = probs.mean(0)
+    return E * jnp.sum(frac_tokens * frac_probs)
+
+
+def shared_expert_ffn(p, x):
+    """Dense shared-experts MLP (TP-sharded like a normal FFN)."""
+    g = jnp.einsum("btd,df->btf", x, p["w_gate"])
+    u = jnp.einsum("btd,df->btf", x, p["w_up"])
+    return jnp.einsum("btf,fd->btd", jax.nn.silu(g) * u, p["w_down"])
+
+
+def moe_dense(p, x, cfg: ModelConfig):
+    """Oracle: all experts on all tokens, combine by routing weights.
+
+    x: (B,S,d).  Returns (out, aux_loss)."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    w, ids, probs = _router(p, xt, moe)
+    E = moe.num_experts
+    # gates (T, E)
+    gates = jnp.zeros((B * S, E), jnp.float32)
+    gates = gates.at[jnp.arange(B * S)[:, None], ids].set(w)
+    h = _expert_ffn(p["w_gate"], p["w_up"], p["w_down"],
+                    xt[None].repeat(E, 0))          # (E, T, d)
+    out = jnp.einsum("te,etd->td", gates.astype(x.dtype), h)
+    if moe.num_shared:
+        out = out + shared_expert_ffn(p["shared"], x).reshape(B * S, d)
+    return out.reshape(B, S, d), _aux_loss(probs, ids, moe)
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel path
+# ---------------------------------------------------------------------------
+
+def _pack(xt, w, ids, E, C):
+    """Sort-based capacity-bounded packing.
+
+    Returns send (E, C, d), and (slot, keep, src, wsort) to invert."""
+    T, d = xt.shape
+    k = ids.shape[1]
+    flat_ids = ids.reshape(-1)                      # (T*k,)
+    src = jnp.repeat(jnp.arange(T), k)
+    wflat = w.reshape(-1)
+    order = jnp.argsort(flat_ids, stable=True)
+    sids = flat_ids[order]
+    ssrc = src[order]
+    sw = wflat[order]
+    counts = jnp.bincount(sids, length=E)
+    offs = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - offs[sids]
+    keep = pos < C
+    slot = sids * C + jnp.where(keep, pos, 0)
+    send = jnp.zeros((E * C, d), xt.dtype)
+    send = send.at[jnp.where(keep, slot, E * C)].set(
+        xt[ssrc], mode="drop")
+    return send.reshape(E, C, d), (slot, keep, ssrc, sw)
+
+
+def _unpack(back, inv, T):
+    """back: (E*C, d) expert outputs; scatter-add weighted to (T, d)."""
+    slot, keep, ssrc, sw = inv
+    vals = back[slot] * sw[:, None].astype(back.dtype)
+    out = jnp.zeros((T, back.shape[-1]), back.dtype)
+    return out.at[jnp.where(keep, ssrc, T)].add(vals, mode="drop")
+
+
+def _capacity(tokens: int, moe: MoESpec, scale: float = 1.0) -> int:
+    c = int(tokens * moe.top_k * moe.capacity_factor * scale
+            / moe.num_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_ep(p, x, cfg: ModelConfig, mesh: Mesh, rules=None):
+    """Expert-parallel MoE.  x: (B,S,d).  Returns (out, aux_loss)."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E = moe.num_experts
+    ep_ax = "model"
+    P_ep = mesh.shape[ep_ax]
+    if E % P_ep != 0:
+        # experts don't divide the EP axis: fall back to dense oracle
+        out, aux = moe_dense(p, x, cfg)
+        return out, aux
+    E_loc = E // P_ep
+    token_axes = tuple(a for a in ("pod", "data", ep_ax) if a in mesh.shape)
+    bdiv = 1
+    for a in token_axes:
+        if a != ep_ax:
+            bdiv *= mesh.shape[a]
+    a2a_mode = (B % bdiv == 0 and B >= bdiv
+                and S % P_ep == 0 and S >= P_ep)
+    if a2a_mode:
+        return _moe_ep_a2a(p, x, cfg, mesh, token_axes, E_loc, ep_ax)
+    return _moe_ep_replicated(p, x, cfg, mesh, E_loc, ep_ax)
+
+
+def _expert_w_specs(mesh):
+    pe = P("model")
+    return {"router": P(), "w_gate": pe, "w_up": pe, "w_down": pe}
+
+
+def _moe_ep_a2a(p, x, cfg, mesh, token_axes, E_loc, ep_ax):
+    """Full sort+all_to_all dispatch (train / prefill / big decode).
+
+    Layout discipline: the block enters as (B_loc, S, d) -- batch over
+    ("pod","data"), replicated over "model" (the attention layout).  The
+    sequence is sliced per model-column INSIDE shard_map (a local slice,
+    no comm), routed/a2a'd over "model", and only the d_model-sized
+    output is all-gathered back.  Reshaping the token dim at the
+    shard_map boundary instead makes GSPMD replicate full global
+    activation slabs (measured 11.5 GB all-gathers per MoE layer on
+    deepseek-moe train_4k -- EXPERIMENTS.md §Perf iteration 2)."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    P_ep = mesh.shape[ep_ax]
+    batch_axes = tuple(a for a in token_axes if a != ep_ax)
+    bdiv = 1
+    for a in batch_axes:
+        bdiv *= mesh.shape[a]
+    B_loc = B // bdiv
+    S_loc = S // P_ep
+    t_loc = B_loc * S_loc
+    C = _capacity(t_loc, moe)
+    E = moe.num_experts
+
+    def body(xb, router, wg, wu, wd):
+        # xb: (B_loc, S, d) same on every model column
+        ax = lax.axis_index(ep_ax)
+        xs = lax.dynamic_slice_in_dim(xb, ax * S_loc, S_loc, 1)
+        xt = xs.reshape(t_loc, d)
+        w, ids, probs = _router({"router": router}, xt, moe)
+        send, inv = _pack(xt, w, ids, E, C)               # (E, C, d)
+        send = send.reshape(P_ep, E_loc, C, d)
+        recv = lax.all_to_all(send, ep_ax, split_axis=0, concat_axis=0,
+                              tiled=False)                 # (P, E_loc, C, d)
+        h = recv.transpose(1, 0, 2, 3).reshape(E_loc, P_ep * C, d)
+        h = _expert_ffn(wg, wu, wd, h)                     # (E_loc, P*C, d)
+        h = h.reshape(E_loc, P_ep, C, d).transpose(1, 0, 2, 3)
+        back = lax.all_to_all(h, ep_ax, split_axis=0, concat_axis=0,
+                              tiled=False)                 # (P, E_loc, C, d)
+        out = _unpack(back.reshape(E * C, d), inv, t_loc)
+        out = out.reshape(B_loc, S_loc, d)
+        full = lax.all_gather(out, ep_ax, axis=1, tiled=True)
+        aux = _aux_loss(probs, ids, moe)
+        aux = lax.pmean(aux, token_axes)
+        return full, aux
+
+    in_specs = (P(batch_axes if batch_axes else None, None, None), P(),
+                P(ep_ax), P(ep_ax), P(ep_ax))
+    out_specs = (P(batch_axes if batch_axes else None, None, None), P())
+    out, aux = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(x, p["router"], p["w_gate"], p["w_up"],
+                         p["w_down"])
+    if moe.num_shared:
+        out = out + shared_expert_ffn(p["shared"], x)
+    return out, aux
+
+
+def _moe_ep_replicated(p, x, cfg, mesh, E_loc, ep_ax):
+    """Small-batch decode: tokens replicated over the EP axis, each
+    column computes its local experts, combine via psum."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E = moe.num_experts
+    P_ep = mesh.shape[ep_ax]
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape
+                       and T % mesh.shape[a] == 0)
+    t_loc = T
+    for a in batch_axes:
+        t_loc //= mesh.shape[a]
+    # generous capacity: routing is uneven at tiny token counts
+    C = _capacity(t_loc, moe, scale=4.0)
+
+    def body(xt, router, wg, wu, wd):
+        w, ids, probs = _router({"router": router}, xt, moe)
+        send, inv = _pack(xt, w, ids, E, C)                # (E, C, d)
+        ax = lax.axis_index(ep_ax)
+        mine = lax.dynamic_slice_in_dim(send, ax * E_loc, E_loc, 0)
+        h = _expert_ffn(wg, wu, wd, mine)                  # (E_loc, C, d)
+        # place local results back into the full (E, C, d) frame
+        buf = jnp.zeros_like(send)
+        buf = lax.dynamic_update_slice_in_dim(buf, h.astype(send.dtype),
+                                              ax * E_loc, 0)
+        buf = lax.psum(buf, ep_ax)
+        out = _unpack(buf.reshape(E * C, d), inv, xt.shape[0])
+        aux = _aux_loss(probs, ids, moe)
+        if batch_axes:
+            aux = lax.pmean(aux, batch_axes)
+        return out, aux
+
+    xt = x.reshape(T, d)
+    in_specs = (P(batch_axes if batch_axes else None), P(),
+                P(ep_ax), P(ep_ax), P(ep_ax))
+    out_specs = (P(batch_axes if batch_axes else None), P())
+    out, aux = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)(xt, p["router"], p["w_gate"], p["w_up"],
+                         p["w_down"])
+    out = out.reshape(B, S, d)
+    if moe.num_shared:
+        out = out + shared_expert_ffn(p["shared"], x)
+    return out, aux
+
+
+def moe_apply(p, x, cfg: ModelConfig, mesh: Mesh | None = None):
+    """Dispatch: EP on a real mesh, dense oracle otherwise."""
+    if mesh is None or mesh.empty or "model" not in mesh.shape \
+            or mesh.devices.size == 1:
+        return moe_dense(p, x, cfg)
+    return moe_ep(p, x, cfg, mesh)

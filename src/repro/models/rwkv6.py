@@ -1,0 +1,175 @@
+"""RWKV-6 "Finch" time-mix (data-dependent decay) + channel-mix.
+
+State per layer is O(1) in sequence length: a (H, Dk, Dv) matrix state
+plus the previous token's activations for the token-shift lerps -- this
+is what makes rwkv6 the ideal `long_500k` citizen and the smallest
+possible migratable workspace.
+
+Two execution forms, exact-match by construction (tested):
+  * ``timemix_parallel``  -- chunked linear-attention form for train /
+    prefill: O(T * (Dh^2 + T_c * Dh)) per head, scan over chunks.
+  * ``timemix_step``      -- O(1) recurrence for decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g).
+
+    x: (B,T,d); x_prev: (B,T,d) = x shifted right by one token.
+    Returns (5, B, T, d)."""
+    sx = x_prev - x
+    xxx = x + sx * p["mix_first"].astype(x.dtype)
+    # low-rank data-dependent offsets: (B,T,5*L) -> (5,B,T,d)
+    a = jnp.tanh(jnp.einsum("btd,dl->btl", xxx, p["mix_lora_A"]))
+    L = p["mix_lora_B"].shape[1]
+    a = a.reshape(*a.shape[:-1], 5, L)
+    off = jnp.einsum("btml,mld->mbtd", a, p["mix_lora_B"])
+    mix = p["mix_base"].astype(x.dtype)[:, None, None] + off
+    return x[None] + sx[None] * mix
+
+
+def _projections(p, x, x_prev, cfg: ModelConfig):
+    """Compute per-token r,k,v,g,w(decay).  Shapes (B,T,H,Dh)."""
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+    r = jnp.einsum("btd,dhk->bthk", xr, p["wr"])
+    k = jnp.einsum("btd,dhk->bthk", xk, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", xv, p["wv"])
+    g = jnp.einsum("btd,dhk->bthk", xg, p["wg"])
+    # data-dependent decay (fp32): w = exp(-exp(base + lora(xw))).
+    # ww is clipped at +1.5 (per-step decay floor exp(-4.48) ~ 0.011):
+    # the chunked backward differentiates k / cumprod(w), so the
+    # in-chunk cumulative decay must stay above ~1e-16 for 1/A^2 to fit
+    # fp32 -- chunk=8 x logw>=-4.48 guarantees cum >= -35.8 (see
+    # timemix_parallel).  Full forgetting still takes only ~4 steps.
+    dw = jnp.einsum("btd,dl->btl", xw, p["decay_lora_A"])
+    dw = jnp.einsum("btl,lhk->bthk", jnp.tanh(dw), p["decay_lora_B"])
+    ww = p["decay_base"].astype(jnp.float32) + dw.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(jnp.clip(ww, -20.0, 1.5)))  # in (0,1)
+    return r, k, v, g, w
+
+
+def _groupnorm_heads(y, scale, eps=64e-5):
+    """Per-head layernorm of (B,T,H,Dh) (the ln_x of RWKV)."""
+    y = y.astype(jnp.float32)
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    return (y - mu) * jax.lax.rsqrt(var + eps) * scale
+
+
+def timemix_parallel(p, x, cfg: ModelConfig, *, state=None, x_last=None,
+                     chunk=8, mesh=None, rules=None):
+    """Chunked-parallel RWKV6 time mix.
+
+    state: (B,H,Dk,Dv) carried matrix state (None = zeros);
+    x_last: (B,d) final token of the previous segment (token shift).
+    Returns (out (B,T,d), new_state, new_x_last).
+    """
+    from repro import sharding as shd
+    B, T, d = x.shape
+    H, Dh = cfg.rwkv_heads, cfg.rwkv_head_dim
+
+    def pin(a, logical):
+        return shd.constrain(a, mesh, logical, rules) \
+            if mesh is not None else a
+
+    x_prev = jnp.concatenate(
+        [jnp.zeros_like(x[:, :1]) if x_last is None else x_last[:, None],
+         x[:, :-1]], axis=1)
+    r, k, v, g, w = _projections(p, x, x_prev, cfg)
+    r, k, v, g, w = (pin(a, ("batch", None, "heads", None))
+                     for a in (r, k, v, g, w))
+    u = p["bonus"].astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+    state = pin(state, ("batch", "heads", None, None))
+
+    chunk = min(chunk, T)
+    if T % chunk:
+        # split off the ragged tail and process it as its own chunk
+        cut = (T // chunk) * chunk
+        out1, state, xl1 = timemix_parallel(
+            p, x[:, :cut], cfg, state=state, x_last=x_last, chunk=chunk,
+            mesh=mesh, rules=rules)
+        out2, state, xl2 = timemix_parallel(
+            p, x[:, cut:], cfg, state=state, x_last=xl1, chunk=T - cut,
+            mesh=mesh, rules=rules)
+        return jnp.concatenate([out1, out2], axis=1), state, xl2
+    n = T // chunk
+    # (B, n, c, H, Dh) fp32 for the recurrence math
+    rc, kc, vc, wc = (a.astype(jnp.float32).reshape(B, n, chunk, H, Dh)
+                      for a in (r, k, v, w))
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool), -1)  # strictly lower
+
+    def step(S, xs):
+        rb, kb, vb, wb = xs          # (B, c, H, Dh)
+        # cumulative decay: A[t] = prod_{s<t} w[s]  (exclusive)
+        logw = jnp.log(wb)
+        cum = jnp.cumsum(logw, axis=1)
+        A_excl = jnp.exp(cum - logw)          # prod_{s<=t-1}
+        A_incl = jnp.exp(cum)                 # prod_{s<=t}
+        A_end = A_incl[:, -1]                 # (B,H,Dh)
+        # inter-chunk: y_t += (r_t * A_excl_t) @ S
+        rA = rb * A_excl
+        y = jnp.einsum("bthk,bhkv->bthv", rA, S)
+        # intra-chunk: att[t,s] = sum_k r_t[k] A_excl_t[k]/A_incl_s[k] k_s[k]
+        # causality guarantees A_excl_t <= A_incl_s for s < t, so the
+        # ratio is <= 1; clamp the divisor so extreme decays underflowing
+        # fp32 produce 0-contribution instead of inf/nan.
+        kA = kb / jnp.maximum(A_incl, 1e-24)
+        att = jnp.einsum("bthk,bshk->bhts", rA, kA)
+        att = jnp.where(causal[None, None], att, 0.0)
+        y += jnp.einsum("bhts,bshv->bthv", att, vb)
+        # bonus (current token): r_t . (u * k_t) v_t
+        y += jnp.einsum("bthk,bthk->bth", rb, u * kb)[..., None] * vb
+        # state update: S' = diag(A_end) S + sum_s (k_s A_end/A_incl_s) v_s
+        S_new = A_end[..., None] * S + jnp.einsum(
+            "bshk,bshv->bhkv", kA * A_end[:, None], vb)
+        return S_new, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3, 4) for a in (rc, kc, vc, wc))
+    state, y = lax.scan(step, state, xs)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(B, T, H, Dh)
+    y = _groupnorm_heads(y, p["ln_x"]) * jax.nn.silu(
+        g.astype(jnp.float32))
+    out = jnp.einsum("bthk,hkd->btd", y.astype(x.dtype), p["wo"])
+    return out, state, x[:, -1]
+
+
+def timemix_step(p, x, cfg: ModelConfig, *, state, x_last):
+    """O(1) decode step.  x: (B,1,d)."""
+    B = x.shape[0]
+    x_prev = x_last[:, None]
+    r, k, v, g, w = _projections(p, x, x_prev, cfg)
+    r, k, v, w = (a[:, 0].astype(jnp.float32) for a in (r, k, v, w))
+    g = g[:, 0]
+    u = p["bonus"].astype(jnp.float32)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u[..., None] * kv)
+    state = w[..., None] * state + kv
+    y = _groupnorm_heads(y[:, None], p["ln_x"]) * jax.nn.silu(
+        g.astype(jnp.float32))[:, None]
+    out = jnp.einsum("bthk,hkd->btd", y.astype(x.dtype), p["wo"])
+    return out, state, x[:, 0]
+
+
+def channelmix(p, x, *, x_last=None):
+    """RWKV6 channel mix.  Returns (out, new_x_last)."""
+    x_prev = jnp.concatenate(
+        [jnp.zeros_like(x[:, :1]) if x_last is None else x_last[:, None],
+         x[:, :-1]], axis=1)
+    sx = x_prev - x
+    xk = x + sx * p["mix_k"].astype(x.dtype)
+    xr = x + sx * p["mix_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])
+    return out, x[:, -1]

@@ -1,0 +1,217 @@
+"""Serving engine: slot-based continuous batching over jitted
+prefill/decode steps.
+
+The engine owns a fixed number of request *slots* (the batch dimension
+of the decode step).  Requests attach to free slots, prefill fills the
+slot's cache region, and every ``step()`` advances all active slots one
+token.  All device state lives in one ``EngineState`` pytree -- which is
+exactly the *agent workspace* the MVVM layer snapshots, attests,
+migrates and replicates (core/workspace.py wraps it).
+
+Stable points (paper §7.3): the boundary between two ``step()`` calls is
+the WASM "checkpoint ip" analogue -- every piece of cross-step state is
+explicit in ``EngineState``, so a snapshot taken between steps restores
+bit-identically anywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward, make_cache
+from repro.serving.sampling import sample
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class EngineState:
+    """Everything the decode loop carries across steps (the workspace)."""
+    caches: list                     # model KV / ssm state
+    tokens: jax.Array                # (B, max_len) generated+prompt tokens
+    positions: jax.Array             # (B,) next position to write
+    last_token: jax.Array            # (B,) most recent token per slot
+    active: jax.Array                # (B,) bool slot in use
+    rng: jax.Array                   # (B,) per-slot sampling keys
+    step_count: jax.Array            # () total decode steps executed
+
+
+@dataclass
+class Request:
+    rid: str
+    prompt: np.ndarray
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    top_k: int = 0
+    sensitivity: str = "public"      # public | personal | confidential
+    done: bool = False
+    output: list = field(default_factory=list)
+    slot: int = -1
+
+
+class Engine:
+    """Single-replica serving engine for one model on one mesh."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256, mesh=None, rules=None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.mesh = mesh
+        self.rules = rules
+        self.requests: dict[int, Request] = {}
+        self.state = self._fresh_state(seed)
+        self._decode_fn = jax.jit(partial(_decode_step, cfg=cfg, mesh=mesh,
+                                          rules=rules))
+        self._prefill_fn = jax.jit(partial(_prefill, cfg=cfg, mesh=mesh,
+                                           rules=rules),
+                                   static_argnames=("slot", "plen"))
+
+    # -- state ------------------------------------------------------------
+    def _fresh_state(self, seed: int) -> EngineState:
+        B = self.slots
+        return EngineState(
+            caches=make_cache(self.cfg, B, self.max_len),
+            tokens=jnp.zeros((B, self.max_len), jnp.int32),
+            positions=jnp.zeros((B,), jnp.int32),
+            last_token=jnp.zeros((B,), jnp.int32),
+            active=jnp.zeros((B,), bool),
+            rng=jax.vmap(jax.random.key)(jnp.arange(seed, seed + B,
+                                                    dtype=jnp.uint32)),
+            step_count=jnp.zeros((), jnp.int32),
+        )
+
+    # -- request lifecycle --------------------------------------------------
+    def add_request(self, req: Request) -> bool:
+        free = [i for i in range(self.slots)
+                if i not in self.requests]
+        if not free:
+            return False
+        slot = free[0]
+        req.slot = slot
+        self.requests[slot] = req
+        plen = len(req.prompt)
+        assert plen + req.max_new_tokens <= self.max_len
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        self.state = self._prefill_fn(self.params, self.state, prompt,
+                                      slot=slot, plen=plen)
+        return True
+
+    def step(self) -> dict[str, int]:
+        """One batched decode step; returns {rid: token} emitted."""
+        if not self.requests:
+            return {}
+        self.state, toks = self._decode_fn(self.params, self.state)
+        toks = np.asarray(toks)
+        emitted = {}
+        for slot, req in list(self.requests.items()):
+            if req.done:
+                continue
+            t = int(toks[slot])
+            req.output.append(t)
+            emitted[req.rid] = t
+            if len(req.output) >= req.max_new_tokens:
+                req.done = True
+                self.retire(slot)
+        return emitted
+
+    def retire(self, slot: int):
+        self.requests.pop(slot, None)
+        self.state = _deactivate(self.state, slot)
+
+    def run(self, reqs: list[Request]) -> dict[str, list[int]]:
+        """Convenience: serve a request list to completion."""
+        pending = list(reqs)
+        outputs = {}
+        while pending or self.requests:
+            while pending and self.add_request(pending[0]):
+                outputs[pending[0].rid] = pending[0].output
+                pending.pop(0)
+            if self.requests:
+                self.step()
+        return outputs
+
+
+# ---------------------------------------------------------------------------
+# jitted step functions
+# ---------------------------------------------------------------------------
+
+def _prefill(params, state: EngineState, prompt, *, slot: int, plen: int,
+             cfg, mesh, rules):
+    """Prefill one slot.  The model runs with batch=1 on the slot's cache
+    rows; results are scattered back into the engine state."""
+    sub_caches = jax.tree.map(lambda a: a[:, slot:slot + 1], state.caches)
+    logits, sub_caches, _ = forward(
+        params, {"tokens": prompt}, cfg=cfg, mode="prefill",
+        caches=sub_caches, mesh=mesh, rules=rules)
+    caches = jax.tree.map(
+        lambda full, sub: jax.lax.dynamic_update_index_in_dim(
+            full, sub[:, 0], slot, 1),
+        state.caches, sub_caches)
+    tokens = jax.lax.dynamic_update_slice(
+        state.tokens, prompt, (jnp.int32(slot), jnp.int32(0)))
+    return dataclasses.replace(
+        state,
+        caches=caches,
+        tokens=tokens,
+        positions=state.positions.at[slot].set(plen),
+        last_token=state.last_token.at[slot].set(prompt[0, -1]),
+        active=state.active.at[slot].set(True),
+    )
+
+
+def _decode_step(params, state: EngineState, *, cfg, mesh, rules,
+                 temperature=0.0, top_k=0):
+    """One decode step for every active slot (inactive slots compute but
+    their state is masked out -- the static-shape batching standard)."""
+    B = state.last_token.shape[0]
+    pos = state.positions[:, None]
+    logits, caches, _ = forward(
+        params, {"tokens": state.last_token[:, None]}, cfg=cfg,
+        mode="decode", caches=state.caches, positions=pos,
+        mesh=mesh, rules=rules)
+    toks, rng = sample(logits[:, 0], state.rng, cfg,
+                       temperature=temperature, top_k=top_k)
+    toks = jnp.where(state.active, toks, 0)
+    # only active slots advance
+    caches = jax.tree.map(
+        lambda new, old: jnp.where(
+            _bcast(state.active, new.ndim, new.shape), new, old),
+        caches, state.caches)
+    tokens = jax.vmap(
+        lambda row, t, p: jax.lax.dynamic_update_index_in_dim(row, t, p, 0)
+    )(state.tokens, toks, state.positions)
+    return dataclasses.replace(
+        state,
+        caches=caches,
+        tokens=jnp.where(state.active[:, None], tokens, state.tokens),
+        positions=jnp.where(state.active, state.positions + 1,
+                            state.positions),
+        last_token=jnp.where(state.active, toks, state.last_token),
+        rng=rng,
+        step_count=state.step_count + 1,
+    ), toks
+
+
+def _bcast(active, ndim, shape):
+    """Broadcast (B,) active mask against a cache leaf.
+
+    Cache leaves are stacked (R, B, ...): the batch dim is axis 1; plain
+    per-layer leaves have batch at axis 0."""
+    if ndim >= 2 and shape[0] != active.shape[0]:
+        mask = active[None, :]
+        return mask.reshape((1, -1) + (1,) * (ndim - 2))
+    return active.reshape((-1,) + (1,) * (ndim - 1))
+
+
+def _deactivate(state: EngineState, slot: int) -> EngineState:
+    return dataclasses.replace(state,
+                               active=state.active.at[slot].set(False))

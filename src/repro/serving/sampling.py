@@ -1,0 +1,38 @@
+"""Sampling: greedy / temperature / top-k with per-request RNG keys.
+
+RNG keys live in the agent workspace so that a migrated agent resumes
+with bit-identical sampling behaviour (paper §3.3: "the migration
+process preserves exact computational state")."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import vocab_mask_logits
+
+
+def sample(logits, rng, cfg: ModelConfig, *, temperature=0.0, top_k=0):
+    """logits: (B, V_pad); rng: (B,) key array.  Returns (tokens (B,), rng')."""
+    logits = vocab_mask_logits(logits, cfg).astype(jnp.float32)
+    if temperature == 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32), rng
+
+    def one(lg, key):
+        k1, k2 = jax.random.split(key)
+        l = lg / temperature
+        if top_k:
+            kth = jax.lax.top_k(l, top_k)[0][..., -1]
+            l = jnp.where(l < kth, -1e30, l)
+        return jax.random.categorical(k1, l).astype(jnp.int32), k2
+
+    toks, rng = jax.vmap(one)(logits, rng)
+    return toks, rng
+
+
+def token_logprobs(logits, tokens, cfg: ModelConfig):
+    """Log-prob of given tokens under (masked) logits.  (B,V),(B,)->(B,)."""
+    logits = vocab_mask_logits(logits, cfg).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, -1)
+    return jnp.take_along_axis(logp, tokens[:, None], -1)[:, 0]

@@ -1,0 +1,113 @@
+"""Training substrate: mixed-precision train_step with microbatch
+gradient accumulation, remat, optional cross-pod gradient compression,
+and the pjit-ready loss.
+
+``train_step`` is what the `train_4k` dry-run cells lower on the
+production meshes.  Parallelism: params TP-sharded on "model" (per the
+schema's logical axes), replicated over "data"/"pod"; batch sharded over
+("pod","data"); the gradient all-reduce over data/pod is inserted by
+GSPMD from the output sharding of the grads (same spec as params).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compression import compressed_psum, init_residuals
+from repro import sharding as shd
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatches: int = 1            # gradient-accumulation steps
+    z_loss: float = 1e-4
+    aux_loss_weight: float = 0.01
+    remat: bool = True
+    compress_pod_grads: bool = False  # int8 error-feedback across "pod"
+
+
+def loss_fn(params, batch, cfg: ModelConfig, tcfg: TrainConfig,
+            mesh=None, rules=None):
+    """Next-token CE (+z-loss, +MoE aux).  Returns (loss, metrics)."""
+    logits, _, aux = forward(params, batch, cfg=cfg, mode="train",
+                             mesh=mesh, rules=rules, remat=tcfg.remat)
+    tokens = batch["tokens"]
+    # align: logits predicting tokens[t+1]; VLM prepends patches
+    off = cfg.num_patches if cfg.num_patches else 0
+    lg = logits[:, off:off + tokens.shape[1] - 1]
+    tgt = tokens[:, 1:]
+    lg = lg.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, -1)
+    true_logit = jnp.take_along_axis(lg, tgt[..., None], -1)[..., 0]
+    ce = (lse - true_logit).mean()
+    zl = tcfg.z_loss * jnp.square(lse).mean()
+    loss = ce + zl + tcfg.aux_loss_weight * aux
+    return loss, {"ce": ce, "z_loss": zl, "aux": aux}
+
+
+def grads_fn(params, batch, cfg, tcfg, mesh=None, rules=None):
+    """Microbatched grad accumulation (scan over microbatch splits)."""
+    if tcfg.microbatches == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg, tcfg, mesh, rules)
+        return grads, loss, metrics
+
+    m = tcfg.microbatches
+    split = jax.tree.map(
+        lambda a: a.reshape((m, a.shape[0] // m) + a.shape[1:]), batch)
+
+    def micro(carry, mb):
+        g_acc, l_acc = carry
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb, cfg, tcfg, mesh, rules)
+        return (jax.tree.map(jnp.add, g_acc, g), l_acc + loss), None
+
+    zeros = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params)
+    (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), split)
+    grads = jax.tree.map(lambda g: g / m, grads)
+    return grads, loss / m, {"ce": loss / m}
+
+
+def train_step(params, opt_state, batch, *, cfg: ModelConfig,
+               tcfg: TrainConfig, mesh=None, rules=None, residuals=None):
+    """Returns (params', opt_state', metrics[, residuals'])."""
+    grads, loss, metrics = grads_fn(params, batch, cfg, tcfg, mesh, rules)
+
+    if tcfg.compress_pod_grads and mesh is not None \
+            and "pod" in mesh.shape and residuals is not None:
+        # grads arrive pod-partial (loss divided per-pod shard); compress
+        # the inter-pod sync.  Executed as a shard_map over "pod" only.
+        specs = jax.tree.map(lambda _: P(), grads)
+
+        def sync(g, r):
+            return compressed_psum(g, r, "pod")
+
+        grads, residuals = jax.shard_map(
+            sync, mesh=mesh,
+            in_specs=(specs, specs), out_specs=(specs, specs),
+            check_vma=False)(grads, residuals)
+
+    params, opt_state, opt_metrics = adamw.apply_updates(
+        params, grads, opt_state, tcfg.optimizer)
+    metrics = {**metrics, **opt_metrics, "loss": loss}
+    if residuals is not None:
+        return params, opt_state, metrics, residuals
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None,
+                    rules=None):
+    """jit-ready closure with donated state."""
+    fn = partial(train_step, cfg=cfg, tcfg=tcfg, mesh=mesh, rules=rules)
+    return jax.jit(fn, donate_argnums=(0, 1))

@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# smoke tests / benches see the single real CPU device; ONLY the dry-run
+# sets xla_force_host_platform_device_count (per its module header).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

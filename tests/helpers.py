@@ -1,0 +1,26 @@
+"""Shared test utilities."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_multidevice(snippet: str, devices: int = 8, timeout: int = 600):
+    """Run a python snippet in a subprocess with N fake CPU devices.
+
+    Multi-device tests (shard_map MoE, cross-mesh migration, pjit train)
+    need more than the suite's single device; jax locks the device count
+    at first init, so they spawn a fresh interpreter."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(snippet)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}")
+    return r.stdout

@@ -1,0 +1,204 @@
+"""Replication, speculation, validation, daemon behaviour tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.configs.tiny import make_tiny
+from repro.core.attestation import TrustAuthority, measure_config
+from repro.core.channel import NetworkCondition
+from repro.core.daemon import (CLOUD, EDGE, DeviceProfile,
+                               PrivacyAwareDaemon)
+from repro.core.replication import ReplicaTier, ReplicationManager
+from repro.core.speculation import (SpeculativeExecutor,
+                                    autoregressive_generate,
+                                    speculative_generate)
+from repro.core.validation import (HARMFUL, PII, ValidationFramework,
+                                   default_zoo)
+from repro.core.workspace import AgentWorkspace, VectorClock
+from repro.models.init import init_params
+from repro.serving.engine import Engine, Request
+
+CFG = make_tiny(get("llama-1.5b"))
+GID = measure_config(CFG)
+
+
+def _tiers(max_len=64):
+    params = init_params(CFG, jax.random.key(0))
+    mk = lambda s: Engine(CFG, params, slots=2, max_len=max_len, seed=s)
+    return [
+        ReplicaTier("cloud", mk(0), quality=1.0, functionality=1.0),
+        ReplicaTier("edge", mk(1), quality=0.8, functionality=0.85),
+        ReplicaTier("device", mk(2), quality=0.5, functionality=0.8),
+    ]
+
+
+# -- replication --------------------------------------------------------------
+
+def test_failover_on_disconnect_picks_edge_then_device():
+    mgr = ReplicationManager(_tiers())
+    eng = mgr.tiers["cloud"].engine
+    req = Request("r0", np.arange(6), max_new_tokens=16)
+    eng.add_request(req)
+    eng.step()
+    mgr.sync(AgentWorkspace.from_engine(eng, GID))
+
+    mgr.tiers["cloud"].cond.up = False
+    tier, latency = mgr.failover("cloud disconnect")
+    assert tier.name == "edge"
+    assert latency < 0.2  # the paper's 200ms failover budget
+
+    mgr.tiers["edge"].cond.up = False
+    tier, _ = mgr.failover("edge also down")
+    assert tier.name == "device"  # total disconnection -> on-device
+
+
+def test_bandwidth_starved_network_degrades_to_lightweight_tier():
+    tiers = _tiers()
+    for t in tiers:
+        t.cond.bandwidth_bps = 5e5  # < 1 Mbps (paper §9.6 scenario)
+    mgr = ReplicationManager(tiers)
+    assert mgr.pick_tier().name == "device"
+
+
+def test_incremental_sync_fraction():
+    mgr = ReplicationManager(_tiers(max_len=512))
+    eng = mgr.tiers["cloud"].engine
+    req = Request("r0", np.arange(6), max_new_tokens=30)
+    eng.add_request(req)
+    eng.step()
+    mgr.sync(AgentWorkspace.from_engine(eng, GID))
+    eng.step()
+    mgr.sync(AgentWorkspace.from_engine(eng, GID))
+    assert mgr.last_delta_fraction < 0.5
+
+
+def test_vector_clock_merge_on_reconnect():
+    mgr = ReplicationManager(_tiers())
+    a = AgentWorkspace(None, [{"rid": "r1", "output": [1]}], CFG.name,
+                       GID, vclock=VectorClock({"edge": 3}))
+    b = AgentWorkspace(None, [{"rid": "r2", "output": [2]}], CFG.name,
+                       GID, vclock=VectorClock({"edge": 1, "cloud": 4}))
+    merged = mgr.merge_on_reconnect(a, b)  # concurrent
+    assert {r["rid"] for r in merged.requests} == {"r1", "r2"}
+    assert merged.vclock.clocks == {"edge": 3, "cloud": 4}
+
+
+# -- speculation --------------------------------------------------------------
+
+def test_speculative_equals_target_greedy():
+    tgt = make_tiny(get("llama-1.5b"), d_model=64)
+    drf = make_tiny(get("llama-1.5b"), d_model=32, repeats_cap=1)
+    pt = init_params(tgt, jax.random.key(0))
+    pd = init_params(drf, jax.random.key(1))
+    prompt = np.arange(6)
+    out, stats = speculative_generate(pd, drf, pt, tgt, prompt, gamma=3,
+                                      max_new=12)
+    ref, _ = autoregressive_generate(pt, tgt, prompt, max_new=12)
+    assert out == ref
+    assert stats.proposed > 0
+
+
+def test_self_draft_acceptance_is_total():
+    """Draft == target => every proposal accepted (mechanism sanity)."""
+    cfg = make_tiny(get("llama-1.5b"), d_model=64)
+    p = init_params(cfg, jax.random.key(0))
+    out, stats = speculative_generate(p, cfg, p, cfg, np.arange(6),
+                                      gamma=4, max_new=16)
+    assert stats.acceptance_rate == 1.0
+    assert stats.tokens_per_target_step >= 4.0  # ~gamma+1 per step
+
+
+def test_request_level_speculation_commits_fast_path_on_agreement():
+    import time
+    ex = SpeculativeExecutor(agree_prefix=0.5)
+
+    def fast():
+        time.sleep(0.01)
+        return [1, 2, 3, 4]
+
+    def slow():
+        time.sleep(0.05)
+        return [1, 2, 3, 9]
+
+    out = ex.run(fast, slow)
+    assert out.agreed and out.committed.path == "fast"
+    assert out.speedup > 1.0
+
+    def slow_division():
+        time.sleep(0.05)
+        return [7, 7, 7, 7]
+
+    out = ex.run(fast, slow_division)
+    assert not out.agreed and out.committed.path == "slow"
+    assert out.corrected
+
+
+# -- validation ---------------------------------------------------------------
+
+def test_parallel_validation_halts_midstream():
+    vf = ValidationFramework(stride=2)
+    stream = iter([100, 101, HARMFUL.start, 103, 104, 105, None])
+    toks, rep = vf.validate_stream(lambda: next(stream))
+    assert rep.intervened and rep.mode == "parallel"
+    # the harmful token never reaches the user
+    assert HARMFUL.start not in toks
+    assert len(toks) < 6
+
+
+def test_post_hoc_detects_but_cannot_prevent():
+    vf = ValidationFramework()
+    toks = [100, 101, PII.start + 2, 103]
+    rep = vf.validate_post_hoc(toks)
+    assert rep.intervened and rep.mode == "serial"
+
+
+def test_clean_stream_passes():
+    vf = ValidationFramework(stride=4)
+    stream = iter([100 + i for i in range(8)] + [None])
+    toks, rep = vf.validate_stream(lambda: next(stream))
+    assert len(toks) == 8
+
+
+# -- daemon -------------------------------------------------------------------
+
+def test_daemon_policy_pins_confidential_local():
+    d = PrivacyAwareDaemon()
+    dec = d.decide(sensitivity="confidential", cfg=get("llama-1.5b"),
+                   prefill_tokens=10 ** 5, decode_tokens=10 ** 4,
+                   workspace_bytes=10 ** 8)
+    assert dec.target == "local"
+    assert "policy" in dec.reason
+
+
+def test_daemon_amortization_rule():
+    """Paper §9.4: migrate iff speedup >= 1.5x AND work >= 2x migration."""
+    d = PrivacyAwareDaemon()
+    cfg = get("llama-1.5b")
+    big = d.decide(sensitivity="public", cfg=cfg, prefill_tokens=200_000,
+                   decode_tokens=50_000, workspace_bytes=10 ** 8)
+    assert big.target == "remote"
+    assert big.speedup >= 1.5
+    tiny = d.decide(sensitivity="public", cfg=cfg, prefill_tokens=16,
+                    decode_tokens=4, workspace_bytes=10 ** 9)
+    assert tiny.target == "local"
+
+
+def test_daemon_unattested_remote_refused():
+    d = PrivacyAwareDaemon(remote=DeviceProfile(
+        "cloud", 197e12, 819e9, chips=8, attested=False))
+    dec = d.decide(sensitivity="public", cfg=get("llama-1.5b"),
+                   prefill_tokens=10 ** 6, decode_tokens=10 ** 5,
+                   workspace_bytes=10 ** 7)
+    assert dec.target == "local"
+    assert "unattested" in dec.reason
+
+
+def test_daemon_network_down_stays_local():
+    d = PrivacyAwareDaemon(net=NetworkCondition(up=False))
+    dec = d.decide(sensitivity="public", cfg=get("llama-1.5b"),
+                   prefill_tokens=10 ** 6, decode_tokens=10 ** 5,
+                   workspace_bytes=10 ** 7)
+    assert dec.target == "local"

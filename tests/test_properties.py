@@ -1,0 +1,129 @@
+"""Hypothesis property tests on system invariants."""
+
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import crypto
+from repro.core.migration import (Snapshot, apply_delta, make_delta,
+                                  page_hashes)
+from repro.core.workspace import VectorClock
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+clocks = st.dictionaries(st.sampled_from(["a", "b", "c", "d"]),
+                         st.integers(0, 20), max_size=4)
+
+
+@given(clocks, clocks)
+def test_vclock_merge_commutative(c1, c2):
+    a, b = VectorClock(c1), VectorClock(c2)
+    assert a.merge(b).clocks == b.merge(a).clocks
+
+
+@given(clocks, clocks, clocks)
+def test_vclock_merge_associative(c1, c2, c3):
+    a, b, c = VectorClock(c1), VectorClock(c2), VectorClock(c3)
+    assert a.merge(b).merge(c).clocks == a.merge(b.merge(c)).clocks
+
+
+@given(clocks)
+def test_vclock_merge_idempotent(c):
+    a = VectorClock(c)
+    assert a.merge(a).clocks == {k: v for k, v in c.items()}
+
+
+@given(clocks, clocks)
+def test_vclock_merge_dominates_both(c1, c2):
+    a, b = VectorClock(c1), VectorClock(c2)
+    m = a.merge(b)
+    assert m.dominates(a) and m.dominates(b)
+
+
+@given(clocks)
+def test_vclock_tick_strictly_dominates(c):
+    a = VectorClock(c)
+    t = a.tick("a")
+    assert t.dominates(a) and not a.dominates(t)
+
+
+@given(st.binary(min_size=0, max_size=300000),
+       st.binary(min_size=0, max_size=300000))
+@settings(max_examples=30, deadline=None)
+def test_delta_roundtrip_arbitrary_blobs(old, new):
+    """apply_delta(base, make_delta(base, new)) == new for ANY blobs."""
+    s_old = Snapshot(old, page_hashes(old))
+    s_new = Snapshot(new, page_hashes(new))
+    d = make_delta(s_old, s_new)
+    assert apply_delta(s_old, d).blob == new
+
+
+@given(st.binary(min_size=0, max_size=10000),
+       st.binary(min_size=0, max_size=64))
+@settings(max_examples=30, deadline=None)
+def test_crypto_roundtrip(payload, aad):
+    key = hashlib.sha256(b"k").digest()
+    assert crypto.open_(key, crypto.seal(key, payload, aad), aad) == payload
+
+
+@given(st.binary(min_size=48, max_size=2000), st.integers(0, 1999))
+@settings(max_examples=30, deadline=None)
+def test_crypto_tamper_always_detected(payload, pos):
+    key = hashlib.sha256(b"k").digest()
+    sealed = bytearray(crypto.seal(key, payload))
+    pos = pos % len(sealed)
+    sealed[pos] ^= 0x01
+    try:
+        out = crypto.open_(key, bytes(sealed))
+        assert False, "tampering not detected"
+    except crypto.IntegrityError:
+        pass
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1,
+                max_size=256))
+@settings(max_examples=50, deadline=None)
+def test_int8_quantization_error_bound(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x).max()
+    assert float(err) <= float(s) / 2 + 1e-6  # half-ULP of the scale
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_sampling_deterministic_in_key(seed, k):
+    from repro.configs import get
+    from repro.configs.tiny import make_tiny
+    from repro.serving.sampling import sample
+    cfg = make_tiny(get("llama-1.5b"))
+    logits = jax.random.normal(jax.random.key(seed), (2, cfg.padded_vocab))
+    rng = jax.vmap(jax.random.key)(jnp.array([seed, seed + 1],
+                                             dtype=jnp.uint32))
+    t1, r1 = sample(logits, rng, cfg, temperature=0.8, top_k=k)
+    t2, r2 = sample(logits, rng, cfg, temperature=0.8, top_k=k)
+    assert jnp.array_equal(t1, t2)
+    # sampled tokens never fall in the padded vocab region
+    assert int(t1.max()) < cfg.vocab_size
+
+
+@given(st.integers(1, 6), st.integers(8, 64), st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_spec_verify_greedy_is_prefix_match(g, V, seed):
+    """Greedy (one-hot) spec verification == longest matching prefix +
+    target argmax -- for any distributions."""
+    from repro.kernels.ref import spec_verify_ref
+    rng = np.random.default_rng(seed)
+    d_arg = rng.integers(0, V, g)
+    t_arg = rng.integers(0, V, g + 1)
+    dp = jnp.asarray(np.eye(V, dtype=np.float32)[d_arg])
+    tp = jnp.asarray(np.eye(V, dtype=np.float32)[t_arg])
+    n, nxt = spec_verify_ref(jnp.asarray(d_arg, jnp.int32), dp, tp,
+                             jax.random.key(seed))
+    expect_n = 0
+    while expect_n < g and d_arg[expect_n] == t_arg[expect_n]:
+        expect_n += 1
+    assert int(n) == expect_n
+    assert int(nxt) == t_arg[expect_n]

@@ -1,0 +1,182 @@
+"""Security-property tests mapping the paper's §9.2 validation matrix:
+confidentiality, integrity, freshness, authenticity, capability gating,
+transitive trust."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.configs.tiny import make_tiny
+from repro.core import crypto
+from repro.core.attestation import (Attester, AttestationError, MerkleTree,
+                                    TrustAuthority, capabilities, covers,
+                                    measure_config,
+                                    required_capabilities)
+from repro.core.channel import AttestedSession, Channel, SimClock
+from repro.core.migration import Migrator
+from repro.core.workspace import AgentWorkspace
+from repro.models.init import init_params
+from repro.serving.engine import Engine, Request
+
+CFG = make_tiny(get("llama-1.5b"))
+AUTH = TrustAuthority()
+GID = measure_config(CFG)
+CAPS = capabilities(CFG)
+
+
+def mk_attester(name, gid=GID, caps=CAPS, clock=time.time):
+    return Attester(name, AUTH, gid, caps, clock=clock)
+
+
+def mk_engine(seed=0):
+    params = init_params(CFG, jax.random.key(0))
+    return Engine(CFG, params, slots=2, max_len=64, seed=seed)
+
+
+def mk_workspace(engine):
+    req = Request("r0", np.arange(6), max_new_tokens=10)
+    engine.add_request(req)
+    for _ in range(3):
+        engine.step()
+    return AgentWorkspace.from_engine(engine, GID)
+
+
+# -- confidentiality ---------------------------------------------------------
+
+def test_wire_bytes_are_ciphertext():
+    """Paper: 'memory dumps during migration reveal only encrypted
+    data'.  The channel tap (network adversary) must not see plaintext
+    KV bytes or token ids."""
+    eng = mk_engine()
+    ws = mk_workspace(eng)
+    captured = []
+    ch = Channel(taps=[lambda b: (captured.append(b), b)[1]])
+    s = AttestedSession(mk_attester("a"), mk_attester("b"), ch, {GID})
+    Migrator().migrate(ws, s, mk_engine(seed=9))
+    blob = max(captured, key=len)            # the state transfer
+    plaintext_tokens = np.asarray(ws.engine_state.tokens).tobytes()
+    assert plaintext_tokens[:64] not in blob
+    kv = np.asarray(
+        jax.tree.leaves(ws.engine_state.caches)[0]).tobytes()
+    assert kv[:64] not in blob
+    # ciphertext should look high-entropy: compressibility check
+    import zstandard as zstd
+    assert len(zstd.ZstdCompressor().compress(blob)) > 0.9 * len(blob)
+
+
+# -- integrity ----------------------------------------------------------------
+
+def test_tampered_transfer_is_refused():
+    """Bit-flip on the wire => HMAC failure => restore refused."""
+    eng = mk_engine()
+    ws = mk_workspace(eng)
+
+    def flip(b):
+        i = len(b) // 2
+        return b[:i] + bytes([b[i] ^ 0x40]) + b[i + 1:]
+
+    ch = Channel(taps=[flip])
+    s = AttestedSession(mk_attester("a"), mk_attester("b"), ch, {GID})
+    with pytest.raises(crypto.IntegrityError):
+        Migrator().migrate(ws, s, mk_engine(seed=9))
+
+
+def test_aad_binds_state_to_measurement():
+    key = b"k" * 32
+    sealed = crypto.seal(key, b"payload", aad=b"model-A")
+    with pytest.raises(crypto.IntegrityError):
+        crypto.open_(key, sealed, aad=b"model-B")
+
+
+# -- authenticity / whitelist -------------------------------------------------
+
+def test_unwhitelisted_measurement_refused():
+    rogue_gid = measure_config(CFG.replace(name="evil"))
+    rogue = mk_attester("evil-host", gid=rogue_gid)
+    with pytest.raises(AttestationError, match="not whitelisted"):
+        AttestedSession(mk_attester("a"), rogue, Channel(), {GID})
+
+
+def test_forged_signature_refused():
+    other_authority = TrustAuthority(seed=b"attacker-root")
+    forger = Attester("b", other_authority, GID, CAPS)
+    with pytest.raises(AttestationError, match="bad signature"):
+        AttestedSession(mk_attester("a"), forger, Channel(), {GID})
+
+
+# -- freshness ----------------------------------------------------------------
+
+def test_stale_quote_refused():
+    clock = SimClock(t0=1000.0)
+    a = mk_attester("a", clock=clock)
+    b = mk_attester("b", clock=clock)
+    q = a.quote("nonce1")
+    clock.advance(400.0)  # > 300s freshness window
+    with pytest.raises(AttestationError, match="stale"):
+        b.verify("a", q, nonce="nonce1", whitelist={GID})
+
+
+def test_counter_replay_refused():
+    a = mk_attester("a")
+    b = mk_attester("b")
+    q = a.quote("n1")
+    b.verify("a", q, nonce="n1", whitelist={GID})
+    with pytest.raises(AttestationError, match="replay"):
+        b.verify("a", q, nonce="n1", whitelist={GID})
+
+
+# -- capability gating (entry_id, paper §5) -----------------------------------
+
+def test_capability_gap_refuses_migration():
+    """A MoE workload must not migrate to an enclave without MOE_EP
+    (paper: WASI-NN / ID_1003 example)."""
+    moe_cfg = make_tiny(get("granite-moe-1b-a400m"))
+    need = required_capabilities(moe_cfg, kv_len=1024)
+    weak_caps = frozenset({"WASI_CORE", "MAX_KV_LEN:2048"})
+    a = mk_attester("src")
+    b = mk_attester("dst", caps=weak_caps)
+    with pytest.raises(AttestationError, match="capability gap"):
+        AttestedSession(a, b, Channel(), {GID}, need=need)
+
+
+def test_kv_len_capability():
+    assert covers(frozenset({"MAX_KV_LEN:32768"}),
+                  frozenset({"KV_LEN:32768"}))
+    assert not covers(frozenset({"MAX_KV_LEN:32768"}),
+                      frozenset({"KV_LEN:524288"}))
+
+
+# -- transitive trust ---------------------------------------------------------
+
+def test_multihop_chain_poisoned_by_bad_hop():
+    from repro.core.channel import transitive_chain
+    good = [mk_attester(f"hop{i}") for i in range(3)]
+    quotes = transitive_chain(good, Channel(), {GID})
+    assert len(quotes) == 4
+    bad = [mk_attester("hop0"),
+           mk_attester("hopX", gid=measure_config(CFG.replace(name="x"))),
+           mk_attester("hop2")]
+    with pytest.raises(AttestationError):
+        transitive_chain(bad, Channel(), {GID})
+
+
+# -- merkle incremental attestation (paper §6) --------------------------------
+
+def test_merkle_incremental_update():
+    params = init_params(CFG, jax.random.key(0))
+    t = MerkleTree.build(params)
+    root0 = t.root
+    # fine-tune one tensor; only that leaf re-hashes, root changes
+    params["final_norm"]["scale"] = \
+        params["final_norm"]["scale"] * 1.5
+    root1, n = t.update({"final_norm": params["final_norm"]})
+    assert n == 1
+    assert root1 != root0
+    # reverting restores the original root (content-addressed)
+    params["final_norm"]["scale"] = params["final_norm"]["scale"] / 1.5
+    root2, _ = t.update({"final_norm": params["final_norm"]})
+    assert root2 == root0

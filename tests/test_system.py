@@ -1,0 +1,135 @@
+"""End-to-end behaviour tests: the paper's three motivating scenarios
+(§2.2) run against the full stack."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.configs.tiny import make_tiny
+from repro.core.attestation import (Attester, TrustAuthority, capabilities,
+                                    measure_config)
+from repro.core.channel import AttestedSession, Channel, NetworkCondition
+from repro.core.daemon import PrivacyAwareDaemon
+from repro.core.migration import Migrator
+from repro.core.replication import ReplicaTier, ReplicationManager
+from repro.core.speculation import SpeculativeExecutor
+from repro.core.validation import HARMFUL, ValidationFramework
+from repro.core.workspace import AgentWorkspace
+from repro.models.init import init_params
+from repro.serving.engine import Engine, Request
+
+CFG = make_tiny(get("llama-1.5b"))
+AUTH = TrustAuthority()
+GID = measure_config(CFG)
+PARAMS = init_params(CFG, jax.random.key(0))
+
+
+def _engine(seed=0, slots=2):
+    return Engine(CFG, PARAMS, slots=slots, max_len=64, seed=seed)
+
+
+def test_scenario1_travel_blogger_offline_failover():
+    """Privacy-preserving assistant with unreliable connectivity:
+    cloud serves while up; on disconnect the system fails over to a
+    local replica and work continues; on reconnect state merges."""
+    mgr = ReplicationManager([
+        ReplicaTier("cloud", _engine(0), 1.0, 1.0),
+        ReplicaTier("edge", _engine(1), 0.8, 0.85),
+        ReplicaTier("device", _engine(2), 0.5, 0.8),
+    ])
+    cloud = mgr.tiers["cloud"].engine
+    req = Request("draft-post", np.arange(6), max_new_tokens=24,
+                  sensitivity="personal")
+    cloud.add_request(req)
+    for _ in range(4):
+        cloud.step()
+        mgr.sync(AgentWorkspace.from_engine(cloud, GID))
+    tokens_before = len(req.output)
+
+    mgr.tiers["cloud"].cond.up = False           # remote mountains
+    tier, latency = mgr.failover("disconnect")
+    assert tier.name == "edge" and latency < 0.2
+    edge = tier.engine
+    assert edge.requests, "in-flight request survived failover"
+    cont = [r for r in edge.requests.values()][0]
+    assert cont.output[:tokens_before] == req.output[:tokens_before]
+    for _ in range(3):
+        edge.step()
+    assert len(cont.output) > tokens_before       # work continued offline
+
+
+def test_scenario2_trader_speculation_with_validation():
+    """Fast path answers in milliseconds; slow path validates; a
+    divergent slow result revises the trade before exposure."""
+    import time
+    vf = ValidationFramework(stride=2)
+    validators = [lambda toks: (all(t not in HARMFUL for t in toks), "ok")]
+    ex = SpeculativeExecutor(agree_prefix=0.5, validators=validators)
+
+    def fast():
+        time.sleep(0.005)
+        return [101, 102, 103, 104]
+
+    def slow():
+        time.sleep(0.03)
+        return [101, 102, 107, 108]  # agrees on prefix -> commit fast
+
+    out = ex.run(fast, slow)
+    assert out.committed.path == "fast"
+    assert out.perceived_latency_s < 0.02
+    assert out.speedup > 1.5
+
+
+def test_scenario3_medical_agent_migrates_only_attested():
+    """Patient data (confidential) stays local; an attested private-
+    cloud enclave may receive it; outputs are validated in-stream."""
+    daemon = PrivacyAwareDaemon(max_remote_sensitivity="confidential")
+    dec = daemon.decide(sensitivity="confidential", cfg=get("llama-1.5b"),
+                        prefill_tokens=500_000, decode_tokens=100_000,
+                        workspace_bytes=10 ** 8)
+    assert dec.target == "remote"   # allowed: hospital private cloud
+
+    # the actual transfer only succeeds against a whitelisted enclave
+    eng = _engine(seed=7)
+    req = Request("dx-1", np.arange(6), max_new_tokens=10,
+                  sensitivity="confidential")
+    eng.add_request(req)
+    eng.step()
+    ws = AgentWorkspace.from_engine(eng, GID)
+    a = Attester("hospital-edge", AUTH, GID, capabilities(CFG))
+    b = Attester("hospital-cloud", AUTH, GID, capabilities(CFG))
+    sess = AttestedSession(a, b, Channel(), {GID})
+    eng2, rep = Migrator().migrate(ws, sess, _engine(seed=8))
+    assert eng2.requests
+    # in-stream validation halts a (synthetic) unsafe suggestion
+    vf = ValidationFramework(stride=1)
+    stream = iter([60, 61, HARMFUL.start + 3, 63, None])
+    toks, vrep = vf.validate_stream(lambda: next(stream))
+    assert vrep.intervened and HARMFUL.start + 3 not in toks
+
+
+def test_full_serving_pipeline_with_speculative_tiers():
+    """Tiered serve: edge engine handles short prompts; long work moves
+    to the 'cloud' engine via daemon decision + migration, end to end."""
+    daemon = PrivacyAwareDaemon()
+    eng_edge = _engine(seed=10)
+    eng_cloud = _engine(seed=11)
+    req = Request("long-doc", np.arange(8), max_new_tokens=16,
+                  sensitivity="public")
+    dec = daemon.decide(sensitivity=req.sensitivity, cfg=get("llama-1.5b"),
+                        prefill_tokens=10 ** 6, decode_tokens=10 ** 5,
+                        workspace_bytes=10 ** 7)
+    assert dec.target == "remote"
+    eng_edge.add_request(req)
+    for _ in range(4):
+        eng_edge.step()
+    ws = AgentWorkspace.from_engine(eng_edge, GID)
+    a = Attester("e", AUTH, GID, capabilities(CFG))
+    b = Attester("c", AUTH, GID, capabilities(CFG))
+    eng_cloud, rep = Migrator().migrate(
+        ws, AttestedSession(a, b, Channel(), {GID}), eng_cloud)
+    while eng_cloud.requests:
+        eng_cloud.step()
+    done = [r for r in [req] if True]
+    assert rep.total_s > 0
