@@ -1,0 +1,15 @@
+.PHONY: check test fleet-demo bench-fleet
+
+# tier-1 verify (ROADMAP.md): fail-fast, quiet
+check:
+	sh scripts/check.sh
+
+# full suite without -x (see every failure)
+test:
+	PYTHONPATH=src python -m pytest -q
+
+fleet-demo:
+	PYTHONPATH=src python examples/fleet_serving.py
+
+bench-fleet:
+	PYTHONPATH=src python benchmarks/bench_fleet.py

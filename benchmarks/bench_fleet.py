@@ -1,0 +1,86 @@
+"""Fleet orchestration overheads: scaling vs a single engine, the cost
+of shadow checkpoints, and per-slot live-migration latency.
+
+    PYTHONPATH=src python benchmarks/bench_fleet.py
+"""
+
+import time
+
+import numpy as np
+
+from common import emit, timeit, tiny_cfg, tiny_engine
+
+REQS = 8
+MAX_NEW = 16
+
+
+def mk_requests(cfg):
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(0)
+    return [Request(f"r{i}", rng.integers(5, cfg.vocab_size, 6),
+                    max_new_tokens=MAX_NEW) for i in range(REQS)]
+
+
+def mk_fleet(cfg, params, n_engines, *, sync_every=1):
+    import jax
+    from repro.core.attestation import TrustAuthority
+    from repro.core.daemon import CLOUD, EDGE, DeviceProfile
+    from repro.fleet import EngineHandle, FleetController, Rebalancer
+    from repro.serving.engine import Engine
+    profs = [EDGE, CLOUD,
+             DeviceProfile("edge2", peak_flops=20e12, hbm_bw=300e9)]
+    handles = [EngineHandle(f"e{i}",
+                            Engine(cfg, params, slots=4, max_len=64, seed=i),
+                            profs[i % len(profs)])
+               for i in range(n_engines)]
+    return FleetController(handles, authority=TrustAuthority(),
+                           balancer=Rebalancer(sync_every=sync_every))
+
+
+def main():
+    import jax
+    from repro.core.migration import pack_slot, unpack_slot
+    from repro.models.init import init_params
+
+    cfg = tiny_cfg()
+    params = init_params(cfg, jax.random.key(0))
+
+    # single engine baseline
+    eng = tiny_engine(cfg, slots=4, max_len=64, params=params)
+    t0 = time.perf_counter()
+    eng.run(mk_requests(cfg))
+    dt1 = time.perf_counter() - t0
+    emit("fleet/single_engine_serve", dt1 * 1e6,
+         f"{REQS * MAX_NEW / dt1:.0f} tok/s")
+
+    # 3-engine fleet, no shadow sync vs per-step sync (checkpoint tax)
+    for sync, label in [(10**9, "nosync"), (1, "sync1")]:
+        fleet = mk_fleet(cfg, params, 3, sync_every=sync)
+        t0 = time.perf_counter()
+        fleet.run(mk_requests(cfg))
+        dt = time.perf_counter() - t0
+        emit(f"fleet/3engine_serve_{label}", dt * 1e6,
+             f"{REQS * MAX_NEW / dt:.0f} tok/s vs single {dt1/dt:.2f}x")
+
+    # slot snapshot pack / wire / inject latency (the migration unit)
+    from repro.serving.engine import Request
+    src = tiny_engine(cfg, slots=2, max_len=64, params=params)
+    src.add_request(Request("r0", np.arange(6), max_new_tokens=40))
+    src.step()
+    snap = src.extract_slot(0, keep=True)
+    blob = pack_slot(snap)
+    emit("fleet/slot_wire_bytes", float(len(blob)), "per-request payload")
+    emit("fleet/pack_slot",
+         timeit(lambda: pack_slot(src.extract_slot(0, keep=True))) * 1e6)
+
+    dst = tiny_engine(cfg, slots=2, max_len=64, params=params)
+
+    def inject():
+        req = dst.inject_slot(unpack_slot(blob, dst.slot_like()))
+        dst.retire(req.slot)
+
+    emit("fleet/unpack_inject_slot", timeit(inject) * 1e6)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Scenario: a fleet spanning phone (unattested MCU-class), laptop edge
+and cloud pod serves one request stream; the cloud node dies mid-decode
+and every conversation continues, bit-identically, on the survivors.
+
+    PYTHONPATH=src python examples/fleet_serving.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.configs.tiny import make_tiny
+from repro.core.attestation import TrustAuthority
+from repro.core.daemon import CLOUD, EDGE, MCU
+from repro.fleet import EngineHandle, FleetController
+from repro.models.init import init_params
+from repro.serving.engine import Engine, Request
+
+
+def main():
+    cfg = make_tiny(get("llama-1.5b"))
+    params = init_params(cfg, jax.random.key(0))
+    mk = lambda s: Engine(cfg, params, slots=3, max_len=64, seed=s)
+    fleet = FleetController(
+        [EngineHandle("phone", mk(0), MCU),       # no enclave: public only
+         EngineHandle("laptop", mk(1), EDGE),
+         EngineHandle("cloud", mk(2), CLOUD)],
+        authority=TrustAuthority())
+
+    rng = np.random.default_rng(7)
+    sens = ["public", "personal", "confidential"]
+    reqs = [Request(f"chat{i}", rng.integers(5, cfg.vocab_size, 6),
+                    max_new_tokens=14, sensitivity=sens[i % 3])
+            for i in range(8)]
+    for r in reqs:
+        fleet.submit(r)
+
+    # everyone is mid-conversation...
+    for _ in range(6):
+        fleet.step()
+    placed = {n: sorted(r.rid for r in h.engine.requests.values())
+              for n, h in fleet.handles.items()}
+    print("mid-decode placement:", placed)
+
+    # ...when the cloud node disappears
+    print("\n-- cloud node lost --")
+    fleet.fail("cloud")
+    outs = fleet.run()
+    print(f"all {len(outs)} conversations finished on the survivors")
+
+    for rid in sorted(fleet.done):
+        req = fleet.done[rid]
+        print(f"  {rid}[{req.sensitivity:12s}] "
+              f"via {'->'.join(fleet.placements[rid])}")
+    tel = fleet.telemetry.summary()
+    print("\nfleet telemetry:", tel["fleet"])
+    assert all("phone" not in fleet.placements[r.rid]
+               for r in reqs if r.sensitivity != "public")
+    print("policy held: nothing sensitive ever touched the phone")
+
+
+if __name__ == "__main__":
+    main()

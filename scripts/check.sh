@@ -1,0 +1,6 @@
+#!/usr/bin/env sh
+# Tier-1 verify: the exact command ROADMAP.md documents, runnable as
+#   make check        (or)        sh scripts/check.sh [pytest args...]
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -24,7 +24,7 @@ import numpy as np
 
 
 def _flatten(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     keyed = {}
     for path, leaf in flat:
         key = jax.tree_util.keystr(path)

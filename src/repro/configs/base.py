@@ -142,7 +142,7 @@ class ModelConfig:
         total = 0
         moe = self.moe
         tree = schema.model_schema(self)
-        flat, _ = jax.tree.flatten_with_path(
+        flat, _ = jax.tree_util.tree_flatten_with_path(
             tree, is_leaf=lambda x: isinstance(x, schema.ParamDef))
         for path, leaf in flat:
             n = math.prod(leaf.shape)

@@ -13,12 +13,14 @@ daemon       -- privacy-aware placement scheduler (roofline cost model)
 from repro.core.attestation import (Attester, AttestationError, MerkleTree,
                                     Quote, TrustAuthority, capabilities,
                                     measure_config, semantic_attest)
-from repro.core.channel import (AttestedSession, Channel, NetworkCondition,
-                                SimClock)
-from repro.core.daemon import (CLOUD, EDGE, DeviceProfile,
-                               PlacementDecision, PrivacyAwareDaemon)
+from repro.core.channel import (AttestedSession, Channel, Fabric,
+                                NetworkCondition, SimClock)
+from repro.core.daemon import (CLOUD, EDGE, MCU, DeviceProfile,
+                               PlacementDecision, PrivacyAwareDaemon,
+                               placement_allowed)
 from repro.core.migration import (MigrationReport, Migrator, Snapshot,
-                                  criu_restore, criu_snapshot, qemu_snapshot)
+                                  criu_restore, criu_snapshot, pack_slot,
+                                  qemu_snapshot, unpack_slot)
 from repro.core.replication import (FailoverEvent, ReplicaTier,
                                     ReplicationManager)
 from repro.core.speculation import (SpecStats, SpeculationOutcome,

@@ -55,7 +55,7 @@ def measure_config(cfg: ModelConfig) -> str:
 # ---------------------------------------------------------------------------
 
 def _leaf_hashes(params) -> dict[str, str]:
-    flat, _ = jax.tree.flatten_with_path(params)
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
     out = {}
     for path, leaf in flat:
         key = jax.tree_util.keystr(path)

@@ -64,6 +64,30 @@ class Channel:
         return data
 
 
+class Fabric:
+    """Cluster interconnect: one ``Channel`` per engine pair, all ticking
+    the same ``SimClock`` so fleet-wide transfer timings compose.  Links
+    default to ``default_cond`` until ``set_link`` gives a pair its own
+    conditions (a lossy edge uplink next to a fast pod fabric)."""
+
+    def __init__(self, default_cond: NetworkCondition | None = None):
+        self.clock = SimClock()
+        self.default_cond = default_cond or NetworkCondition()
+        self._conds: dict[frozenset, NetworkCondition] = {}
+        self._links: dict[frozenset, Channel] = {}
+
+    def set_link(self, a: str, b: str, cond: NetworkCondition):
+        self._conds[frozenset((a, b))] = cond
+        self._links.pop(frozenset((a, b)), None)
+
+    def link(self, a: str, b: str) -> Channel:
+        key = frozenset((a, b))
+        if key not in self._links:
+            cond = self._conds.get(key, self.default_cond)
+            self._links[key] = Channel(cond=cond, clock=self.clock)
+        return self._links[key]
+
+
 class AttestedSession:
     """Mutually-attested session between two enclaves (paper §5).
 

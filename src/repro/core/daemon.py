@@ -35,9 +35,12 @@ class DeviceProfile:
         return self.hbm_bw * self.chips
 
 
-# edge = one M3-Max-class device; cloud = a v5e-pod-slice-class target
+# edge = one M3-Max-class device; cloud = a v5e-pod-slice-class target;
+# mcu = a Cortex-M-class endpoint with no enclave (never attested)
 EDGE = DeviceProfile("edge", peak_flops=25e12, hbm_bw=400e9, chips=1)
 CLOUD = DeviceProfile("cloud", peak_flops=197e12, hbm_bw=819e9, chips=8)
+MCU = DeviceProfile("mcu", peak_flops=5e11, hbm_bw=25e9, chips=1,
+                    attested=False)
 
 
 @dataclass
@@ -51,6 +54,16 @@ class PlacementDecision:
 
 
 SENSITIVITY_RANK = {"public": 0, "personal": 1, "confidential": 2}
+
+
+def placement_allowed(sensitivity: str, profile: DeviceProfile,
+                      max_unattested: str = "public") -> bool:
+    """The sensitivity/attestation rule, factored out so the fleet router
+    and the pairwise daemon share one policy: data above
+    ``max_unattested`` may only be placed on an attested device."""
+    if profile.attested:
+        return True
+    return SENSITIVITY_RANK[sensitivity] <= SENSITIVITY_RANK[max_unattested]
 
 
 class PrivacyAwareDaemon:

@@ -28,12 +28,12 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
 
+from repro import compression
 from repro.core import crypto
 from repro.core.channel import AttestedSession, Channel
 from repro.core.workspace import AgentWorkspace, VectorClock
-from repro.serving.engine import Engine
+from repro.serving.engine import Engine, SlotSnapshot
 
 PAGE_BYTES = 1 << 12   # 4 KiB: fine enough that one decode step dirties
                        # only the touched cache slots (paper's ~12% sync)
@@ -45,7 +45,7 @@ PAGE_BYTES = 1 << 12   # 4 KiB: fine enough that one decode step dirties
 
 def serialize_tree(tree) -> bytes:
     """Pytree -> msgpack blob (dtype-tagged, bf16-safe)."""
-    flat, _ = jax.tree.flatten_with_path(tree)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     items = []
     for path, leaf in flat:
         if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype,
@@ -69,7 +69,7 @@ def deserialize_tree(blob: bytes, like_tree):
     import ml_dtypes
     obj = msgpack.unpackb(blob)
     by_key = {it["key"]: it for it in obj["leaves"]}
-    flat, treedef = jax.tree.flatten_with_path(like_tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
     leaves = []
     for path, like in flat:
         it = by_key[jax.tree_util.keystr(path)]
@@ -188,6 +188,32 @@ def _pack_workspace(ws: AgentWorkspace) -> bytes:
     return msgpack.packb({"state": state_blob, "meta": meta})
 
 
+def pack_slot(snap: SlotSnapshot) -> bytes:
+    """SlotSnapshot -> wire blob.  Same layout discipline as
+    ``_pack_workspace``: the fixed-size array tree first, variable-length
+    request metadata after it, so paged deltas of successive shadow
+    checkpoints stay small."""
+    return msgpack.packb({
+        "arrays": serialize_tree(snap.arrays),
+        "meta": {"request": snap.request,
+                 "config_name": snap.config_name,
+                 "step": snap.step},
+    })
+
+
+def unpack_slot(blob: bytes, like_arrays) -> SlotSnapshot:
+    """Wire blob -> SlotSnapshot placed on the local backend.
+
+    ``like_arrays`` supplies the shapes/dtypes of the *target* engine's
+    slot (``Engine.slot_like()``); mismatched geometries fail loudly in
+    deserialize rather than corrupting a cache row."""
+    obj = msgpack.unpackb(blob)
+    meta = obj["meta"]
+    arrays = place_tree(deserialize_tree(obj["arrays"], like_arrays))
+    return SlotSnapshot(arrays=arrays, request=meta["request"],
+                        config_name=meta["config_name"], step=meta["step"])
+
+
 def _unpack_workspace(blob: bytes, like_state) -> AgentWorkspace:
     obj = msgpack.unpackb(blob)
     meta = obj["meta"]
@@ -207,8 +233,8 @@ class Migrator:
     """Attested, compressed, optionally-incremental workspace migration."""
 
     def __init__(self, *, compression_level: int = 3):
-        self.cctx = zstd.ZstdCompressor(level=compression_level)
-        self.dctx = zstd.ZstdDecompressor()
+        self.cctx = compression.Compressor(level=compression_level)
+        self.dctx = compression.Decompressor()
         self._base: Snapshot | None = None  # for incremental sends
 
     def migrate(self, ws: AgentWorkspace, session: AttestedSession,

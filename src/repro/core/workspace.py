@@ -16,9 +16,9 @@ import dataclasses
 from dataclasses import dataclass, field
 
 import jax
-import numpy as np
 
-from repro.serving.engine import Engine, EngineState, Request
+from repro.serving.engine import (Engine, EngineState, Request,
+                                  request_from_dict, request_to_dict)
 
 
 @dataclass
@@ -57,13 +57,7 @@ class AgentWorkspace:
     @classmethod
     def from_engine(cls, engine: Engine, measurement: str,
                     node: str = "src") -> "AgentWorkspace":
-        reqs = [{
-            "rid": r.rid, "prompt": np.asarray(r.prompt).tolist(),
-            "max_new_tokens": r.max_new_tokens,
-            "temperature": r.temperature, "top_k": r.top_k,
-            "sensitivity": r.sensitivity, "output": list(r.output),
-            "slot": r.slot, "done": r.done,
-        } for r in engine.requests.values()]
+        reqs = [request_to_dict(r) for r in engine.requests.values()]
         return cls(engine_state=engine.state, requests=reqs,
                    config_name=engine.cfg.name, measurement=measurement,
                    step=int(engine.state.step_count),
@@ -76,13 +70,7 @@ class AgentWorkspace:
         engine.state = self.engine_state
         engine.requests = {}
         for r in self.requests:
-            req = Request(rid=r["rid"], prompt=np.asarray(r["prompt"]),
-                          max_new_tokens=r["max_new_tokens"],
-                          temperature=r["temperature"], top_k=r["top_k"],
-                          sensitivity=r["sensitivity"])
-            req.output = list(r["output"])
-            req.slot = r["slot"]
-            req.done = r["done"]
+            req = request_from_dict(r)
             if not req.done:
                 engine.requests[req.slot] = req
         return engine

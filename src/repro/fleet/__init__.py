@@ -1,0 +1,24 @@
+"""Fleet orchestration: N heterogeneous Engine replicas, one request
+stream (the cluster-level layer over the pairwise MVVM primitives).
+
+cluster    -- FleetController: engine registry, admission control,
+              bounded queue with backpressure, the fleet step loop
+router     -- sensitivity/attestation gates composed with roofline cost
+              and per-engine load
+balancer   -- shadow checkpoints, failure-driven re-placement, planned
+              live migration of individual in-flight slots
+telemetry  -- per-engine + fleet tokens/s, latency percentiles,
+              migration/failover audit log
+"""
+
+from repro.fleet.balancer import Rebalancer, peek_slot_meta
+from repro.fleet.cluster import EngineHandle, FleetController
+from repro.fleet.router import RouteDecision, Router
+from repro.fleet.telemetry import (EngineStats, FleetTelemetry,
+                                   MigrationRecord, percentile)
+
+__all__ = [
+    "EngineHandle", "EngineStats", "FleetController", "FleetTelemetry",
+    "MigrationRecord", "Rebalancer", "RouteDecision", "Router",
+    "peek_slot_meta", "percentile",
+]

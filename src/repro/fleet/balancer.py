@@ -1,0 +1,171 @@
+"""Failure- and load-driven rebalancing of individual in-flight requests.
+
+Two mechanisms, both built on ``Engine.extract_slot``/``inject_slot``:
+
+  * shadow checkpoints -- every ``sync_every`` fleet steps each in-flight
+    slot is packed (``migration.pack_slot``) and kept fleet-side, the
+    per-request analogue of §9.6 replica sync.  When an engine fail-stops
+    the balancer re-places each of its requests from the latest shadow on
+    a surviving engine chosen by the router; greedy decode then resumes
+    bit-identically because the snapshot carries the exact cache rows,
+    token tail, position and rng of the stable point.
+  * live migration -- for planned moves (draining an engine, smoothing a
+    load imbalance) the slot leaves its donor engine and travels the real
+    migration/channel stack: compressed, then sealed through an
+    ``AttestedSession`` when both endpoints attest (plain fabric link
+    otherwise -- which the router only permits for public data).
+"""
+
+from __future__ import annotations
+
+import msgpack
+
+from repro import compression
+from repro.core.channel import AttestedSession
+from repro.core.migration import pack_slot, unpack_slot
+from repro.fleet.telemetry import MigrationRecord
+
+
+def peek_slot_meta(blob: bytes) -> dict:
+    """Request metadata of a packed slot without deserializing arrays
+    (routing needs sensitivity/remaining-work before a target exists)."""
+    return msgpack.unpackb(blob)["meta"]["request"]
+
+
+class Rebalancer:
+    def __init__(self, *, sync_every: int = 1,
+                 imbalance_threshold: float = 0.5,
+                 compression_level: int = 3):
+        self.sync_every = sync_every
+        self.imbalance_threshold = imbalance_threshold
+        self.compression_level = compression_level
+        # engine name -> rid -> packed SlotSnapshot at the last sync point
+        self.shadow: dict[str, dict[str, bytes]] = {}
+        self._step = 0
+
+    # -- shadow checkpoints --------------------------------------------------
+    def checkpoint(self, handle):
+        store = self.shadow.setdefault(handle.name, {})
+        live = set()
+        for slot, req in list(handle.engine.requests.items()):
+            snap = handle.engine.extract_slot(slot, keep=True)
+            store[req.rid] = pack_slot(snap)
+            live.add(req.rid)
+        for rid in [r for r in store if r not in live]:
+            del store[rid]           # completed or migrated away
+
+    def after_step(self, fleet):
+        self._step += 1
+        if self._step % self.sync_every:
+            return
+        for handle in fleet.handles.values():
+            if handle.healthy:
+                self.checkpoint(handle)
+
+    # -- failure-driven re-placement -----------------------------------------
+    def on_failure(self, dead, fleet) -> list[MigrationRecord]:
+        """Re-place every in-flight request of a fail-stopped engine from
+        its latest shadow checkpoint.  Unplaceable snapshots (no eligible
+        capacity right now) go to the fleet's orphan list and are retried
+        at every dispatch.  Requests the shadow never covered (failure
+        before their first sync) restart from their prompt -- progress is
+        lost but at-least-once delivery holds."""
+        recs = []
+        covered = set()
+        survivors = [h for h in fleet.handles.values() if h.healthy]
+        for rid, blob in sorted(self.shadow.pop(dead.name, {}).items()):
+            covered.add(rid)
+            if rid in fleet.done:
+                continue
+            rec = self.place_blob(blob, survivors, fleet,
+                                  src=dead.name, reason="failover")
+            if rec is None:
+                fleet.orphans.append((dead.name, blob))
+            else:
+                recs.append(rec)
+        for rid, (req, hname, t0) in list(fleet.inflight.items()):
+            if hname != dead.name or rid in covered:
+                continue
+            req.output, req.done, req.slot = [], False, -1
+            del fleet.inflight[rid]
+            fleet.queue.appendleft((req, t0))
+        return recs
+
+    def place_blob(self, blob: bytes, handles, fleet, *, src: str,
+                   reason: str) -> MigrationRecord | None:
+        meta = peek_slot_meta(blob)
+        remaining = meta["max_new_tokens"] - len(meta["output"])
+        dec = fleet.router.route(handles, fleet.cfg,
+                                 sensitivity=meta["sensitivity"],
+                                 prefill_tokens=0, decode_tokens=remaining)
+        if dec.target is None:
+            return None
+        target = fleet.handles[dec.target]
+        snap = unpack_slot(blob, target.engine.slot_like())
+        req = target.engine.inject_slot(snap)
+        fleet.reassign(req, target.name)
+        return MigrationRecord(rid=req.rid, src=src, dst=target.name,
+                               reason=reason, step=snap.step,
+                               wire_bytes=len(blob))
+
+    # -- planned live migration ----------------------------------------------
+    def live_migrate(self, src, dst, slot: int, fleet, *,
+                     reason: str = "rebalance") -> MigrationRecord:
+        """Move one in-flight slot src->dst through the wire stack."""
+        snap = src.engine.extract_slot(slot)
+        self.shadow.get(src.name, {}).pop(snap.rid, None)
+        wire = compression.compress(pack_slot(snap),
+                                    level=self.compression_level)
+        link = fleet.fabric.link(src.name, dst.name)
+        if src.attester is not None and dst.attester is not None:
+            session = AttestedSession(src.attester, dst.attester, link,
+                                      fleet.whitelist)
+            received = session.transfer(wire, aad=fleet.measurement.encode())
+        else:
+            received = link.send(wire)
+        snap2 = unpack_slot(compression.decompress(received),
+                            dst.engine.slot_like())
+        req = dst.engine.inject_slot(snap2)
+        fleet.reassign(req, dst.name)
+        return MigrationRecord(rid=req.rid, src=src.name, dst=dst.name,
+                               reason=reason, step=snap2.step,
+                               wire_bytes=len(wire))
+
+    def drain(self, src, fleet) -> list[MigrationRecord]:
+        """Live-migrate every in-flight request off ``src`` (planned
+        maintenance / scale-down), routing each slot independently."""
+        recs = []
+        others = [h for h in fleet.handles.values()
+                  if h.healthy and h.name != src.name]
+        for slot, req in sorted(src.engine.requests.items()):
+            remaining = req.max_new_tokens - len(req.output)
+            dec = fleet.router.route(others, fleet.cfg,
+                                     sensitivity=req.sensitivity,
+                                     prefill_tokens=0,
+                                     decode_tokens=remaining)
+            if dec.target is None:
+                continue             # stays until capacity frees up
+            recs.append(self.live_migrate(
+                src, fleet.handles[dec.target], slot, fleet,
+                reason="drain"))
+        return recs
+
+    def rebalance(self, fleet) -> list[MigrationRecord]:
+        """One smoothing move when occupancy spread exceeds the
+        threshold: busiest engine sheds its most-remaining request to the
+        least-loaded eligible engine."""
+        healthy = [h for h in fleet.handles.values() if h.healthy]
+        if len(healthy) < 2:
+            return []
+        busiest = max(healthy, key=lambda h: h.load)
+        idlest = min(healthy, key=lambda h: h.load)
+        if busiest.load - idlest.load < self.imbalance_threshold \
+                or not busiest.engine.requests \
+                or not idlest.engine.free_slots:
+            return []
+        slot, req = max(busiest.engine.requests.items(),
+                        key=lambda kv: kv[1].max_new_tokens
+                        - len(kv[1].output))
+        if not fleet.router.eligible(req.sensitivity, idlest):
+            return []
+        return [self.live_migrate(busiest, idlest, slot, fleet)]

@@ -1,0 +1,227 @@
+"""FleetController: N heterogeneous Engine replicas behind one queue.
+
+The controller owns the engine registry (``EngineHandle``: engine +
+``DeviceProfile`` + optional attester; per-link network conditions
+live in the shared ``Fabric``), admission
+control (a bounded queue -- ``submit`` refuses work when full, the
+backpressure signal), the dispatch loop (router picks an engine per
+request), and failure handling (fail-stop an engine at a stable point
+and the balancer re-places its in-flight slots on survivors).
+
+One ``step()`` advances every healthy engine one decode step -- the
+fleet-level stable point: between two controller steps every request is
+either queued (no device state), shadow-checkpointed, or complete.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.attestation import Attester, capabilities, measure_config
+from repro.core.channel import Fabric
+from repro.core.daemon import DeviceProfile
+from repro.fleet.balancer import Rebalancer, peek_slot_meta
+from repro.fleet.router import Router
+from repro.fleet.telemetry import FleetTelemetry
+from repro.serving.engine import Engine, Request
+
+
+@dataclass
+class EngineHandle:
+    name: str
+    engine: Engine
+    profile: DeviceProfile
+    attester: Optional[Attester] = None
+    healthy: bool = True
+
+    @property
+    def load(self) -> float:
+        return len(self.engine.requests) / max(self.engine.slots, 1)
+
+
+class FleetController:
+    def __init__(self, handles: list[EngineHandle], *,
+                 router: Router | None = None,
+                 balancer: Rebalancer | None = None,
+                 telemetry: FleetTelemetry | None = None,
+                 fabric: Fabric | None = None,
+                 queue_limit: int = 32,
+                 authority=None,
+                 rebalance_every: int = 0):
+        assert handles, "a fleet needs at least one engine"
+        self.handles: dict[str, EngineHandle] = {h.name: h for h in handles}
+        self.cfg = handles[0].engine.cfg
+        self.router = router or Router()
+        self.balancer = balancer or Rebalancer()
+        self.telemetry = telemetry or FleetTelemetry()
+        self.fabric = fabric or Fabric()
+        self.queue_limit = queue_limit
+        self.rebalance_every = rebalance_every
+        self.measurement = measure_config(self.cfg)
+        self.whitelist = {self.measurement}
+        if authority is not None:
+            caps = capabilities(self.cfg)
+            for h in handles:
+                if h.profile.attested and h.attester is None:
+                    h.attester = Attester(h.name, authority,
+                                          self.measurement, caps)
+        self.queue: deque = deque()          # (Request, t_submitted)
+        self.orphans: list[tuple[str, bytes]] = []  # (src, shadow blob)
+        self.inflight: dict[str, tuple[Request, str, float]] = {}
+        self.done: dict[str, Request] = {}
+        self.placements: dict[str, list[str]] = {}  # rid -> engine history
+        self.stalled: list[str] = []         # rids stuck at last run()
+        self._steps = 0
+
+    # -- admission control ----------------------------------------------------
+    def submit(self, req: Request) -> bool:
+        """Admit a request; False = queue full (caller must back off)."""
+        if len(self.queue) >= self.queue_limit:
+            self.telemetry.record_reject()
+            return False
+        self.queue.append((req, time.perf_counter()))
+        return True
+
+    # -- bookkeeping shared with the balancer ----------------------------------
+    def reassign(self, req: Request, handle_name: str):
+        """A request object changed engines (and identity: inject_slot
+        rebuilds it); keep latency accounting anchored at submission."""
+        old = self.inflight.get(req.rid)
+        t0 = old[2] if old is not None else time.perf_counter()
+        self.inflight[req.rid] = (req, handle_name, t0)
+        self.placements.setdefault(req.rid, []).append(handle_name)
+
+    def placement_of(self, rid: str) -> str | None:
+        entry = self.inflight.get(rid)
+        return entry[1] if entry is not None else None
+
+    def request(self, rid: str) -> Request | None:
+        if rid in self.done:
+            return self.done[rid]
+        entry = self.inflight.get(rid)
+        return entry[0] if entry is not None else None
+
+    # -- dispatch ---------------------------------------------------------------
+    def _dispatch(self):
+        # re-placed-but-orphaned slots first: they hold device state
+        if self.orphans:
+            survivors = [h for h in self.handles.values() if h.healthy]
+            still = []
+            for src, blob in self.orphans:
+                rec = self.balancer.place_blob(blob, survivors, self,
+                                               src=src, reason="failover")
+                if rec is None:
+                    still.append((src, blob))
+                else:
+                    self.telemetry.record_migration(rec)
+            self.orphans = still
+        handles = list(self.handles.values())
+        unplaced = deque()
+        while self.queue:
+            req, t0 = self.queue.popleft()
+            dec = self.router.route(handles, self.cfg,
+                                    sensitivity=req.sensitivity,
+                                    prefill_tokens=len(req.prompt),
+                                    decode_tokens=req.max_new_tokens)
+            if dec.target is None:
+                unplaced.append((req, t0))
+                continue
+            handle = self.handles[dec.target]
+            placed = handle.engine.add_request(req)
+            assert placed, f"router sent {req.rid} to a full engine"
+            self.inflight[req.rid] = (req, handle.name, t0)
+            self.placements.setdefault(req.rid, []).append(handle.name)
+            self.telemetry.record_admit(handle.name)
+        self.queue = unplaced
+
+    # -- the fleet step ----------------------------------------------------------
+    def step(self) -> dict[str, int]:
+        """Dispatch, advance every healthy engine one decode step, retire
+        completions, shadow-checkpoint.  Returns {rid: token} emitted."""
+        self._dispatch()
+        emitted: dict[str, int] = {}
+        for handle in self.handles.values():
+            if not handle.healthy or not handle.engine.requests:
+                continue
+            t0 = time.perf_counter()
+            out = handle.engine.step()
+            self.telemetry.record_step(handle.name, len(out),
+                                       time.perf_counter() - t0)
+            emitted.update(out)
+        now = time.perf_counter()
+        for rid in list(self.inflight):
+            req, hname, t0 = self.inflight[rid]
+            if req.done:
+                self.done[rid] = req
+                del self.inflight[rid]
+                self.telemetry.record_complete(hname, now - t0)
+        self.balancer.after_step(self)
+        if self.rebalance_every and \
+                self._steps % self.rebalance_every == self.rebalance_every - 1:
+            for rec in self.balancer.rebalance(self):
+                self.telemetry.record_migration(rec)
+        self._steps += 1
+        return emitted
+
+    def run(self, reqs: list[Request] | None = None, *,
+            max_steps: int = 10_000) -> dict[str, list[int]]:
+        """Serve ``reqs`` (plus anything already queued) to completion.
+
+        Stops early when the fleet is *stalled*: nothing in flight and a
+        step changed nothing, i.e. queued work no engine is eligible to
+        take (e.g. confidential requests with no attested engine left).
+        ``self.stalled`` then names the stuck request ids."""
+        pending = list(reqs or [])
+        self.stalled = []
+        for _ in range(max_steps):
+            # only offer work when the queue has room: the caller's
+            # backlog is not an admission rejection
+            while pending and len(self.queue) < self.queue_limit \
+                    and self.submit(pending[0]):
+                pending.pop(0)
+            if not (pending or self.queue or self.orphans or self.inflight):
+                break
+            qlen, orph = len(self.queue), len(self.orphans)
+            self.step()
+            if self.is_stalled(qlen, orph):
+                # slots may have freed this very step: one more dispatch
+                # before declaring the backlog unserveable
+                self._dispatch()
+                if self.is_stalled(qlen, orph):
+                    self.stalled = [r.rid for r, _ in self.queue] + \
+                        [peek_slot_meta(b)["rid"] for _, b in self.orphans]
+                    break
+        return {rid: req.output for rid, req in self.done.items()}
+
+    def is_stalled(self, qlen: int, orph: int) -> bool:
+        """True when nothing can ever change: no request is decoding on
+        a healthy engine, and the last step left the queue and orphan
+        list exactly as it found them."""
+        if any(self.handles[h].healthy
+               for _, h, _ in self.inflight.values()):
+            return False
+        return (len(self.queue) == qlen and len(self.orphans) == orph
+                and bool(self.queue or self.orphans or self.inflight))
+
+    # -- membership events ---------------------------------------------------------
+    def fail(self, name: str, *, reason: str = "crash"):
+        """Fail-stop an engine at the fleet stable point: mark it dead,
+        then re-place its in-flight requests from shadow checkpoints."""
+        handle = self.handles[name]
+        handle.healthy = False
+        self.telemetry.record_failure(name)
+        for rec in self.balancer.on_failure(handle, self):
+            self.telemetry.record_migration(rec)
+
+    def drain(self, name: str) -> int:
+        """Planned removal: live-migrate every slot off ``name``."""
+        handle = self.handles[name]
+        recs = self.balancer.drain(handle, self)
+        for rec in recs:
+            self.telemetry.record_migration(rec)
+        if not handle.engine.requests:
+            handle.healthy = False
+        return len(recs)

@@ -1,0 +1,71 @@
+"""Routing policy: where does a request (or a migrating slot) run?
+
+Composes the daemon's placement rules with fleet-local signals:
+
+  1. policy gate  -- ``daemon.placement_allowed``: sensitive data only on
+     attested engines (the §7.4 rule, lifted from pairwise to N-way);
+  2. capacity     -- only engines with a free slot are candidates;
+  3. cost         -- the daemon's roofline model prices the request's
+     remaining work on each candidate's ``DeviceProfile``, scaled by the
+     engine's current load so a fast-but-busy pod loses to an idle edge
+     box when the work is small.
+
+``route`` is shape-agnostic: fresh admissions and failover re-placements
+go through the same scoring, so a re-placed slot obeys the same policy
+gates as a fresh request.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.configs.base import ModelConfig
+from repro.core.daemon import PrivacyAwareDaemon, placement_allowed
+
+
+@dataclass
+class RouteDecision:
+    target: str | None               # engine name, or None (stay queued)
+    reason: str
+    scores: dict[str, float] = field(default_factory=dict)
+
+
+class Router:
+    def __init__(self, *, max_unattested_sensitivity: str = "public",
+                 load_weight: float = 1.0):
+        self.max_unattested_sensitivity = max_unattested_sensitivity
+        self.load_weight = load_weight
+
+    def eligible(self, sensitivity: str, handle) -> bool:
+        return (handle.healthy
+                and placement_allowed(sensitivity, handle.profile,
+                                      self.max_unattested_sensitivity))
+
+    def score(self, handle, cfg: ModelConfig, *, prefill_tokens: int,
+              decode_tokens: int) -> float:
+        """Estimated seconds to finish this request here: roofline time
+        for the remaining work, inflated by current occupancy."""
+        t = PrivacyAwareDaemon.step_time(cfg, handle.profile,
+                                         prefill_tokens=prefill_tokens,
+                                         decode_tokens=decode_tokens)
+        return t * (1.0 + self.load_weight * handle.load)
+
+    def route(self, handles, cfg: ModelConfig, *, sensitivity: str,
+              prefill_tokens: int, decode_tokens: int,
+              exclude: frozenset[str] = frozenset()) -> RouteDecision:
+        gated = [h for h in handles
+                 if h.name not in exclude and self.eligible(sensitivity, h)]
+        if not gated:
+            return RouteDecision(None, f"no attested-eligible engine for "
+                                       f"{sensitivity} data")
+        ready = [h for h in gated if h.engine.free_slots]
+        if not ready:
+            return RouteDecision(None, "all eligible engines full")
+        scores = {h.name: self.score(h, cfg,
+                                     prefill_tokens=prefill_tokens,
+                                     decode_tokens=decode_tokens)
+                  for h in ready}
+        best = min(ready, key=lambda h: scores[h.name])
+        return RouteDecision(best.name,
+                             f"min roofline+load cost "
+                             f"{scores[best.name]:.2e}s", scores)

@@ -1,0 +1,126 @@
+"""Fleet observability: per-engine and fleet-wide counters.
+
+Everything the balancer and the operator need to see: tokens/s per
+engine and aggregate, request-completion latency percentiles
+(p50/p95/p99), admission rejections (backpressure), and a full audit log
+of per-request live migrations (who moved, from where, to where, why).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class EngineStats:
+    name: str
+    tokens: int = 0                  # tokens emitted
+    steps: int = 0                   # decode steps executed
+    busy_s: float = 0.0              # wall time inside engine.step()
+    admitted: int = 0                # requests placed here
+    completed: int = 0
+    migrations_in: int = 0
+    migrations_out: int = 0
+    failed: bool = False
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.busy_s if self.busy_s > 0 else 0.0
+
+
+@dataclass
+class MigrationRecord:
+    rid: str
+    src: str
+    dst: str
+    reason: str                      # "failover" | "drain" | "rebalance"
+    step: int                        # donor step_count at extraction
+    wire_bytes: int = 0
+
+
+def percentile(xs: list[float], q: float) -> float:
+    """Nearest-rank percentile, rank = ceil(q/100 * N); 0.0 on empty."""
+    if not xs:
+        return 0.0
+    ordered = sorted(xs)
+    rank = math.ceil(q / 100.0 * len(ordered))
+    return ordered[max(0, min(len(ordered) - 1, rank - 1))]
+
+
+class FleetTelemetry:
+    def __init__(self):
+        self.engines: dict[str, EngineStats] = {}
+        self.migrations: list[MigrationRecord] = []
+        self.request_latency_s: list[float] = []
+        self.step_latency_s: list[float] = []
+        self.rejected = 0
+        self.failovers = 0
+        self._t0 = time.perf_counter()
+
+    def stats(self, name: str) -> EngineStats:
+        if name not in self.engines:
+            self.engines[name] = EngineStats(name)
+        return self.engines[name]
+
+    # -- recording ----------------------------------------------------------
+    def record_step(self, name: str, tokens: int, dt: float):
+        s = self.stats(name)
+        s.steps += 1
+        s.tokens += tokens
+        s.busy_s += dt
+        self.step_latency_s.append(dt)
+
+    def record_admit(self, name: str):
+        self.stats(name).admitted += 1
+
+    def record_reject(self):
+        self.rejected += 1
+
+    def record_complete(self, name: str, latency_s: float):
+        self.stats(name).completed += 1
+        self.request_latency_s.append(latency_s)
+
+    def record_migration(self, rec: MigrationRecord):
+        self.migrations.append(rec)
+        self.stats(rec.src).migrations_out += 1
+        self.stats(rec.dst).migrations_in += 1
+
+    def record_failure(self, name: str):
+        self.stats(name).failed = True
+        self.failovers += 1
+
+    # -- reading ------------------------------------------------------------
+    def fleet_tokens(self) -> int:
+        return sum(s.tokens for s in self.engines.values())
+
+    def fleet_tokens_per_s(self) -> float:
+        dt = time.perf_counter() - self._t0
+        return self.fleet_tokens() / dt if dt > 0 else 0.0
+
+    def latency_percentiles(self) -> dict[str, float]:
+        xs = self.request_latency_s
+        return {"p50": percentile(xs, 50), "p95": percentile(xs, 95),
+                "p99": percentile(xs, 99)}
+
+    def summary(self) -> dict:
+        return {
+            "engines": {
+                n: {"tokens": s.tokens, "steps": s.steps,
+                    "tokens_per_s": round(s.tokens_per_s, 1),
+                    "admitted": s.admitted, "completed": s.completed,
+                    "migrations_in": s.migrations_in,
+                    "migrations_out": s.migrations_out,
+                    "failed": s.failed}
+                for n, s in sorted(self.engines.items())},
+            "fleet": {
+                "tokens": self.fleet_tokens(),
+                "tokens_per_s": round(self.fleet_tokens_per_s(), 1),
+                "rejected": self.rejected,
+                "failovers": self.failovers,
+                "migrations": len(self.migrations),
+                **{k: round(v, 4)
+                   for k, v in self.latency_percentiles().items()},
+            },
+        }

@@ -108,6 +108,8 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
         _kernel, scale=scale, causal=causal, window=window,
         softcap=softcap, block_q=block_q, block_k=block_k, nk=nk)
     from jax.experimental.pallas import tpu as pltpu
+    if not hasattr(pltpu, "CompilerParams"):     # jax < 0.5 spelling
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
     out = pl.pallas_call(
         kern,
         grid=grid,

@@ -44,13 +44,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
         t_compile = time.time() - t0
 
     # persist the optimized HLO so analysis iterations don't recompile
-    import zstandard as zstd
+    from repro import compression
     os.makedirs("results/hlo", exist_ok=True)
     hlo_path = (f"results/hlo/{arch}__{shape_name}__"
                 f"{'multi' if multi_pod else 'single'}.hlo.zst")
     with open(hlo_path, "wb") as f:
-        f.write(zstd.ZstdCompressor(level=9).compress(
-            compiled.as_text().encode()))
+        f.write(compression.compress(compiled.as_text().encode(), level=9))
 
     mem = compiled.memory_analysis()
     print(f"== {arch} x {shape_name} on {mesh_name} ==")

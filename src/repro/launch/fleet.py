@@ -1,0 +1,152 @@
+"""Fleet serving driver: N heterogeneous engines behind one queue.
+
+    PYTHONPATH=src python -m repro.launch.fleet \
+        --arch llama-1.5b --tiny --requests 12 --max-new 16 \
+        --engines edge:edge,cloud:cloud,mcu:mcu --fail cloud@5
+
+Flags
+  --arch NAME            model config (default llama-1.5b)
+  --tiny                 shrink the config (CPU-friendly smoke scale)
+  --engines SPEC         comma list of name:profile replicas, where
+                         profile is edge | cloud | mcu (mcu is the
+                         unattested endpoint -- the router will keep
+                         personal/confidential work off it)
+  --slots N              request slots per engine (default 4)
+  --max-len N            per-slot context budget (default 128)
+  --requests N           synthetic mixed-sensitivity request count
+  --max-new N            tokens generated per request (default 16)
+  --temperature F        sampling temperature for odd-numbered requests
+                         (even ones stay greedy: mixed-policy batches)
+  --queue-limit N        admission-control bound (backpressure beyond it)
+  --sync-every N         shadow-checkpoint cadence in fleet steps
+  --rebalance-every N    load-smoothing cadence (0 = off, default)
+  --fail NAME@STEP       fail-stop engine NAME before fleet step STEP;
+                         its in-flight requests are re-placed from
+                         shadow checkpoints and resume on survivors
+  --drain NAME@STEP      live-migrate everything off NAME at step STEP
+  --seed N               rng seed for prompts and engines
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+PROFILES = {"edge": "EDGE", "cloud": "CLOUD", "mcu": "MCU"}
+
+
+def parse_event(spec: str | None) -> tuple[str, int] | None:
+    if not spec:
+        return None
+    name, step = spec.rsplit("@", 1)
+    return name, int(step)
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="serve a request stream over a heterogeneous fleet")
+    ap.add_argument("--arch", default="llama-1.5b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--engines", default="edge:edge,cloud:cloud,mcu:mcu")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--queue-limit", type=int, default=32)
+    ap.add_argument("--sync-every", type=int, default=1)
+    ap.add_argument("--rebalance-every", type=int, default=0)
+    ap.add_argument("--fail", default=None, metavar="NAME@STEP")
+    ap.add_argument("--drain", default=None, metavar="NAME@STEP")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get
+    from repro.configs.tiny import make_tiny
+    from repro.core import daemon
+    from repro.core.attestation import TrustAuthority
+    from repro.fleet import (EngineHandle, FleetController, Rebalancer,
+                             FleetTelemetry)
+    from repro.models.init import init_params
+    from repro.serving.engine import Engine, Request
+
+    cfg = get(args.arch)
+    if args.tiny:
+        cfg = make_tiny(cfg)
+    params = init_params(cfg, jax.random.key(args.seed))
+
+    handles = []
+    for i, spec in enumerate(args.engines.split(",")):
+        name, _, prof = spec.partition(":")
+        if prof not in PROFILES:
+            ap.error(f"unknown profile {prof!r} in --engines {spec!r} "
+                     f"(choose from {sorted(PROFILES)})")
+        profile = getattr(daemon, PROFILES[prof])
+        eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
+                     seed=args.seed + i)
+        handles.append(EngineHandle(name, eng, profile))
+    fleet = FleetController(
+        handles, authority=TrustAuthority(),
+        balancer=Rebalancer(sync_every=args.sync_every),
+        queue_limit=args.queue_limit,
+        rebalance_every=args.rebalance_every)
+
+    rng = np.random.default_rng(args.seed)
+    sens = ["public", "personal", "confidential"]
+    pending = [Request(rid=f"r{i}",
+                       prompt=rng.integers(5, cfg.vocab_size, 8),
+                       max_new_tokens=args.max_new,
+                       temperature=args.temperature if i % 2 else 0.0,
+                       top_k=16 if i % 2 else 0,
+                       sensitivity=sens[i % 3])
+               for i in range(args.requests)]
+
+    fail = parse_event(args.fail)
+    drain = parse_event(args.drain)
+    step = 0
+    while pending or fleet.queue or fleet.orphans or fleet.inflight:
+        while pending and fleet.submit(pending[0]):
+            pending.pop(0)
+        if fail and step == fail[1]:
+            print(f"-- failing {fail[0]} at step {step} --")
+            fleet.fail(fail[0])
+        if drain and step == drain[1]:
+            print(f"-- draining {drain[0]} at step {step} --")
+            fleet.drain(drain[0])
+        qlen, orph = len(fleet.queue), len(fleet.orphans)
+        fleet.step()
+        step += 1
+        if fleet.is_stalled(qlen, orph):
+            fleet._dispatch()        # slots may have freed this step
+            if not fleet.is_stalled(qlen, orph):
+                continue
+            # stalled: backlog no surviving engine is eligible to take
+            for req, _ in fleet.queue:
+                dec = fleet.router.route(
+                    list(fleet.handles.values()), cfg,
+                    sensitivity=req.sensitivity,
+                    prefill_tokens=len(req.prompt),
+                    decode_tokens=req.max_new_tokens)
+                print(f"STALLED {req.rid}[{req.sensitivity}]: {dec.reason}")
+            from repro.fleet import peek_slot_meta
+            for src, blob in fleet.orphans:
+                meta = peek_slot_meta(blob)
+                print(f"STALLED {meta['rid']}[{meta['sensitivity']}]: "
+                      f"orphaned snapshot from {src}, no eligible engine")
+            raise SystemExit(1)
+
+    for rid in sorted(fleet.done):
+        req = fleet.done[rid]
+        route = "->".join(fleet.placements[rid])
+        print(f"{rid}[{req.sensitivity:12s}] via {route}: "
+              f"{req.output[:8]}{'...' if len(req.output) > 8 else ''}")
+    print(json.dumps(fleet.telemetry.summary(), indent=1))
+    print(f"simulated wire time: {fleet.fabric.clock():.3f}s "
+          f"({len(fleet.telemetry.migrations)} live migrations)")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@ import glob
 import json
 import os
 
-import zstandard as zstd
+from repro import compression
 
 
 def main():
@@ -21,13 +21,12 @@ def main():
     from repro.configs import SHAPES, get
     from repro.launch import hlo_analysis, roofline
 
-    dctx = zstd.ZstdDecompressor()
     for f in sorted(glob.glob(os.path.join(args.hlo, "*.hlo.zst"))):
         base = os.path.basename(f)[:-len(".hlo.zst")]
         arch, shape_name, meshk = base.split("__")
         jpath = os.path.join(args.out, f"{base}.json")
         old = json.load(open(jpath)) if os.path.exists(jpath) else {}
-        txt = dctx.decompress(open(f, "rb").read()).decode()
+        txt = compression.decompress(open(f, "rb").read()).decode()
         cost = hlo_analysis.analyze(txt)
         cfg = get(arch)
         shape = SHAPES[shape_name]

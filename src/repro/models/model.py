@@ -61,7 +61,7 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def cache_specs(cache, mesh, rules=None):
     """PartitionSpecs for a cache pytree, keyed by leaf dict name."""
-    flat, treedef = jax.tree.flatten_with_path(cache)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
     specs = []
     for path, leaf in flat:
         name = None

@@ -204,7 +204,7 @@ def _moe_ep_a2a(p, x, cfg, mesh, token_axes, E_loc, ep_ax):
     in_specs = (P(batch_axes if batch_axes else None, None, None), P(),
                 P(ep_ax), P(ep_ax), P(ep_ax))
     out_specs = (P(batch_axes if batch_axes else None, None, None), P())
-    out, aux = jax.shard_map(
+    out, aux = shd.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False)(x, p["router"], p["w_gate"], p["w_up"],
                          p["w_down"])
@@ -250,7 +250,7 @@ def _moe_ep_replicated(p, x, cfg, mesh, E_loc, ep_ax):
     in_specs = (P(batch_axes if batch_axes else None), P(),
                 P(ep_ax), P(ep_ax), P(ep_ax))
     out_specs = (P(batch_axes if batch_axes else None), P())
-    out, aux = jax.shard_map(
+    out, aux = shd.shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False)(xt, p["router"], p["w_gate"], p["w_up"],
                          p["w_down"])

@@ -1,1 +1,3 @@
-from repro.serving.engine import Engine, EngineState, Request
+from repro.serving.engine import (Engine, EngineState, Request, SlotArrays,
+                                  SlotSnapshot, request_from_dict,
+                                  request_to_dict)

@@ -41,6 +41,8 @@ class EngineState:
     active: jax.Array                # (B,) bool slot in use
     rng: jax.Array                   # (B,) per-slot sampling keys
     step_count: jax.Array            # () total decode steps executed
+    temperature: jax.Array           # (B,) per-slot sampling temperature
+    top_k: jax.Array                 # (B,) per-slot top-k (0 = full vocab)
 
 
 @dataclass
@@ -54,6 +56,64 @@ class Request:
     done: bool = False
     output: list = field(default_factory=list)
     slot: int = -1
+
+
+def request_to_dict(req: Request) -> dict:
+    """Wire form of request metadata (workspace / slot snapshots)."""
+    return {
+        "rid": req.rid, "prompt": np.asarray(req.prompt).tolist(),
+        "max_new_tokens": req.max_new_tokens,
+        "temperature": req.temperature, "top_k": req.top_k,
+        "sensitivity": req.sensitivity, "output": list(req.output),
+        "slot": req.slot, "done": req.done,
+    }
+
+
+def request_from_dict(d: dict) -> Request:
+    req = Request(rid=d["rid"], prompt=np.asarray(d["prompt"]),
+                  max_new_tokens=d["max_new_tokens"],
+                  temperature=d["temperature"], top_k=d["top_k"],
+                  sensitivity=d["sensitivity"])
+    req.output = list(d["output"])
+    req.slot = d["slot"]
+    req.done = d["done"]
+    return req
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SlotArrays:
+    """One slot's share of ``EngineState`` (batch dim sliced away)."""
+    caches: list                     # per-leaf (R, ...) cache rows
+    tokens: jax.Array                # (max_len,)
+    position: jax.Array              # ()
+    last_token: jax.Array            # ()
+    rng: jax.Array                   # () sampling key
+    temperature: jax.Array           # ()
+    top_k: jax.Array                 # ()
+
+
+@dataclass
+class SlotSnapshot:
+    """A single in-flight request, detached from its engine: the unit of
+    per-request live migration (one slot leaves a draining engine and
+    resumes -- bit-identically -- in any free slot of a peer engine)."""
+    arrays: SlotArrays
+    request: dict                    # request_to_dict form
+    config_name: str
+    step: int                        # donor step_count at extraction
+
+    @property
+    def rid(self) -> str:
+        return self.request["rid"]
+
+    @property
+    def sensitivity(self) -> str:
+        return self.request["sensitivity"]
+
+    @property
+    def remaining_tokens(self) -> int:
+        return self.request["max_new_tokens"] - len(self.request["output"])
 
 
 class Engine:
@@ -87,12 +147,17 @@ class Engine:
             rng=jax.vmap(jax.random.key)(jnp.arange(seed, seed + B,
                                                     dtype=jnp.uint32)),
             step_count=jnp.zeros((), jnp.int32),
+            temperature=jnp.zeros((B,), jnp.float32),
+            top_k=jnp.zeros((B,), jnp.int32),
         )
 
     # -- request lifecycle --------------------------------------------------
+    @property
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.slots) if i not in self.requests]
+
     def add_request(self, req: Request) -> bool:
-        free = [i for i in range(self.slots)
-                if i not in self.requests]
+        free = self.free_slots
         if not free:
             return False
         slot = free[0]
@@ -100,6 +165,10 @@ class Engine:
         self.requests[slot] = req
         plen = len(req.prompt)
         assert plen + req.max_new_tokens <= self.max_len
+        self.state = dataclasses.replace(
+            self.state,
+            temperature=self.state.temperature.at[slot].set(req.temperature),
+            top_k=self.state.top_k.at[slot].set(req.top_k))
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         self.state = self._prefill_fn(self.params, self.state, prompt,
                                       slot=slot, plen=plen)
@@ -126,6 +195,71 @@ class Engine:
     def retire(self, slot: int):
         self.requests.pop(slot, None)
         self.state = _deactivate(self.state, slot)
+
+    # -- per-slot live migration (fleet layer) ------------------------------
+    def extract_slot(self, slot: int, *, keep: bool = False) -> SlotSnapshot:
+        """Detach one in-flight request as a ``SlotSnapshot``.
+
+        The snapshot packs the slot's cache rows, token tail, position,
+        sampling rng and per-slot policy -- everything needed to resume
+        this request bit-identically in *any* free slot of a compatible
+        engine.  Unless ``keep``, the slot is drained (request removed,
+        slot deactivated) as in a live migration's departure side;
+        ``keep=True`` is the shadow-checkpoint (replica sync) form."""
+        req = self.requests[slot]
+        snap = SlotSnapshot(
+            arrays=_slot_arrays(self.state, slot),
+            request=request_to_dict(req),
+            config_name=self.cfg.name,
+            step=int(self.state.step_count))
+        if not keep:
+            self.retire(slot)
+        return snap
+
+    def inject_slot(self, snap: SlotSnapshot,
+                    slot: int | None = None) -> Request:
+        """Resume a migrated request in a free slot (any index).
+
+        The donor's slot index is irrelevant: rows are written into
+        whatever slot is free here, and decode continues bit-identically
+        because every piece of cross-step state rides in the snapshot."""
+        # exact match: cache-row geometry must be identical, so the loose
+        # tiny/full family check workspace.attach uses is not enough here
+        assert self.cfg.name == snap.config_name, \
+            f"config mismatch: {self.cfg.name} != {snap.config_name}"
+        a = snap.arrays
+        assert a.tokens.shape[-1] == self.max_len, \
+            f"max_len mismatch: {a.tokens.shape[-1]} != {self.max_len}"
+        if slot is None:
+            free = self.free_slots
+            assert free, "no free slot to inject into"
+            slot = free[0]
+        assert slot not in self.requests, f"slot {slot} busy"
+        s = self.state
+        caches = jax.tree.map(lambda full, row: full.at[:, slot].set(row),
+                              s.caches, a.caches)
+        impl = str(jax.random.key_impl(s.rng))
+        rng = jax.random.wrap_key_data(
+            jax.random.key_data(s.rng).at[slot].set(
+                jax.random.key_data(a.rng)), impl=impl)
+        self.state = dataclasses.replace(
+            s,
+            caches=caches,
+            tokens=s.tokens.at[slot].set(a.tokens),
+            positions=s.positions.at[slot].set(a.position),
+            last_token=s.last_token.at[slot].set(a.last_token),
+            active=s.active.at[slot].set(True),
+            rng=rng,
+            temperature=s.temperature.at[slot].set(a.temperature),
+            top_k=s.top_k.at[slot].set(a.top_k))
+        req = request_from_dict(snap.request)
+        req.slot = slot
+        self.requests[slot] = req
+        return req
+
+    def slot_like(self):
+        """abstract SlotArrays (shapes/dtypes) for wire deserialization."""
+        return jax.eval_shape(lambda: _slot_arrays(self.state, 0))
 
     def run(self, reqs: list[Request]) -> dict[str, list[int]]:
         """Convenience: serve a request list to completion."""
@@ -168,10 +302,11 @@ def _prefill(params, state: EngineState, prompt, *, slot: int, plen: int,
     )
 
 
-def _decode_step(params, state: EngineState, *, cfg, mesh, rules,
-                 temperature=0.0, top_k=0):
+def _decode_step(params, state: EngineState, *, cfg, mesh, rules):
     """One decode step for every active slot (inactive slots compute but
-    their state is masked out -- the static-shape batching standard)."""
+    their state is masked out -- the static-shape batching standard).
+    Sampling policy is per-slot: mixed-temperature batches read their
+    temperature/top_k rows out of the state."""
     B = state.last_token.shape[0]
     pos = state.positions[:, None]
     logits, caches, _ = forward(
@@ -179,7 +314,7 @@ def _decode_step(params, state: EngineState, *, cfg, mesh, rules,
         mode="decode", caches=state.caches, positions=pos,
         mesh=mesh, rules=rules)
     toks, rng = sample(logits[:, 0], state.rng, cfg,
-                       temperature=temperature, top_k=top_k)
+                       temperature=state.temperature, top_k=state.top_k)
     toks = jnp.where(state.active, toks, 0)
     # only active slots advance
     caches = jax.tree.map(
@@ -215,3 +350,17 @@ def _bcast(active, ndim, shape):
 def _deactivate(state: EngineState, slot: int) -> EngineState:
     return dataclasses.replace(state,
                                active=state.active.at[slot].set(False))
+
+
+def _slot_arrays(state: EngineState, slot: int) -> SlotArrays:
+    """Slice one slot out of the batched state (cache batch dim is axis 1,
+    matching ``_prefill``'s scatter)."""
+    return SlotArrays(
+        caches=jax.tree.map(lambda a: a[:, slot], state.caches),
+        tokens=state.tokens[slot],
+        position=state.positions[slot],
+        last_token=state.last_token[slot],
+        rng=state.rng[slot],
+        temperature=state.temperature[slot],
+        top_k=state.top_k[slot],
+    )

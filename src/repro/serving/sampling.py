@@ -14,21 +14,50 @@ from repro.models.model import vocab_mask_logits
 
 
 def sample(logits, rng, cfg: ModelConfig, *, temperature=0.0, top_k=0):
-    """logits: (B, V_pad); rng: (B,) key array.  Returns (tokens (B,), rng')."""
+    """logits: (B, V_pad); rng: (B,) key array.  Returns (tokens (B,), rng').
+
+    ``temperature`` / ``top_k`` may be python scalars (one policy for the
+    whole batch) or (B,) arrays (per-slot policies, the continuous-batching
+    case: ``EngineState`` carries one pair per request slot).  Slots with
+    temperature 0 decode greedily and leave their rng key untouched, so a
+    greedy batch behaves exactly like the scalar fast path."""
     logits = vocab_mask_logits(logits, cfg).astype(jnp.float32)
-    if temperature == 0.0:
+    scalar = isinstance(temperature, (int, float)) \
+        and isinstance(top_k, (int, float))
+    if scalar and temperature == 0.0:
         return jnp.argmax(logits, -1).astype(jnp.int32), rng
-
-    def one(lg, key):
-        k1, k2 = jax.random.split(key)
-        l = lg / temperature
-        if top_k:
-            kth = jax.lax.top_k(l, top_k)[0][..., -1]
+    if scalar and top_k:
+        # static top-k: keep the cheap lax.top_k kth-value path
+        def one(lg, key):
+            k1, k2 = jax.random.split(key)
+            l = lg / temperature
+            kth = jax.lax.top_k(l, int(top_k))[0][..., -1]
             l = jnp.where(l < kth, -1e30, l)
-        return jax.random.categorical(k1, l).astype(jnp.int32), k2
+            return jax.random.categorical(k1, l).astype(jnp.int32), k2
+        return jax.vmap(one)(logits, rng)
 
-    toks, rng = jax.vmap(one)(logits, rng)
-    return toks, rng
+    B = logits.shape[0]
+    temp = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (B,))
+    karr = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (B,))
+
+    def one(lg, key, t, k):
+        greedy = jnp.argmax(lg, -1).astype(jnp.int32)
+        k1, k2 = jax.random.split(key)
+        l = lg / jnp.maximum(t, 1e-6)
+        # dynamic per-slot k: kth-largest via a full descending sort
+        ordered = jnp.sort(l)[::-1]
+        kth = ordered[jnp.clip(k - 1, 0, l.shape[-1] - 1)]
+        l = jnp.where((k > 0) & (l < kth), -1e30, l)
+        sampled = jax.random.categorical(k1, l).astype(jnp.int32)
+        tok = jnp.where(t > 0.0, sampled, greedy)
+        # greedy slots must not consume randomness (scalar-path parity)
+        key_out = jax.random.wrap_key_data(
+            jnp.where(t > 0.0, jax.random.key_data(k2),
+                      jax.random.key_data(key)),
+            impl=str(jax.random.key_impl(key)))
+        return tok, key_out
+
+    return jax.vmap(one)(logits, rng, temp, karr)
 
 
 def token_logprobs(logits, tokens, cfg: ModelConfig):

@@ -51,6 +51,18 @@ DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
 }
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """jax.shard_map across jax versions: new jax has it at top level
+    with ``check_vma``; older jax spells it jax.experimental.shard_map
+    with ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
 def _axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
     return math.prod(mesh.shape[a] for a in axes)
 

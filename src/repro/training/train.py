@@ -93,7 +93,7 @@ def train_step(params, opt_state, batch, *, cfg: ModelConfig,
         def sync(g, r):
             return compressed_psum(g, r, "pod")
 
-        grads, residuals = jax.shard_map(
+        grads, residuals = shd.shard_map(
             sync, mesh=mesh,
             in_specs=(specs, specs), out_specs=(specs, specs),
             check_vma=False)(grads, residuals)

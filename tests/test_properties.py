@@ -5,6 +5,10 @@ import hashlib
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis wheel not installed (optional extra)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import crypto

@@ -79,7 +79,7 @@ x = jax.ShapeDtypeStruct((32, 256), jnp.float32)
 w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
 sh_x = NamedSharding(mesh, P(None, 'model'))
 sh_w = NamedSharding(mesh, P('model', None))
-with jax.set_mesh(mesh):
+with mesh:
     t = jax.jit(f, in_shardings=(sh_x, sh_w)).lower(x, w).compile().as_text()
 c = analyze(t)
 print('coll bytes', c.coll_bytes)

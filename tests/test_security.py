@@ -64,7 +64,10 @@ def test_wire_bytes_are_ciphertext():
         jax.tree.leaves(ws.engine_state.caches)[0]).tobytes()
     assert kv[:64] not in blob
     # ciphertext should look high-entropy: compressibility check
-    import zstandard as zstd
+    try:
+        import zstandard as zstd
+    except ImportError:
+        pytest.skip("zstandard wheel not installed; entropy check skipped")
     assert len(zstd.ZstdCompressor().compress(blob)) > 0.9 * len(blob)
 
 

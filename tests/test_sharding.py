@@ -95,7 +95,7 @@ rng = np.random.default_rng(0)
 # a2a mode: tokens divide the full mesh
 x = jnp.asarray(rng.standard_normal((8, 4, cfg.d_model)), jnp.float32)
 dense, aux_d = moe_mod.moe_dense(p, x, cfg)
-with jax.set_mesh(mesh):
+with mesh:
     ep, aux_e = moe_mod.moe_ep(p, x, cfg, mesh)
 err = float(jnp.abs(dense - ep).max() / (jnp.abs(dense).max() + 1e-9))
 print('a2a mode rel err:', err)
@@ -104,7 +104,7 @@ assert err < 1e-3, err
 # replicated mode: tiny token count (decode-like)
 x = jnp.asarray(rng.standard_normal((2, 1, cfg.d_model)), jnp.float32)
 dense, _ = moe_mod.moe_dense(p, x, cfg)
-with jax.set_mesh(mesh):
+with mesh:
     ep, _ = moe_mod.moe_ep(p, x, cfg, mesh)
 err = float(jnp.abs(dense - ep).max() / (jnp.abs(dense).max() + 1e-9))
 print('replicated mode rel err:', err)
@@ -137,7 +137,7 @@ p1, o1, m1 = train_step(params, opt, batch, cfg=cfg, tcfg=tcfg)
 
 mesh = jax.make_mesh((2, 2), ('data', 'model'))
 rules = {}
-with jax.set_mesh(mesh):
+with mesh:
     p2, o2, m2 = jax.jit(
         lambda p, o, b: train_step(p, o, b, cfg=cfg, tcfg=tcfg,
                                    mesh=mesh, rules=rules))(params, opt,
