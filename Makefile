@@ -1,8 +1,12 @@
-.PHONY: check test fleet-demo bench-fleet
+.PHONY: check lint test fleet-demo spec-demo bench-fleet bench-spec
 
 # tier-1 verify (ROADMAP.md): fail-fast, quiet
 check:
 	sh scripts/check.sh
+
+# ruff gate + tier-1 (ruff is a dev extra: pip install ruff)
+lint:
+	LINT=1 sh scripts/check.sh
 
 # full suite without -x (see every failure)
 test:
@@ -11,5 +15,11 @@ test:
 fleet-demo:
 	PYTHONPATH=src python examples/fleet_serving.py
 
+spec-demo:
+	PYTHONPATH=src python examples/speculative_fleet.py
+
 bench-fleet:
 	PYTHONPATH=src python benchmarks/bench_fleet.py
+
+bench-spec:
+	PYTHONPATH=src python benchmarks/bench_fleet_speculation.py

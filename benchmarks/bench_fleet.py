@@ -8,7 +8,7 @@ import time
 
 import numpy as np
 
-from common import emit, timeit, tiny_cfg, tiny_engine
+from common import emit, timeit, tiny_cfg, tiny_engine, write_bench_json
 
 REQS = 8
 MAX_NEW = 16
@@ -80,6 +80,7 @@ def main():
         dst.retire(req.slot)
 
     emit("fleet/unpack_inject_slot", timeit(inject) * 1e6)
+    write_bench_json("fleet")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,116 @@
+"""Speculative tier hand-off benchmarks: accepted-tokens/s end to end,
+slot hand-off latency (pack/wire/repack/inject), and the acceptance-rate
+curve vs drafter temperature.
+
+Emits ``BENCH_fleet_speculation.json`` next to the CSV rows so CI's
+bench-smoke job can upload the numbers as an artifact.
+
+    PYTHONPATH=src python benchmarks/bench_fleet_speculation.py
+"""
+
+import os
+import time
+
+import numpy as np
+
+from common import emit, timeit, tiny_cfg, write_bench_json
+
+REQS = int(os.environ.get("BENCH_SPEC_REQS", 4))
+MAX_NEW = int(os.environ.get("BENCH_SPEC_MAX_NEW", 16))
+GAMMA = 4
+EDGE_LEN, CLOUD_LEN = 64, 160
+TEMPS = (0.0, 0.5, 1.0, 1.5)
+
+
+def mk_fleet(cfg, params, **spec_options):
+    from repro.core.attestation import TrustAuthority
+    from repro.core.daemon import CLOUD, EDGE
+    from repro.fleet import EngineHandle, FleetController
+    from repro.serving.engine import Engine
+    handles = [
+        EngineHandle("edge", Engine(cfg, params, slots=REQS,
+                                    max_len=EDGE_LEN, seed=0), EDGE),
+        EngineHandle("cloud", Engine(cfg, params, slots=REQS,
+                                     max_len=CLOUD_LEN, seed=1), CLOUD),
+    ]
+    return FleetController(
+        handles, authority=TrustAuthority(),
+        spec_tiers={"edge": "cloud"},
+        spec_options={"gamma": GAMMA, **spec_options})
+
+
+def mk_requests(cfg):
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(0)
+    return [Request(f"r{i}", rng.integers(5, cfg.vocab_size, 6),
+                    max_new_tokens=MAX_NEW) for i in range(REQS)]
+
+
+def main():
+    import jax
+    from repro.core.migration import pack_slot, repack_slot, unpack_slot
+    from repro.models.init import init_params
+    from repro.serving.engine import Engine, Request
+
+    cfg = tiny_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    curve = {}
+
+    # end-to-end accepted-tokens/s + acceptance curve vs drafter temp
+    for temp in TEMPS:
+        fleet = mk_fleet(cfg, params, drafter_temperature=temp,
+                         drafter_top_k=16)
+        t0 = time.perf_counter()
+        outs = fleet.run(mk_requests(cfg))
+        dt = time.perf_counter() - t0
+        st = fleet.spec_controllers["edge"].stats
+        n_tokens = sum(map(len, outs.values()))
+        emit(f"fleet_spec/serve_T{temp}", dt * 1e6,
+             f"{n_tokens / dt:.0f} committed tok/s, acceptance "
+             f"{st.acceptance_rate:.2%}")
+        curve[str(temp)] = {
+            "acceptance_rate": round(st.acceptance_rate, 4),
+            "accepted": st.accepted,
+            "proposed": st.proposed,
+            "rounds": st.rounds,
+            "committed_tokens_per_s": round(n_tokens / dt, 1),
+            "round_msg_bytes": st.round_msg_bytes,
+        }
+        if temp == TEMPS[0]:
+            handoff = {
+                "handoffs": st.handoffs,
+                "bytes_per_slot": st.handoff_bytes // max(st.handoffs, 1),
+                "sim_wire_s_per_slot":
+                    round(st.handoff_wire_s / max(st.handoffs, 1), 6),
+            }
+
+    # the hand-off unit: pack -> (wire) -> unpack -> repack -> inject,
+    # measured as host latency with heterogeneous max_len re-layout
+    src = Engine(cfg, params, slots=2, max_len=EDGE_LEN, seed=0)
+    src.add_request(Request("r0", np.arange(6), max_new_tokens=40))
+    src.step()
+    dst = Engine(cfg, params, slots=2, max_len=CLOUD_LEN, seed=1)
+    blob = pack_slot(src.extract_slot(0, keep=True))
+    emit("fleet_spec/handoff_wire_bytes", float(len(blob)),
+         f"edge max_len {EDGE_LEN} -> cloud {CLOUD_LEN}")
+
+    def handoff_roundtrip():
+        snap = repack_slot(unpack_slot(blob, dst.slot_like()),
+                           dst.max_len)
+        req = dst.inject_slot(snap)
+        dst.retire(req.slot)
+
+    handoff_us = timeit(handoff_roundtrip) * 1e6
+    emit("fleet_spec/handoff_unpack_repack_inject", handoff_us)
+    handoff["host_latency_us"] = round(handoff_us, 1)
+
+    write_bench_json("fleet_speculation", {
+        "config": {"requests": REQS, "max_new": MAX_NEW, "gamma": GAMMA,
+                   "edge_max_len": EDGE_LEN, "cloud_max_len": CLOUD_LEN},
+        "acceptance_vs_drafter_temperature": curve,
+        "handoff": handoff,
+    })
+
+
+if __name__ == "__main__":
+    main()

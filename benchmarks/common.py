@@ -1,5 +1,6 @@
-"""Benchmark plumbing: timing, CSV rows, shared fixtures."""
+"""Benchmark plumbing: timing, CSV rows, JSON artifacts, fixtures."""
 
+import json
 import os
 import sys
 import time
@@ -12,6 +13,23 @@ ROWS = []
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def write_bench_json(name: str, payload: dict | None = None) -> str:
+    """Dump a benchmark's results as ``BENCH_<name>.json`` (the artifact
+    CI's bench-smoke job uploads so the perf trajectory accumulates).
+
+    Without ``payload``, the rows ``emit`` collected so far are dumped
+    as {row_name: {"us": ..., "derived": ...}}."""
+    if payload is None:
+        payload = {n: {"us": round(us, 3), "derived": d}
+                   for n, us, d in ROWS}
+    path = os.environ.get("BENCH_OUT_DIR", os.getcwd())
+    path = os.path.join(path, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"wrote {path}")
+    return path
 
 
 def timeit(fn, *, warmup=1, iters=3):

@@ -1,6 +1,25 @@
 #!/usr/bin/env sh
 # Tier-1 verify: the exact command ROADMAP.md documents, runnable as
 #   make check        (or)        sh scripts/check.sh [pytest args...]
+#
+# LINT=1 additionally runs ruff over the fleet layer and its surfaces
+# before the tests: `ruff check` (blocking) plus a `ruff format`
+# advisory diff (non-blocking -- the repo's hand-aligned 79-col style
+# predates ruff's formatter).  ruff is a dev extra (requirements.txt);
+# the flag fails fast when it is absent rather than silently skipping.
 set -e
 cd "$(dirname "$0")/.."
+if [ "${LINT:-0}" = "1" ]; then
+    if ! command -v ruff >/dev/null 2>&1; then
+        echo "LINT=1 but ruff is not installed (pip install ruff)" >&2
+        exit 1
+    fi
+    ruff check --select E9,F --line-length 100 \
+        src/repro/fleet src/repro/launch/fleet.py \
+        benchmarks/bench_fleet.py benchmarks/bench_fleet_speculation.py \
+        examples/speculative_fleet.py examples/fleet_serving.py \
+        tests/test_fleet.py tests/test_fleet_speculation.py
+    ruff format --diff src/repro/fleet \
+        || echo "note: ruff format suggestions above are advisory"
+fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -33,7 +33,7 @@ from repro import compression
 from repro.core import crypto
 from repro.core.channel import AttestedSession, Channel
 from repro.core.workspace import AgentWorkspace, VectorClock
-from repro.serving.engine import Engine, SlotSnapshot
+from repro.serving.engine import Engine, SlotArrays, SlotSnapshot
 
 PAGE_BYTES = 1 << 12   # 4 KiB: fine enough that one decode step dirties
                        # only the touched cache slots (paper's ~12% sync)
@@ -199,6 +199,82 @@ def pack_slot(snap: SlotSnapshot) -> bytes:
                  "config_name": snap.config_name,
                  "step": snap.step},
     })
+
+
+def _resize_axis(arr, axis: int, new_len: int, fill):
+    """Grow (pad with ``fill``) or shrink (truncate) one axis."""
+    axis = axis % arr.ndim
+    old = arr.shape[axis]
+    if new_len == old:
+        return arr
+    if new_len < old:
+        idx = [slice(None)] * arr.ndim
+        idx[axis] = slice(0, new_len)
+        return arr[tuple(idx)]
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, new_len - old)
+    return jnp.pad(arr, pad, constant_values=fill)
+
+
+def repack_slot(snap: SlotSnapshot, target_max_len: int) -> SlotSnapshot:
+    """Re-layout a slot's cache rows for a target engine with a different
+    per-slot context budget (heterogeneous ``max_len`` hand-off).
+
+    Growing appends empty rows: zeros for k/v, -1 (the "slot empty"
+    sentinel ``make_attn_cache`` uses) for ``abs_pos``, zeros for the
+    token tail.  Position counters never wrap while ``S_c == max_len``
+    (the engine bounds every write by ``plen + max_new <= max_len``), so
+    row *indices* are absolute positions on both sides and no re-rotation
+    is needed; per-slot position and rng travel bit-exactly untouched.
+
+    Shrinking is allowed only when the live prefix AND the remaining
+    decode budget still fit -- truncating a tail that holds (or will
+    hold) real state is rejected loudly instead of corrupting the
+    request.
+
+    Ring-buffered local-attention layers whose window is smaller than the
+    *source* budget keep their geometry (their seq axis never matched
+    ``max_len``); a window between the two budgets has no consistent
+    re-layout and fails the geometry assert at ``inject_slot``.
+    """
+    a = snap.arrays
+    src_len = int(a.tokens.shape[-1])
+    if src_len == target_max_len:
+        return snap
+    if target_max_len < src_len:
+        need = int(a.position) + max(snap.remaining_tokens, 0)
+        if need > target_max_len:
+            raise ValueError(
+                f"cannot repack slot {snap.rid!r} into max_len="
+                f"{target_max_len}: position {int(a.position)} + "
+                f"{snap.remaining_tokens} remaining tokens need {need} "
+                "rows (tail truncation would drop live state)")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(a.caches)
+    leaves = []
+    for path, leaf in flat:
+        name = None
+        for k in reversed(path):
+            if isinstance(k, jax.tree_util.DictKey):
+                name = str(k.key)
+                break
+        if name in ("k", "v") and leaf.ndim >= 3 \
+                and leaf.shape[-3] == src_len:
+            leaves.append(_resize_axis(leaf, -3, target_max_len, 0))
+        elif name == "abs_pos" and leaf.shape[-1] == src_len:
+            leaves.append(_resize_axis(leaf, -1, target_max_len, -1))
+        else:
+            leaves.append(leaf)
+    arrays = SlotArrays(
+        caches=jax.tree.unflatten(treedef, leaves),
+        tokens=_resize_axis(a.tokens, -1, target_max_len, 0),
+        position=a.position,
+        last_token=a.last_token,
+        rng=a.rng,
+        temperature=a.temperature,
+        top_k=a.top_k,
+    )
+    return SlotSnapshot(arrays=arrays, request=snap.request,
+                        config_name=snap.config_name, step=snap.step)
 
 
 def unpack_slot(blob: bytes, like_arrays) -> SlotSnapshot:

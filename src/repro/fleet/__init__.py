@@ -1,24 +1,30 @@
 """Fleet orchestration: N heterogeneous Engine replicas, one request
 stream (the cluster-level layer over the pairwise MVVM primitives).
 
-cluster    -- FleetController: engine registry, admission control,
-              bounded queue with backpressure, the fleet step loop
-router     -- sensitivity/attestation gates composed with roofline cost
-              and per-engine load
-balancer   -- shadow checkpoints, failure-driven re-placement, planned
-              live migration of individual in-flight slots
-telemetry  -- per-engine + fleet tokens/s, latency percentiles,
-              migration/failover audit log
+cluster     -- FleetController: engine registry, admission control,
+               bounded queue with backpressure, the fleet step loop
+router      -- sensitivity/attestation gates composed with roofline cost
+               and per-engine load
+balancer    -- shadow checkpoints, failure-driven re-placement, planned
+               live migration of individual in-flight slots
+telemetry   -- per-engine + fleet tokens/s, latency percentiles,
+               migration/failover audit log
+speculative -- draft/verify tier pairs: draft on an edge engine, slot
+               hand-off over the attested wire (heterogeneous max_len
+               via migration.repack_slot), teacher-forced verification
+               on a cloud engine with rejected suffixes bounced back
 """
 
 from repro.fleet.balancer import Rebalancer, peek_slot_meta
 from repro.fleet.cluster import EngineHandle, FleetController
 from repro.fleet.router import RouteDecision, Router
+from repro.fleet.speculative import SpecTierStats, SpeculativeTierController
 from repro.fleet.telemetry import (EngineStats, FleetTelemetry,
                                    MigrationRecord, percentile)
 
 __all__ = [
     "EngineHandle", "EngineStats", "FleetController", "FleetTelemetry",
     "MigrationRecord", "Rebalancer", "RouteDecision", "Router",
+    "SpecTierStats", "SpeculativeTierController",
     "peek_slot_meta", "percentile",
 ]

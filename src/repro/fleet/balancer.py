@@ -22,7 +22,7 @@ import msgpack
 
 from repro import compression
 from repro.core.channel import AttestedSession
-from repro.core.migration import pack_slot, unpack_slot
+from repro.core.migration import pack_slot, repack_slot, unpack_slot
 from repro.fleet.telemetry import MigrationRecord
 
 
@@ -30,6 +30,22 @@ def peek_slot_meta(blob: bytes) -> dict:
     """Request metadata of a packed slot without deserializing arrays
     (routing needs sensitivity/remaining-work before a target exists)."""
     return msgpack.unpackb(blob)["meta"]["request"]
+
+
+def wire_slot(snap, dst_engine, *, link, session=None, aad=b"",
+              compression_level=3):
+    """The one slot wire hop every mover shares: pack -> compress ->
+    (attested) transfer -> decompress -> unpack -> re-layout for the
+    target's context budget.  Returns (snapshot ready for
+    ``inject_slot``, compressed wire bytes)."""
+    wire = compression.compress(pack_slot(snap), level=compression_level)
+    if session is not None:
+        received = session.transfer(wire, aad=aad)
+    else:                            # plain link: public data only
+        received = link.send(wire)
+    snap2 = unpack_slot(compression.decompress(received),
+                        dst_engine.slot_like())
+    return repack_slot(snap2, dst_engine.max_len), len(wire)
 
 
 class Rebalancer:
@@ -59,7 +75,12 @@ class Rebalancer:
         if self._step % self.sync_every:
             return
         for handle in fleet.handles.values():
-            if handle.healthy:
+            # tier-paired engines are excluded: a draft slot's output
+            # holds uncommitted drafts mid-round (restoring it would
+            # serve unverified tokens) and a verify slot is already a
+            # replica; their failure path restarts from the prompt
+            if handle.healthy and getattr(handle, "spec_role", None) \
+                    is None:
                 self.checkpoint(handle)
 
     # -- failure-driven re-placement -----------------------------------------
@@ -72,7 +93,10 @@ class Rebalancer:
         lost but at-least-once delivery holds."""
         recs = []
         covered = set()
-        survivors = [h for h in fleet.handles.values() if h.healthy]
+        # verify-tier engines are reserved replica capacity (a draft
+        # engine is fine: its controller plain-decodes foreign slots)
+        survivors = [h for h in fleet.handles.values() if h.healthy
+                     and getattr(h, "spec_role", None) != "verify"]
         for rid, blob in sorted(self.shadow.pop(dead.name, {}).items()):
             covered.add(rid)
             if rid in fleet.done:
@@ -95,13 +119,16 @@ class Rebalancer:
                    reason: str) -> MigrationRecord | None:
         meta = peek_slot_meta(blob)
         remaining = meta["max_new_tokens"] - len(meta["output"])
-        dec = fleet.router.route(handles, fleet.cfg,
-                                 sensitivity=meta["sensitivity"],
-                                 prefill_tokens=0, decode_tokens=remaining)
+        need = len(meta["prompt"]) + meta["max_new_tokens"]
+        dec = fleet.router.route(
+            [h for h in handles if need <= h.engine.max_len], fleet.cfg,
+            sensitivity=meta["sensitivity"],
+            prefill_tokens=0, decode_tokens=remaining)
         if dec.target is None:
             return None
         target = fleet.handles[dec.target]
         snap = unpack_slot(blob, target.engine.slot_like())
+        snap = repack_slot(snap, target.engine.max_len)
         req = target.engine.inject_slot(snap)
         fleet.reassign(req, target.name)
         return MigrationRecord(rid=req.rid, src=src, dst=target.name,
@@ -109,40 +136,51 @@ class Rebalancer:
                                wire_bytes=len(blob))
 
     # -- planned live migration ----------------------------------------------
+    @staticmethod
+    def fits(req, handle) -> bool:
+        """Will this request's full decode fit the handle's per-slot
+        context budget?  (position + remaining == prompt + max_new.)"""
+        return len(req.prompt) + req.max_new_tokens \
+            <= handle.engine.max_len
+
     def live_migrate(self, src, dst, slot: int, fleet, *,
                      reason: str = "rebalance") -> MigrationRecord:
-        """Move one in-flight slot src->dst through the wire stack."""
+        """Move one in-flight slot src->dst through the wire stack.
+        Donor and target may have different ``max_len``: the slot's
+        cache rows are re-laid-out (``repack_slot``) at restore."""
+        assert self.fits(src.engine.requests[slot], dst), \
+            "slot does not fit the target's context budget"
         snap = src.engine.extract_slot(slot)
         self.shadow.get(src.name, {}).pop(snap.rid, None)
-        wire = compression.compress(pack_slot(snap),
-                                    level=self.compression_level)
         link = fleet.fabric.link(src.name, dst.name)
+        session = None
         if src.attester is not None and dst.attester is not None:
             session = AttestedSession(src.attester, dst.attester, link,
                                       fleet.whitelist)
-            received = session.transfer(wire, aad=fleet.measurement.encode())
-        else:
-            received = link.send(wire)
-        snap2 = unpack_slot(compression.decompress(received),
-                            dst.engine.slot_like())
+        snap2, wire_bytes = wire_slot(
+            snap, dst.engine, link=link, session=session,
+            aad=fleet.measurement.encode(),
+            compression_level=self.compression_level)
         req = dst.engine.inject_slot(snap2)
         fleet.reassign(req, dst.name)
         return MigrationRecord(rid=req.rid, src=src.name, dst=dst.name,
                                reason=reason, step=snap2.step,
-                               wire_bytes=len(wire))
+                               wire_bytes=wire_bytes)
 
     def drain(self, src, fleet) -> list[MigrationRecord]:
         """Live-migrate every in-flight request off ``src`` (planned
         maintenance / scale-down), routing each slot independently."""
         recs = []
         others = [h for h in fleet.handles.values()
-                  if h.healthy and h.name != src.name]
+                  if h.healthy and h.name != src.name
+                  and getattr(h, "spec_role", None) != "verify"]
         for slot, req in sorted(src.engine.requests.items()):
             remaining = req.max_new_tokens - len(req.output)
-            dec = fleet.router.route(others, fleet.cfg,
-                                     sensitivity=req.sensitivity,
-                                     prefill_tokens=0,
-                                     decode_tokens=remaining)
+            dec = fleet.router.route(
+                [h for h in others if self.fits(req, h)], fleet.cfg,
+                sensitivity=req.sensitivity,
+                prefill_tokens=0,
+                decode_tokens=remaining)
             if dec.target is None:
                 continue             # stays until capacity frees up
             recs.append(self.live_migrate(
@@ -154,7 +192,8 @@ class Rebalancer:
         """One smoothing move when occupancy spread exceeds the
         threshold: busiest engine sheds its most-remaining request to the
         least-loaded eligible engine."""
-        healthy = [h for h in fleet.handles.values() if h.healthy]
+        healthy = [h for h in fleet.handles.values()
+                   if h.healthy and getattr(h, "spec_role", None) is None]
         if len(healthy) < 2:
             return []
         busiest = max(healthy, key=lambda h: h.load)
@@ -166,6 +205,7 @@ class Rebalancer:
         slot, req = max(busiest.engine.requests.items(),
                         key=lambda kv: kv[1].max_new_tokens
                         - len(kv[1].output))
-        if not fleet.router.eligible(req.sensitivity, idlest):
+        if not fleet.router.eligible(req.sensitivity, idlest) \
+                or not self.fits(req, idlest):
             return []
         return [self.live_migrate(busiest, idlest, slot, fleet)]

@@ -25,6 +25,7 @@ from repro.core.channel import Fabric
 from repro.core.daemon import DeviceProfile
 from repro.fleet.balancer import Rebalancer, peek_slot_meta
 from repro.fleet.router import Router
+from repro.fleet.speculative import SpeculativeTierController
 from repro.fleet.telemetry import FleetTelemetry
 from repro.serving.engine import Engine, Request
 
@@ -36,6 +37,7 @@ class EngineHandle:
     profile: DeviceProfile
     attester: Optional[Attester] = None
     healthy: bool = True
+    spec_role: Optional[str] = None  # "draft" | "verify" when paired
 
     @property
     def load(self) -> float:
@@ -50,7 +52,9 @@ class FleetController:
                  fabric: Fabric | None = None,
                  queue_limit: int = 32,
                  authority=None,
-                 rebalance_every: int = 0):
+                 rebalance_every: int = 0,
+                 spec_tiers: dict[str, str] | None = None,
+                 spec_options: dict | None = None):
         assert handles, "a fleet needs at least one engine"
         self.handles: dict[str, EngineHandle] = {h.name: h for h in handles}
         self.cfg = handles[0].engine.cfg
@@ -68,6 +72,20 @@ class FleetController:
                 if h.profile.attested and h.attester is None:
                     h.attester = Attester(h.name, authority,
                                           self.measurement, caps)
+        # draft/verify tier map: each entry pairs a draft engine with a
+        # verify engine; the pair is stepped by its own controller and
+        # the verify engine is reserved (excluded from normal routing)
+        self.spec_controllers: dict[str, SpeculativeTierController] = {}
+        for dname, vname in (spec_tiers or {}).items():
+            d, v = self.handles[dname], self.handles[vname]
+            assert d is not v, "a tier pair needs two engines"
+            assert d.spec_role is None and v.spec_role is None, \
+                "an engine can belong to at most one tier pair"
+            d.spec_role, v.spec_role = "draft", "verify"
+            self.spec_controllers[dname] = SpeculativeTierController(
+                d, v, fabric=self.fabric, whitelist=self.whitelist,
+                measurement=self.measurement, router=self.router,
+                telemetry=self.telemetry, **(spec_options or {}))
         self.queue: deque = deque()          # (Request, t_submitted)
         self.orphans: list[tuple[str, bytes]] = []  # (src, shadow blob)
         self.inflight: dict[str, tuple[Request, str, float]] = {}
@@ -108,7 +126,8 @@ class FleetController:
     def _dispatch(self):
         # re-placed-but-orphaned slots first: they hold device state
         if self.orphans:
-            survivors = [h for h in self.handles.values() if h.healthy]
+            survivors = [h for h in self.handles.values()
+                         if h.healthy and h.spec_role != "verify"]
             still = []
             for src, blob in self.orphans:
                 rec = self.balancer.place_blob(blob, survivors, self,
@@ -118,7 +137,10 @@ class FleetController:
                 else:
                     self.telemetry.record_migration(rec)
             self.orphans = still
-        handles = list(self.handles.values())
+        # verify-tier engines are reserved replica capacity, never
+        # dispatch targets
+        handles = [h for h in self.handles.values()
+                   if h.spec_role != "verify"]
         unplaced = deque()
         while self.queue:
             req, t0 = self.queue.popleft()
@@ -135,6 +157,10 @@ class FleetController:
             self.inflight[req.rid] = (req, handle.name, t0)
             self.placements.setdefault(req.rid, []).append(handle.name)
             self.telemetry.record_admit(handle.name)
+            spec = self.spec_controllers.get(handle.name)
+            if spec is not None and spec.attach(req) == "spec":
+                # the replica slot lives on the verify engine: audit it
+                self.placements[req.rid].append(spec.verify.name)
         self.queue = unplaced
 
     # -- the fleet step ----------------------------------------------------------
@@ -144,6 +170,8 @@ class FleetController:
         self._dispatch()
         emitted: dict[str, int] = {}
         for handle in self.handles.values():
+            if handle.spec_role is not None:
+                continue             # stepped by its tier controller
             if not handle.healthy or not handle.engine.requests:
                 continue
             t0 = time.perf_counter()
@@ -151,6 +179,8 @@ class FleetController:
             self.telemetry.record_step(handle.name, len(out),
                                        time.perf_counter() - t0)
             emitted.update(out)
+        for spec in self.spec_controllers.values():
+            emitted.update(spec.step())
         now = time.perf_counter()
         for rid in list(self.inflight):
             req, hname, t0 = self.inflight[rid]
@@ -213,12 +243,30 @@ class FleetController:
         handle = self.handles[name]
         handle.healthy = False
         self.telemetry.record_failure(name)
+        if handle.spec_role is not None:
+            self._dissolve_pair(handle)
         for rec in self.balancer.on_failure(handle, self):
             self.telemetry.record_migration(rec)
+
+    def _dissolve_pair(self, handle: EngineHandle):
+        """One member of a draft/verify pair died: tell the pair's
+        controller, then release the survivor back into the normal
+        fleet (a reserved verify engine becomes routable again)."""
+        for dname, spec in list(self.spec_controllers.items()):
+            if handle.name in (spec.draft.name, spec.verify.name):
+                spec.on_engine_failure(handle.name)
+                spec.draft.spec_role = spec.verify.spec_role = None
+                del self.spec_controllers[dname]
 
     def drain(self, name: str) -> int:
         """Planned removal: live-migrate every slot off ``name``."""
         handle = self.handles[name]
+        if handle.spec_role is not None:
+            # draft slots hold uncommitted speculative tails and verify
+            # slots are replicas -- neither survives a generic move
+            raise ValueError(
+                f"cannot drain {name!r}: tier-paired engines are "
+                "pinned (fail() dissolves the pair instead)")
         recs = self.balancer.drain(handle, self)
         for rec in recs:
             self.telemetry.record_migration(rec)

@@ -58,9 +58,14 @@ class Router:
         if not gated:
             return RouteDecision(None, f"no attested-eligible engine for "
                                        f"{sensitivity} data")
-        ready = [h for h in gated if h.engine.free_slots]
+        # capacity: a free slot whose context budget holds the request
+        # (fleets mix max_len tiers; prefill+decode is a lower bound on
+        # the rows the request will occupy)
+        ready = [h for h in gated if h.engine.free_slots
+                 and h.engine.max_len >= prefill_tokens + decode_tokens]
         if not ready:
-            return RouteDecision(None, "all eligible engines full")
+            return RouteDecision(None, "all eligible engines full "
+                                       "(slots or context budget)")
         scores = {h.name: self.score(h, cfg,
                                      prefill_tokens=prefill_tokens,
                                      decode_tokens=decode_tokens)

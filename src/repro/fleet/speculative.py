@@ -1,0 +1,366 @@
+"""Speculative tier hand-off: draft on an edge engine, verify on a
+cloud engine, per request (paper §3.5 lifted to the fleet layer).
+
+The controller pairs a *draft* engine (cheap, close to the user, short
+context budget) with a *verify* engine (the target tier, long context).
+Each eligible request:
+
+  1. prefills on the draft engine, then its slot is shipped ONCE to the
+     verify engine -- ``Engine.extract_slot`` -> ``migration.pack_slot``
+     -> compression -> ``AttestedSession`` (when both endpoints attest)
+     -> ``migration.repack_slot`` re-layouts the cache rows for the
+     verify engine's larger ``max_len`` -> ``Engine.inject_slot``.  The
+     verify tier starts from the edge-computed prefix instead of
+     re-prefilling: the MVVM migration primitive as a latency tool.
+  2. the draft engine free-runs ``gamma`` tokens per round at the
+     drafter's own temperature (a knob: hotter drafts trade acceptance
+     for diversity of proposals);
+  3. the round's tail travels to the verify tier as a token-id message
+     (tiny -- the caches never move again) and is teacher-force verified
+     against the target's greedy choice.  Accepted prefix + the target's
+     correction token are committed; the rejected suffix bounces back as
+     a verdict message and the draft slot rewinds
+     (``Engine.rollback_slot``) -- stale KV rows are masked by
+     ``abs_pos`` until decode rewrites them in place.
+  4. validators (core/validation.py) run on the *committed* stream in
+     parallel with the next draft round and can halt a request
+     mid-generation.
+
+Requests the policy gate refuses to place on the verify tier
+(``daemon.placement_allowed``: sensitivity x attestation), non-greedy
+requests, and requests that do not fit either tier's context budget fall
+back to local-only drafting: they decode to completion on the draft
+engine and never leave it.
+
+Verify modes
+  * ``stepwise`` (default): teacher-forces the verify engine's own
+    jitted decode program, so committed output is bit-exactly what a
+    pure run on the verify engine would produce -- the acceptance-
+    equivalence contract the tests assert.
+  * ``wide``: scores the whole tail in ONE multi-query forward pass
+    (``Engine.verify_slots``) -- the paper's one-wide-matmul fast path.
+    Its matmul shapes compile differently from one-token decode, so
+    greedy choices on knife-edge bf16 logits can deviate from a pure
+    decode run (production speculative-decoding stacks share this
+    numerics property).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import msgpack
+
+from repro.core.channel import AttestedSession
+from repro.core.validation import ValidationFramework
+from repro.fleet.balancer import wire_slot
+from repro.fleet.router import Router
+from repro.fleet.telemetry import MigrationRecord
+
+
+@dataclass
+class SpecTierStats:
+    """Counters the benchmark and the CLI report."""
+    requests: int = 0                # requests running draft/verify
+    local_fallbacks: int = 0         # requests kept local-only
+    rounds: int = 0                  # batched verify passes executed
+    proposed: int = 0                # draft tokens offered for verification
+    accepted: int = 0                # draft tokens the target accepted
+    corrections: int = 0             # rounds cut short by a rejection
+    handoffs: int = 0                # slot snapshots shipped
+    handoff_bytes: int = 0           # compressed slot wire bytes
+    handoff_wire_s: float = 0.0      # sim-clock time of slot transfers
+    round_msg_bytes: int = 0         # draft-tail + verdict message bytes
+    interventions: int = 0           # validator halts
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.proposed, 1)
+
+    def summary(self) -> dict:
+        return {
+            "requests": self.requests,
+            "local_fallbacks": self.local_fallbacks,
+            "rounds": self.rounds,
+            "proposed": self.proposed,
+            "accepted": self.accepted,
+            "acceptance_rate": round(self.acceptance_rate, 4),
+            "corrections": self.corrections,
+            "handoffs": self.handoffs,
+            "handoff_bytes": self.handoff_bytes,
+            "handoff_wire_s": round(self.handoff_wire_s, 6),
+            "round_msg_bytes": self.round_msg_bytes,
+            "interventions": self.interventions,
+        }
+
+
+@dataclass
+class _SpecReq:
+    """Fleet-side view of one speculative request."""
+    req: object                      # the draft engine's Request object
+    replica_slot: int                # slot on the verify engine
+    committed: int = 0               # committed tokens (prefix of output)
+
+
+class SpeculativeTierController:
+    """Drives one draft/verify engine pair inside a fleet.
+
+    The fleet step loop hands the pair's engines to this controller
+    instead of stepping them directly: ``step()`` advances the draft
+    engine one decode step (drafting for speculative slots, plain decode
+    for local-fallback slots) and, whenever a slot's tail reaches
+    ``gamma`` (or the request's remaining budget), runs a verify round
+    for every due slot at once."""
+
+    def __init__(self, draft, verify, *, fabric, whitelist, measurement,
+                 router: Router | None = None, telemetry=None,
+                 gamma: int = 4, drafter_temperature: float = 0.0,
+                 drafter_top_k: int = 0, verify_mode: str = "stepwise",
+                 validators=None, compression_level: int = 3):
+        assert verify_mode in ("stepwise", "wide"), verify_mode
+        assert gamma >= 1, gamma
+        assert draft.name != verify.name
+        if verify_mode == "wide":
+            eng = verify.engine
+            rings_ok = all(
+                ls.mixer != "local"
+                or min(ls.window, eng.max_len) >= gamma + 1
+                for b in eng.cfg.blocks for ls in b.layers)
+            if not (eng.supports_wide_verify and rings_ok):
+                raise ValueError(
+                    "verify_mode='wide' needs cache-attention mixers "
+                    "only, with every local ring >= gamma+1 rows "
+                    "(recurrent mixers step one token at a time); use "
+                    "verify_mode='stepwise'")
+        self.draft, self.verify = draft, verify
+        self.router = router or Router()
+        self.telemetry = telemetry
+        self.gamma = gamma
+        self.drafter_temperature = drafter_temperature
+        self.drafter_top_k = drafter_top_k
+        self.verify_mode = verify_mode
+        self.validation = ValidationFramework(validators) \
+            if validators else None
+        self.compression_level = compression_level
+        self.measurement = measurement
+        self.link = fabric.link(draft.name, verify.name)
+        self.session = None
+        if draft.attester is not None and verify.attester is not None:
+            self.session = AttestedSession(draft.attester, verify.attester,
+                                           self.link, whitelist)
+        self.stats = SpecTierStats()
+        self._spec: dict[str, _SpecReq] = {}     # rid -> speculative state
+        self._local: set[str] = set()            # local-fallback rids
+        self._dissolved = False
+
+    # -- wire helpers --------------------------------------------------------
+    def _send(self, payload: bytes) -> bytes:
+        if self.session is not None:
+            return self.session.transfer(payload,
+                                         aad=self.measurement.encode())
+        return self.link.send(payload)
+
+    # -- admission -----------------------------------------------------------
+    def eligible(self, req) -> str | None:
+        """None when the request may speculate; else the fallback reason."""
+        if self._dissolved or not self.verify.healthy:
+            return "verify tier gone"
+        if req.temperature != 0.0:
+            return "non-greedy request (drafts cannot be re-weighted)"
+        if not self.router.eligible(req.sensitivity, self.verify):
+            return (f"policy: {req.sensitivity} data not placeable on "
+                    f"{self.verify.name}")
+        if not self.verify.engine.free_slots:
+            return "no free replica slot on the verify engine"
+        need = len(req.prompt) + req.max_new_tokens
+        if self.verify_mode == "wide":
+            need += self.gamma
+        if need > self.verify.engine.max_len:
+            return (f"request needs {need} rows > verify max_len "
+                    f"{self.verify.engine.max_len}")
+        return None
+
+    def attach(self, req) -> str:
+        """Adopt a request just placed on the draft engine.
+
+        Returns "spec" after a successful slot hand-off to the verify
+        tier, "local" when the request stays draft-engine-only."""
+        reason = self.eligible(req)
+        if reason is not None:
+            self._local.add(req.rid)
+            self.stats.local_fallbacks += 1
+            return "local"
+        # hand-off BEFORE the drafter policy override: the replica must
+        # keep the request's own (greedy) sampling state
+        snap = self.draft.engine.extract_slot(req.slot, keep=True)
+        clock0 = self.link.clock()
+        snap2, wire_bytes = wire_slot(
+            snap, self.verify.engine, link=self.link,
+            session=self.session, aad=self.measurement.encode(),
+            compression_level=self.compression_level)
+        self.stats.handoff_wire_s += self.link.clock() - clock0
+        replica = self.verify.engine.inject_slot(snap2)
+        self.stats.handoffs += 1
+        self.stats.handoff_bytes += wire_bytes
+        self.stats.requests += 1
+        if self.telemetry is not None:
+            self.telemetry.record_migration(MigrationRecord(
+                rid=req.rid, src=self.draft.name, dst=self.verify.name,
+                reason="speculative", step=snap.step,
+                wire_bytes=wire_bytes))
+        self._set_policy(self.draft.engine, req.slot,
+                         self.drafter_temperature, self.drafter_top_k)
+        self._spec[req.rid] = _SpecReq(req=req, replica_slot=replica.slot)
+        return "spec"
+
+    @staticmethod
+    def _set_policy(engine, slot: int, temperature: float, top_k: int):
+        s = engine.state
+        engine.state = dataclasses.replace(
+            s,
+            temperature=s.temperature.at[slot].set(
+                jnp.float32(temperature)),
+            top_k=s.top_k.at[slot].set(jnp.int32(top_k)))
+
+    # -- the per-fleet-step advance ------------------------------------------
+    def step(self) -> dict[str, int]:
+        """One draft decode step for the pair + verify rounds as tails
+        fill.  Returns {rid: last token committed this step}."""
+        emitted: dict[str, int] = {}
+        if not self.draft.healthy or not self.draft.engine.requests:
+            return emitted
+        t0 = time.perf_counter()
+        out = self.draft.engine.step(auto_retire=False)
+        dt = time.perf_counter() - t0
+        # every non-speculative slot decodes plainly here: local
+        # fallbacks, and requests the balancer re-placed onto the draft
+        # engine (failover/drain targets) that never went through attach
+        n_local = 0
+        for slot, req in list(self.draft.engine.requests.items()):
+            if req.rid in self._spec:
+                continue
+            if req.rid in out:
+                emitted[req.rid] = out[req.rid]
+                n_local += 1
+            if len(req.output) >= req.max_new_tokens:
+                req.done = True
+                self._local.discard(req.rid)
+                self.draft.engine.retire(slot)
+        if self.telemetry is not None:
+            self.telemetry.record_step(self.draft.name, n_local, dt)
+
+        # speculative slots: collect tails that reached their round size
+        due: dict[int, str] = {}     # replica slot -> rid
+        for rid, st in self._spec.items():
+            pending = len(st.req.output) - st.committed
+            target = min(self.gamma,
+                         st.req.max_new_tokens - st.committed)
+            if pending >= target > 0:
+                due[st.replica_slot] = rid
+        if due:
+            emitted.update(self._verify_round(due))
+        return emitted
+
+    def _verify_round(self, due: dict[int, str]) -> dict[str, int]:
+        emitted: dict[str, int] = {}
+        tails = {slot: self._spec[rid].req.output[self._spec[rid].committed:]
+                 for slot, rid in due.items()}
+        # the tails travel to the verify tier as token ids (the caches
+        # never move again after the hand-off)...
+        msg = msgpack.packb({"slots": [[s, list(map(int, t))]
+                                       for s, t in sorted(tails.items())]})
+        self._send(msg)
+        t0 = time.perf_counter()
+        if self.verify_mode == "wide":
+            results = self.verify.engine.verify_slots(tails,
+                                                      width=self.gamma)
+        else:
+            results = self.verify.engine.verify_slots_stepwise(tails)
+        dt = time.perf_counter() - t0
+        # ...and the rejected suffix bounces back as a verdict message
+        verdict = msgpack.packb({"verdicts": [
+            [s, results[s][0], results[s][1]] for s in sorted(results)]})
+        self._send(verdict)
+        self.stats.round_msg_bytes += len(msg) + len(verdict)
+        self.stats.rounds += 1       # one batched pass, however many slots
+
+        n_committed = 0
+        for slot, rid in due.items():
+            st = self._spec[rid]
+            req = st.req
+            tail = tails[slot]
+            n_acc, correction = results[slot]
+            self.stats.proposed += len(tail)
+            self.stats.accepted += n_acc
+            commit = list(tail[:n_acc])
+            if correction is not None:
+                commit.append(correction)
+                self.stats.corrections += 1
+                self.draft.engine.rollback_slot(req.slot, len(tail),
+                                                n_acc, correction)
+            req.output[:] = req.output[:st.committed] + commit
+            st.committed += len(commit)
+            n_committed += len(commit)
+            if commit:
+                emitted[rid] = commit[-1]
+            if self.validation is not None and self._intervene(st):
+                continue
+            if st.committed >= req.max_new_tokens:
+                self._finish(rid)
+        if self.telemetry is not None:
+            self.telemetry.record_step(self.verify.name, n_committed, dt)
+        return emitted
+
+    def _intervene(self, st: _SpecReq) -> bool:
+        """Validators run on the *committed* stream only: an accepted
+        token can still be harmful, and this is the paper's mid-stream
+        halt (§3.5) at round granularity."""
+        report = self.validation.validate_post_hoc(st.req.output)
+        if not report.intervened:
+            return False
+        st.req.output[:] = st.req.output[:max(report.halt_position, 0)]
+        st.committed = len(st.req.output)
+        self.stats.interventions += 1
+        st.req.done = True
+        self._finish(st.req.rid, retired_done=True)
+        return True
+
+    def _finish(self, rid: str, *, retired_done: bool = False):
+        st = self._spec.pop(rid)
+        if not retired_done:
+            st.req.done = True
+        if st.req.slot in self.draft.engine.requests:
+            self.draft.engine.retire(st.req.slot)
+        if st.replica_slot in self.verify.engine.requests:
+            self.verify.engine.retire(st.replica_slot)
+
+    # -- membership events ---------------------------------------------------
+    def on_engine_failure(self, name: str):
+        """A pair member fail-stopped.  Verify died: speculative slots
+        drop their uncommitted tails and continue local-only on the
+        draft engine.  Draft died: replica slots are freed; the fleet's
+        failover path restarts the requests from their prompts."""
+        if self._dissolved:
+            return
+        self._dissolved = True
+        if name == self.verify.name:
+            for rid, st in list(self._spec.items()):
+                req = st.req
+                pending = len(req.output) - st.committed
+                if pending > 0 and req.slot in self.draft.engine.requests:
+                    self.draft.engine.rollback_slot(req.slot, pending, 0,
+                                                    None)
+                req.output[:] = req.output[:st.committed]
+                self._set_policy(self.draft.engine, req.slot,
+                                 req.temperature, req.top_k)
+                self._local.add(rid)
+                self.stats.local_fallbacks += 1
+        else:                                   # draft died
+            for st in self._spec.values():
+                if st.replica_slot in self.verify.engine.requests:
+                    self.verify.engine.retire(st.replica_slot)
+            self._local.clear()     # failover restarts them from prompt
+        self._spec.clear()

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass
@@ -41,12 +41,19 @@ class MigrationRecord:
 
 
 def percentile(xs: list[float], q: float) -> float:
-    """Nearest-rank percentile, rank = ceil(q/100 * N); 0.0 on empty."""
+    """Nearest-rank percentile, rank = ceil(q/100 * N); 0.0 on empty.
+
+    The product is ordered ``q * N / 100`` and nudged before the ceil:
+    ``q/100 * N`` picks up float dust for common percentiles (e.g.
+    0.95 * 20 == 19.000000000000004, whose ceil lands the p95 of 20
+    samples on the *maximum*, one rank off)."""
     if not xs:
         return 0.0
+    q = min(max(q, 0.0), 100.0)
     ordered = sorted(xs)
-    rank = math.ceil(q / 100.0 * len(ordered))
-    return ordered[max(0, min(len(ordered) - 1, rank - 1))]
+    n = len(ordered)
+    rank = math.ceil(q * n / 100.0 - 1e-9)
+    return ordered[max(0, min(n - 1, rank - 1))]
 
 
 class FleetTelemetry:

@@ -4,13 +4,21 @@
         --arch llama-1.5b --tiny --requests 12 --max-new 16 \
         --engines edge:edge,cloud:cloud,mcu:mcu --fail cloud@5
 
+Speculative tier hand-off (draft on edge, verify on cloud):
+
+    PYTHONPATH=src python -m repro.launch.fleet --tiny --requests 8 \
+        --engines edge:edge:96,cloud:cloud:256,mcu:mcu \
+        --spec-tiers edge:cloud --drafter-temperature 0.8
+
 Flags
   --arch NAME            model config (default llama-1.5b)
   --tiny                 shrink the config (CPU-friendly smoke scale)
-  --engines SPEC         comma list of name:profile replicas, where
-                         profile is edge | cloud | mcu (mcu is the
+  --engines SPEC         comma list of name:profile[:max_len] replicas,
+                         where profile is edge | cloud | mcu (mcu is the
                          unattested endpoint -- the router will keep
-                         personal/confidential work off it)
+                         personal/confidential work off it); max_len
+                         overrides --max-len per engine (heterogeneous
+                         context budgets migrate via repack_slot)
   --slots N              request slots per engine (default 4)
   --max-len N            per-slot context budget (default 128)
   --requests N           synthetic mixed-sensitivity request count
@@ -24,6 +32,16 @@ Flags
                          its in-flight requests are re-placed from
                          shadow checkpoints and resume on survivors
   --drain NAME@STEP      live-migrate everything off NAME at step STEP
+  --spec-tiers SPEC      comma list of draft:verify engine pairs; each
+                         pair drafts greedily-served requests on the
+                         draft engine and teacher-force verifies them on
+                         the verify engine via a one-time slot hand-off
+  --spec-gamma N         draft tokens per verify round (default 4)
+  --drafter-temperature F  draft-tier sampling temperature (committed
+                         output stays the target's greedy choice)
+  --drafter-top-k N      draft-tier top-k (default 0 = full vocab)
+  --verify-mode MODE     stepwise (bit-exact, default) | wide (one
+                         multi-query pass; see fleet.speculative docs)
   --seed N               rng seed for prompts and engines
 """
 
@@ -42,6 +60,16 @@ def parse_event(spec: str | None) -> tuple[str, int] | None:
     return name, int(step)
 
 
+def parse_tiers(spec: str | None) -> dict[str, str]:
+    if not spec:
+        return {}
+    pairs = {}
+    for item in spec.split(","):
+        draft, _, verify = item.partition(":")
+        pairs[draft] = verify
+    return pairs
+
+
 def main():
     ap = argparse.ArgumentParser(
         description="serve a request stream over a heterogeneous fleet")
@@ -58,6 +86,12 @@ def main():
     ap.add_argument("--rebalance-every", type=int, default=0)
     ap.add_argument("--fail", default=None, metavar="NAME@STEP")
     ap.add_argument("--drain", default=None, metavar="NAME@STEP")
+    ap.add_argument("--spec-tiers", default=None, metavar="DRAFT:VERIFY")
+    ap.add_argument("--spec-gamma", type=int, default=4)
+    ap.add_argument("--drafter-temperature", type=float, default=0.0)
+    ap.add_argument("--drafter-top-k", type=int, default=0)
+    ap.add_argument("--verify-mode", default="stepwise",
+                    choices=["stepwise", "wide"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -68,8 +102,7 @@ def main():
     from repro.configs.tiny import make_tiny
     from repro.core import daemon
     from repro.core.attestation import TrustAuthority
-    from repro.fleet import (EngineHandle, FleetController, Rebalancer,
-                             FleetTelemetry)
+    from repro.fleet import EngineHandle, FleetController, Rebalancer
     from repro.models.init import init_params
     from repro.serving.engine import Engine, Request
 
@@ -80,19 +113,32 @@ def main():
 
     handles = []
     for i, spec in enumerate(args.engines.split(",")):
-        name, _, prof = spec.partition(":")
+        parts = spec.split(":")
+        name, prof = parts[0], parts[1] if len(parts) > 1 else ""
         if prof not in PROFILES:
             ap.error(f"unknown profile {prof!r} in --engines {spec!r} "
                      f"(choose from {sorted(PROFILES)})")
         profile = getattr(daemon, PROFILES[prof])
-        eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
+        max_len = int(parts[2]) if len(parts) > 2 else args.max_len
+        eng = Engine(cfg, params, slots=args.slots, max_len=max_len,
                      seed=args.seed + i)
         handles.append(EngineHandle(name, eng, profile))
+    spec_tiers = parse_tiers(args.spec_tiers)
+    for dname, vname in spec_tiers.items():
+        if dname not in {h.name for h in handles} or \
+                vname not in {h.name for h in handles}:
+            ap.error(f"--spec-tiers pair {dname}:{vname} names an "
+                     "engine missing from --engines")
     fleet = FleetController(
         handles, authority=TrustAuthority(),
         balancer=Rebalancer(sync_every=args.sync_every),
         queue_limit=args.queue_limit,
-        rebalance_every=args.rebalance_every)
+        rebalance_every=args.rebalance_every,
+        spec_tiers=spec_tiers,
+        spec_options={"gamma": args.spec_gamma,
+                      "drafter_temperature": args.drafter_temperature,
+                      "drafter_top_k": args.drafter_top_k,
+                      "verify_mode": args.verify_mode})
 
     rng = np.random.default_rng(args.seed)
     sens = ["public", "personal", "confidential"]
@@ -144,6 +190,9 @@ def main():
         print(f"{rid}[{req.sensitivity:12s}] via {route}: "
               f"{req.output[:8]}{'...' if len(req.output) > 8 else ''}")
     print(json.dumps(fleet.telemetry.summary(), indent=1))
+    for dname, spec in fleet.spec_controllers.items():
+        print(f"speculative tier {dname}->{spec.verify.name}: "
+              f"{json.dumps(spec.stats.summary())}")
     print(f"simulated wire time: {fleet.fabric.clock():.3f}s "
           f"({len(fleet.telemetry.migrations)} live migrations)")
 

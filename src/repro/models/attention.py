@@ -237,21 +237,27 @@ def flash_full(q, k, v, *, softcap=0.0, block=512, kv_len=None):
 
 def decode_attend(q, k_cache, v_cache, abs_pos, positions, *,
                   window=0, softcap=0.0):
-    """Single-token attention against a cache.
+    """Cached attention for decode-style queries.
 
-    q: (B, 1, H, D); k_cache/v_cache: (B, Sc, KV, D); abs_pos: (B, Sc)
-    absolute position of each cache slot (-1 = empty); positions: (B,)
-    absolute position of the query token.
+    q: (B, Sq, H, D); k_cache/v_cache: (B, Sc, KV, D); abs_pos: (B, Sc)
+    absolute position of each cache slot (-1 = empty); positions: (B,) a
+    single absolute position per batch row (the classic one-token decode
+    step) or (B, Sq) per-query positions (speculative *verify* windows:
+    gamma+1 teacher-forced queries score a drafted tail in one pass, each
+    query causally masked at its own position).
     """
-    B, _, H, D = q.shape
+    B, Sq, H, D = q.shape
     KV = k_cache.shape[2]
     G = H // KV
-    qr = q.reshape(B, 1, KV, G, D)
-    s = _gqa_scores(qr, k_cache, softcap, D ** -0.5)  # (B,KV,G,1,Sc)
-    valid = (abs_pos >= 0) & (abs_pos <= positions[:, None])
+    qr = q.reshape(B, Sq, KV, G, D)
+    s = _gqa_scores(qr, k_cache, softcap, D ** -0.5)  # (B,KV,G,Sq,Sc)
+    if positions.ndim == 1:
+        positions = positions[:, None]
+    qpos = positions[:, :, None]                      # (B, Sq, 1)
+    valid = (abs_pos[:, None, :] >= 0) & (abs_pos[:, None, :] <= qpos)
     if window:
-        valid &= abs_pos > (positions[:, None] - window)
-    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        valid &= abs_pos[:, None, :] > (qpos - window)
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
     o = _gqa_out(p, v_cache)
-    return o.reshape(B, 1, H, D).astype(q.dtype)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

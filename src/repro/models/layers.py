@@ -129,8 +129,11 @@ def attention_apply(p, x, *, cfg: ModelConfig, lspec: LayerSpec, mode: str,
 
     if mode == "decode":
         new_cache = _write_cache(cache, lspec, k, v, positions)
+        # positions ride through whole: one column is the classic single-
+        # token step; S>1 columns are a speculative verify window where
+        # every query carries its own causal horizon
         o = attn_ref.decode_attend(q, new_cache["k"], new_cache["v"],
-                                   new_cache["abs_pos"], positions[:, 0],
+                                   new_cache["abs_pos"], positions,
                                    window=window, softcap=cfg.attn_softcap)
     else:
         from repro.kernels import ops as kops

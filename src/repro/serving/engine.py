@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.model import forward, make_cache
+from repro.models.model import forward, make_cache, vocab_mask_logits
 from repro.serving.sampling import sample
 
 
@@ -134,6 +134,8 @@ class Engine:
         self._prefill_fn = jax.jit(partial(_prefill, cfg=cfg, mesh=mesh,
                                            rules=rules),
                                    static_argnames=("slot", "plen"))
+        self._verify_fn = jax.jit(partial(_verify_window, cfg=cfg,
+                                          mesh=mesh, rules=rules))
 
     # -- state ------------------------------------------------------------
     def _fresh_state(self, seed: int) -> EngineState:
@@ -174,8 +176,13 @@ class Engine:
                                       slot=slot, plen=plen)
         return True
 
-    def step(self) -> dict[str, int]:
-        """One batched decode step; returns {rid: token} emitted."""
+    def step(self, *, auto_retire: bool = True) -> dict[str, int]:
+        """One batched decode step; returns {rid: token} emitted.
+
+        ``auto_retire=False`` keeps slots open past ``max_new_tokens``:
+        a speculative drafting tier appends *uncommitted* tokens to
+        ``req.output`` and must retire/roll back explicitly after the
+        verifier rules on them."""
         if not self.requests:
             return {}
         self.state, toks = self._decode_fn(self.params, self.state)
@@ -187,7 +194,7 @@ class Engine:
             t = int(toks[slot])
             req.output.append(t)
             emitted[req.rid] = t
-            if len(req.output) >= req.max_new_tokens:
+            if auto_retire and len(req.output) >= req.max_new_tokens:
                 req.done = True
                 self.retire(slot)
         return emitted
@@ -260,6 +267,144 @@ class Engine:
     def slot_like(self):
         """abstract SlotArrays (shapes/dtypes) for wire deserialization."""
         return jax.eval_shape(lambda: _slot_arrays(self.state, 0))
+
+    # -- speculative verify tier (fleet layer) ------------------------------
+    @property
+    def supports_wide_verify(self) -> bool:
+        """Wide (multi-query) verify windows need every mixer to be
+        cache-attention; recurrent mixers step one token at a time."""
+        return (not self.cfg.cross_attention
+                and not self.cfg.encoder_blocks
+                and all(ls.mixer in ("attn", "local")
+                        for b in self.cfg.blocks for ls in b.layers))
+
+    def verify_slots(self, drafts: dict[int, list[int]], *,
+                     width: int | None = None) -> dict[int, tuple[int, int]]:
+        """Teacher-forced batch verification of drafted tails.
+
+        ``drafts[slot]`` holds the tokens a draft tier proposed for that
+        slot since its last committed position.  ONE wide forward pass
+        (gamma+1 queries per slot, every query causally masked at its own
+        position) scores all windows of all verifying slots together --
+        the batched analogue of core/speculation's one-wide-matmul target
+        pass.  Greedy acceptance: a draft token is accepted iff it equals
+        the target argmax given the accepted prefix; the first rejection
+        cuts the tail and the target's own argmax at the cut (or the
+        bonus token after a fully-accepted window) is committed instead.
+
+        Numerics caveat: the wide program's matmul shapes differ from the
+        one-token decode program's, so XLA rounds differently and greedy
+        choices on knife-edge logits can deviate from a pure decode run
+        of this same engine (production speculative-decoding stacks share
+        this property).  ``verify_slots_stepwise`` trades the wide pass
+        for bit-exactness when token-identical output is the contract.
+
+        Slot state advances to the committed prefix (tokens, position,
+        last_token); rows the rejected suffix dirtied stay masked by
+        ``abs_pos`` until decode naturally rewrites them in place.
+        Returns {slot: (n_accepted, correction_token | None)} -- the
+        correction token is present exactly when the window was cut
+        short (None = fully accepted, nothing to splice)."""
+        assert drafts, "nothing to verify"
+        g = width if width is not None else max(map(len, drafts.values()))
+        B = self.slots
+        arr = np.zeros((B, g), np.int32)
+        cnt = np.zeros((B,), np.int32)
+        mask = np.zeros((B,), bool)
+        pos = np.asarray(self.state.positions)
+        for slot, toks in drafts.items():
+            assert slot in self.requests, f"slot {slot} not in use"
+            assert 0 < len(toks) <= g, (slot, len(toks), g)
+            assert pos[slot] + g + 1 <= self.max_len, \
+                f"verify window overruns max_len at slot {slot}"
+            arr[slot, :len(toks)] = toks
+            cnt[slot] = len(toks)
+            mask[slot] = True
+        self.state, n_acc, commit = self._verify_fn(
+            self.params, self.state, jnp.asarray(arr), jnp.asarray(cnt),
+            jnp.asarray(mask))
+        n_acc, commit = np.asarray(n_acc), np.asarray(commit)
+        return {slot: (int(n_acc[slot]),
+                       None if commit[slot] < 0 else int(commit[slot]))
+                for slot in drafts}
+
+    def verify_slots_stepwise(self, drafts: dict[int, list[int]]) \
+            -> dict[int, tuple[int, int]]:
+        """Bit-exact verification: teacher-force the engine's OWN jitted
+        decode program over each drafted tail.
+
+        Every burst step runs ``_decode_fn`` -- the exact compiled
+        program a pure run of this engine uses -- so the greedy token it
+        emits *is* the pure-run token: acceptance (token equality) and
+        corrections are bit-exact by construction, not by numerical
+        accident.  Slots that finish (first rejection, or tail
+        exhausted) are mask-deactivated for the rest of the burst, the
+        same masking a partially-idle batch uses; all verifying slots
+        advance together, so the burst costs max(len(tail)) steps
+        regardless of how many slots verify.
+
+        Same contract as ``verify_slots``: the slot ends at its
+        committed prefix and the return maps slot -> (n_accepted,
+        correction_token | None)."""
+        assert drafts, "nothing to verify"
+        saved_active = self.state.active
+        burst = np.zeros((self.slots,), bool)
+        for slot, toks in drafts.items():
+            assert slot in self.requests, f"slot {slot} not in use"
+            assert toks, f"empty draft tail for slot {slot}"
+            burst[slot] = True
+        self.state = dataclasses.replace(
+            self.state, active=jnp.asarray(burst) & saved_active)
+        results: dict[int, tuple[int, int | None]] = {}
+        pending = {slot: list(toks) for slot, toks in drafts.items()}
+        step = 0
+        while pending:
+            self.state, toks = self._decode_fn(self.params, self.state)
+            toks = np.asarray(toks)
+            for slot in list(pending):
+                t = int(toks[slot])
+                if t != pending[slot][step]:          # rejection: t is
+                    results[slot] = (step, t)         # the correction,
+                elif step + 1 == len(pending[slot]):  # already committed
+                    results[slot] = (step + 1, None)
+                else:
+                    continue
+                del pending[slot]
+                self.state = dataclasses.replace(
+                    self.state,
+                    active=self.state.active.at[slot].set(False))
+            step += 1
+        self.state = dataclasses.replace(self.state, active=saved_active)
+        return results
+
+    def rollback_slot(self, slot: int, drafted: int, accepted: int,
+                      commit_token: int | None = None):
+        """Rewind a slot's speculative tail to the verified prefix.
+
+        Of the last ``drafted`` uncommitted tokens keep ``accepted`` and
+        splice ``commit_token`` (the verifier's correction or bonus) in
+        as the next committed token; ``commit_token=None`` drops the
+        whole tail (e.g. the verify tier vanished mid-round).  Cache rows
+        the dropped suffix wrote stay behind but are invisible -- their
+        ``abs_pos`` exceeds the rewound position -- and decode rewrites
+        each row in place before it ever becomes attendable again."""
+        s = self.state
+        p0 = int(s.positions[slot]) - drafted
+        assert p0 >= 0, (slot, drafted)
+        if commit_token is None:
+            new_pos = p0
+            last = s.tokens[slot, max(p0 - 1, 0)]
+            tokens = s.tokens
+        else:
+            assert 0 <= accepted <= drafted
+            new_pos = p0 + accepted + 1
+            last = jnp.int32(commit_token)
+            tokens = s.tokens.at[slot, new_pos - 1].set(commit_token)
+        self.state = dataclasses.replace(
+            s,
+            tokens=tokens,
+            positions=s.positions.at[slot].set(new_pos),
+            last_token=s.last_token.at[slot].set(last))
 
     def run(self, reqs: list[Request]) -> dict[str, list[int]]:
         """Convenience: serve a request list to completion."""
@@ -334,6 +479,78 @@ def _decode_step(params, state: EngineState, *, cfg, mesh, rules):
         rng=rng,
         step_count=state.step_count + 1,
     ), toks
+
+
+def _verify_window(params, state: EngineState, drafts, counts, verify,
+                   *, cfg, mesh, rules):
+    """Score gamma drafted tokens per slot in ONE forward pass and commit
+    the greedy-accepted prefix (+ correction/bonus token).
+
+    drafts: (B, g) proposed tokens (row b valid up to counts[b]);
+    verify: (B,) bool -- slots actually verifying this round.  The
+    window's inputs are (last_token, d_1 .. d_g) at absolute positions
+    (p0 .. p0+g): exactly the tokens a plain decode loop would have fed,
+    so greedy acceptance reproduces the verify engine's own output
+    bit-exactly.  Non-verifying slots compute on garbage but their state
+    (caches included) is masked back, mirroring ``_decode_step``."""
+    B, g = drafts.shape
+    W = g + 1
+    inputs = jnp.concatenate([state.last_token[:, None], drafts], axis=1)
+    pos = state.positions[:, None] + jnp.arange(W, dtype=jnp.int32)[None]
+    logits, caches, _ = forward(
+        params, {"tokens": inputs}, cfg=cfg, mode="decode",
+        caches=state.caches, positions=pos, mesh=mesh, rules=rules)
+    # greedy target choice, identical to sample()'s temperature-0 path
+    greedy = jnp.argmax(
+        vocab_mask_logits(logits, cfg).astype(jnp.float32),
+        -1).astype(jnp.int32)                              # (B, W)
+    j = jnp.arange(g, dtype=jnp.int32)[None]
+    match = (greedy[:, :g] == drafts) & (j < counts[:, None])
+    n_acc = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+    commit = jnp.take_along_axis(greedy, n_acc[:, None], axis=1)[:, 0]
+
+    # Correction tokens are committed only on a REJECTION.  A fully-
+    # accepted window must not take the Leviathan bonus token: neither
+    # tier has processed the window's last draft as an *input* yet, so
+    # advancing past it would leave a permanent hole in the KV rows at
+    # its position.  Committing exactly the accepted drafts keeps both
+    # tiers' caches gap-free (the next window's first input rewrites the
+    # boundary row).
+    full = n_acc == counts                                 # (B,) bool
+    n_commit = jnp.where(full, n_acc, n_acc + 1)
+    last_acc = jnp.take_along_axis(
+        drafts, jnp.maximum(n_acc - 1, 0)[:, None], axis=1)[:, 0]
+    new_last = jnp.where(full, last_acc, commit)
+
+    # committed window: accepted drafts, then (on rejection) the
+    # correction token, then whatever the token rows already held
+    old_win = jax.vmap(
+        lambda row, p: jax.lax.dynamic_slice(row, (p,), (W,))
+    )(state.tokens, state.positions)
+    drafts_w = jnp.concatenate(
+        [drafts, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    jw = jnp.arange(W, dtype=jnp.int32)[None]
+    new_win = jnp.where(jw < n_acc[:, None], drafts_w,
+                        jnp.where((jw == n_acc[:, None]) & ~full[:, None],
+                                  commit[:, None], old_win))
+    tokens = jax.vmap(
+        lambda row, win, p: jax.lax.dynamic_update_slice(row, win, (p,))
+    )(state.tokens, new_win, state.positions)
+
+    caches = jax.tree.map(
+        lambda new, old: jnp.where(
+            _bcast(verify, new.ndim, new.shape), new, old),
+        caches, state.caches)
+    state = dataclasses.replace(
+        state,
+        caches=caches,
+        tokens=jnp.where(verify[:, None], tokens, state.tokens),
+        positions=jnp.where(verify, state.positions + n_commit,
+                            state.positions),
+        last_token=jnp.where(verify, new_last, state.last_token),
+        step_count=state.step_count + 1,
+    )
+    return state, n_acc, jnp.where(full, -1, commit)
 
 
 def _bcast(active, ndim, shape):

@@ -8,6 +8,73 @@ import textwrap
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
+def synthetic_slot_snapshot(*, seed=0, repeats=1, max_len=16, kv_heads=1,
+                            head_dim=4, plen=2, out_len=0, max_new=4):
+    """A SlotSnapshot with engine-shaped cache rows but arbitrary
+    geometry, for migration-layer property tests that should not pay
+    for a real model."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.serving.engine import (Request, SlotArrays, SlotSnapshot,
+                                      request_to_dict)
+    rng = np.random.default_rng(seed)
+    pos = plen + out_len
+    assert pos + (max_new - out_len) <= max_len
+    # rows at indices >= pos are unwritten (+0.0, like a fresh cache)
+    row_mask = (np.arange(max_len) < pos)[None, :, None, None]
+    shape = (repeats, max_len, kv_heads, head_dim)
+    k = jnp.asarray(np.where(row_mask, rng.normal(size=shape), 0.0),
+                    jnp.bfloat16)
+    v = jnp.asarray(np.where(row_mask, rng.normal(size=shape), 0.0),
+                    jnp.bfloat16)
+    abs_pos = jnp.asarray(
+        np.concatenate([np.arange(pos), np.full(max_len - pos, -1)]),
+        jnp.int32)
+    abs_pos = jnp.broadcast_to(abs_pos, (repeats, max_len))
+    tokens = jnp.asarray(
+        np.concatenate([rng.integers(1, 100, pos),
+                        np.zeros(max_len - pos)]), jnp.int32)
+    req = Request("syn", np.asarray(rng.integers(1, 100, plen)),
+                  max_new_tokens=max_new)
+    req.output = list(map(int, rng.integers(1, 100, out_len)))
+    arrays = SlotArrays(
+        caches=[[{"attn": {"k": k, "v": v, "abs_pos": abs_pos}}]],
+        tokens=tokens,
+        position=jnp.int32(pos),
+        last_token=jnp.int32(int(tokens[max(pos - 1, 0)])),
+        rng=jax.random.key(seed),
+        temperature=jnp.float32(0.0),
+        top_k=jnp.int32(0),
+    )
+    return SlotSnapshot(arrays=arrays, request=request_to_dict(req),
+                        config_name="synthetic", step=out_len)
+
+
+def assert_repack_roundtrip(snap, grow_to: int):
+    """pack -> repack(grow) -> repack(shrink back) -> pack must be
+    bit-exact on the wire; growing must never fail, shrinking below
+    position+remaining must raise loudly."""
+    import pytest
+    from repro.core.migration import pack_slot, repack_slot
+    src_len = int(snap.arrays.tokens.shape[-1])
+    assert grow_to >= src_len
+    wire0 = pack_slot(snap)
+    grown = repack_slot(snap, grow_to)
+    assert int(grown.arrays.tokens.shape[-1]) == grow_to
+    assert pack_slot(repack_slot(grown, src_len)) == wire0
+    # the tight shrink bound: position + remaining rows must survive
+    need = int(snap.arrays.position) + snap.remaining_tokens
+    if need <= src_len:  # tightest legal shrink of the grown snapshot
+        again = repack_slot(grown, need)
+        assert int(again.arrays.tokens.shape[-1]) == need
+        assert pack_slot(repack_slot(repack_slot(again, grow_to),
+                                     src_len)) == wire0
+    if need > 0:
+        with pytest.raises(ValueError):
+            repack_slot(grown, need - 1)
+
+
 def run_multidevice(snippet: str, devices: int = 8, timeout: int = 600):
     """Run a python snippet in a subprocess with N fake CPU devices.
 

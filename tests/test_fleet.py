@@ -9,10 +9,10 @@ import pytest
 from repro.configs import get
 from repro.configs.tiny import make_tiny
 from repro.core.attestation import TrustAuthority
-from repro.core.channel import Channel, Fabric, NetworkCondition
+from repro.core.channel import Channel
 from repro.core.daemon import CLOUD, EDGE, MCU, DeviceProfile
 from repro.core.migration import pack_slot, unpack_slot
-from repro.fleet import (EngineHandle, FleetController, Rebalancer, Router,
+from repro.fleet import (EngineHandle, FleetController, Rebalancer,
                          percentile)
 from repro.models.init import init_params
 from repro.serving.engine import Engine, Request

@@ -1,0 +1,410 @@
+"""Speculative tier hand-off: draft on edge, verify on cloud, per
+request -- acceptance equivalence, heterogeneous max_len hand-off,
+rejection bounce-back, sensitivity fallback, and the repack/percentile
+satellites."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.configs.tiny import make_tiny
+from repro.core.attestation import TrustAuthority
+from repro.core.daemon import CLOUD, EDGE, DeviceProfile
+from repro.core.migration import pack_slot, repack_slot
+from repro.core.validation import MarkerValidator
+from repro.fleet import EngineHandle, FleetController, percentile
+from repro.models.init import init_params
+from repro.serving.engine import Engine, Request
+
+CFG = make_tiny(get("llama-1.5b"))
+PARAMS = None
+SLOTS = 3
+EDGE_LEN, CLOUD_LEN = 64, 160
+
+
+def _params():
+    global PARAMS
+    if PARAMS is None:
+        PARAMS = init_params(CFG, jax.random.key(0))
+    return PARAMS
+
+
+def mk_engine(seed=0, max_len=EDGE_LEN, slots=SLOTS):
+    return Engine(CFG, _params(), slots=slots, max_len=max_len, seed=seed)
+
+
+def mk_spec_fleet(edge_len=EDGE_LEN, cloud_len=CLOUD_LEN,
+                  cloud_profile=CLOUD, **spec_options):
+    handles = [
+        EngineHandle("edge", mk_engine(seed=0, max_len=edge_len), EDGE),
+        EngineHandle("cloud", mk_engine(seed=1, max_len=cloud_len),
+                     cloud_profile),
+    ]
+    return FleetController(handles, authority=TrustAuthority(),
+                           spec_tiers={"edge": "cloud"},
+                           spec_options=spec_options)
+
+
+def reference_output(prompt, max_new, *, max_len, seed=1234):
+    """The request served alone on an engine with the *same geometry*
+    (slots, max_len) as the tier under test: greedy decode is
+    bit-reproducible only within one compiled program shape."""
+    eng = mk_engine(seed=seed, max_len=max_len)
+    req = Request("ref", np.asarray(prompt), max_new_tokens=max_new)
+    eng.add_request(req)
+    while not req.done:
+        eng.step()
+    return req.output
+
+
+def mk_requests(n, max_new=10, **kw):
+    rng = np.random.default_rng(7)
+    return [Request(f"r{i}", rng.integers(5, CFG.vocab_size, 6),
+                    max_new_tokens=max_new, **kw) for i in range(n)]
+
+
+# -- acceptance equivalence (the tentpole contract) ---------------------------
+
+def test_spec_output_equals_verify_engine_solo_same_max_len():
+    """Greedy speculative-tier output is token-identical to running the
+    request entirely on the verify engine (equal context budgets)."""
+    fleet = mk_spec_fleet(cloud_len=EDGE_LEN, gamma=4)
+    reqs = mk_requests(3)
+    outs = fleet.run(reqs)
+    st = fleet.spec_controllers["edge"].stats
+    assert st.handoffs == 3 and st.local_fallbacks == 0
+    for r in reqs:
+        assert outs[r.rid] == reference_output(r.prompt, 10,
+                                               max_len=EDGE_LEN), r.rid
+        assert fleet.placements[r.rid] == ["edge", "cloud"]
+    # greedy drafter against the same weights: nothing to reject
+    assert st.acceptance_rate == 1.0 and st.corrections == 0
+
+
+def test_spec_output_equals_verify_engine_solo_heterogeneous_max_len():
+    """The lifted PR-1 limitation: a short-context edge engine hands off
+    to a long-context cloud engine (repack_slot re-layout) and committed
+    output still equals the cloud engine running alone."""
+    fleet = mk_spec_fleet(gamma=4)
+    assert fleet.handles["edge"].engine.max_len != \
+        fleet.handles["cloud"].engine.max_len
+    reqs = mk_requests(3)
+    outs = fleet.run(reqs)
+    assert fleet.spec_controllers["edge"].stats.handoffs == 3
+    for r in reqs:
+        assert outs[r.rid] == reference_output(r.prompt, 10,
+                                               max_len=CLOUD_LEN), r.rid
+
+
+def test_rejection_bounce_back_hot_drafter():
+    """A hot drafter proposes junk: the verifier cuts the tails, bounces
+    the rejected suffixes back (draft slots rewind), and the committed
+    stream STILL equals the verify engine's own greedy output."""
+    fleet = mk_spec_fleet(gamma=4, drafter_temperature=1.2,
+                          drafter_top_k=8)
+    reqs = mk_requests(3)
+    outs = fleet.run(reqs)
+    st = fleet.spec_controllers["edge"].stats
+    assert st.corrections > 0, "hot drafter must be rejected sometimes"
+    assert st.acceptance_rate < 1.0
+    assert st.proposed > st.accepted
+    for r in reqs:
+        assert outs[r.rid] == reference_output(r.prompt, 10,
+                                               max_len=CLOUD_LEN), r.rid
+
+
+def test_sensitivity_blocked_falls_back_to_local_drafting():
+    """Confidential work may not land on an unattested verify tier: the
+    request never hands off, decodes to completion on the draft engine
+    alone, and is still greedy-exact for the draft geometry."""
+    unattested = DeviceProfile("cloudX", peak_flops=197e12, hbm_bw=819e9,
+                               chips=8, attested=False)
+    fleet = mk_spec_fleet(cloud_profile=unattested)
+    conf = Request("conf", np.arange(5), max_new_tokens=8,
+                   sensitivity="confidential")
+    pub = Request("pub", np.arange(2, 7), max_new_tokens=8)
+    outs = fleet.run([conf, pub])
+    st = fleet.spec_controllers["edge"].stats
+    assert st.local_fallbacks >= 1
+    assert fleet.placements["conf"] == ["edge"]     # never left the edge
+    assert outs["conf"] == reference_output(np.arange(5), 8,
+                                            max_len=EDGE_LEN)
+    # public traffic still speculates on the (unattested) verify tier
+    assert fleet.placements["pub"] == ["edge", "cloud"]
+    assert outs["pub"] == reference_output(np.arange(2, 7), 8,
+                                           max_len=CLOUD_LEN)
+
+
+def test_non_greedy_requests_stay_local():
+    fleet = mk_spec_fleet()
+    hot = Request("hot", np.arange(5), max_new_tokens=8, temperature=0.9,
+                  top_k=8)
+    outs = fleet.run([hot])
+    assert fleet.spec_controllers["edge"].stats.local_fallbacks == 1
+    assert fleet.placements["hot"] == ["edge"]
+    assert len(outs["hot"]) == 8
+
+
+def test_validator_halts_speculative_request_mid_stream():
+    """core/validation runs on the committed stream in parallel with the
+    next draft round and can stop the request before max_new."""
+    fleet = mk_spec_fleet(validators=[
+        MarkerValidator("harmful_content", "harmful", range(10, 20))])
+    bad = Request("bad", np.asarray([12, 14, 16, 18, 12, 14, 16, 18]),
+                  max_new_tokens=16)
+    outs = fleet.run([bad])
+    st = fleet.spec_controllers["edge"].stats
+    assert st.interventions == 1
+    assert len(outs["bad"]) < 16
+    assert not fleet.handles["edge"].engine.requests     # slots freed
+    assert not fleet.handles["cloud"].engine.requests
+
+
+def test_foreign_failover_slot_onto_draft_engine_completes():
+    """A normal engine's failover slots may land on a *draft* engine
+    (never on the reserved verify engine): the tier controller plain-
+    decodes requests it never attached, so nothing is silently lost."""
+    from repro.core.daemon import MCU
+    handles = [
+        EngineHandle("edge", mk_engine(seed=0), EDGE),
+        EngineHandle("cloud", mk_engine(seed=1, max_len=CLOUD_LEN),
+                     CLOUD),
+        EngineHandle("mcu", mk_engine(seed=2), MCU),
+    ]
+    fleet = FleetController(handles, authority=TrustAuthority(),
+                            spec_tiers={"edge": "cloud"})
+    reqs = mk_requests(5, max_new=10)           # public: mcu-eligible
+    for r in reqs:
+        assert fleet.submit(r)
+    for _ in range(4):
+        fleet.step()
+    moved = [rid for rid, (_, h, _) in fleet.inflight.items()
+             if h == "mcu"]
+    assert moved, "mcu must hold in-flight work to fail over"
+    fleet.fail("mcu")
+    outs = fleet.run()
+    assert len(outs) == 5
+    for rid in moved:
+        assert fleet.placements[rid][-1] != "cloud"   # never the verify
+        assert outs[rid] == reference_output(
+            fleet.done[rid].prompt, 10, max_len=EDGE_LEN), rid
+
+
+def test_drain_of_tier_paired_engine_is_refused():
+    fleet = mk_spec_fleet()
+    fleet.submit(mk_requests(1)[0])
+    fleet.step()
+    with pytest.raises(ValueError, match="pinned"):
+        fleet.drain("edge")
+    with pytest.raises(ValueError, match="pinned"):
+        fleet.drain("cloud")
+
+
+def test_wide_mode_refused_for_unsupported_mixers(monkeypatch):
+    """verify_mode='wide' must fail loudly when the verify engine's
+    mixers cannot score multi-query windows (recurrent mixers step one
+    token at a time), instead of silently mis-verifying."""
+    from repro.core.channel import Fabric
+    from repro.fleet import SpeculativeTierController
+    verify = EngineHandle("v", mk_engine(seed=1), CLOUD)
+    draft = EngineHandle("d", mk_engine(seed=0), EDGE)
+    monkeypatch.setattr(Engine, "supports_wide_verify",
+                        property(lambda self: False))
+    with pytest.raises(ValueError, match="wide"):
+        SpeculativeTierController(
+            draft, verify, fabric=Fabric(), whitelist=set(),
+            measurement="m", verify_mode="wide")
+    # stepwise is always legal
+    SpeculativeTierController(draft, verify, fabric=Fabric(),
+                              whitelist=set(), measurement="m")
+
+
+def test_verify_engine_failure_degrades_to_local():
+    """Losing the verify tier mid-flight drops uncommitted drafts and
+    finishes the requests local-only -- still greedy-exact."""
+    fleet = mk_spec_fleet(gamma=4)
+    reqs = mk_requests(2, max_new=12)
+    for r in reqs:
+        assert fleet.submit(r)
+    for _ in range(3):
+        fleet.step()
+    fleet.fail("cloud")
+    assert not fleet.spec_controllers      # pair dissolved
+    assert fleet.handles["edge"].spec_role is None
+    outs = fleet.run()
+    for r in reqs:
+        assert outs[r.rid] == reference_output(r.prompt, 12,
+                                               max_len=EDGE_LEN), r.rid
+
+
+def test_wide_verify_mode_mechanics():
+    """The one-wide-pass verify path: same protocol mechanics (full
+    completion, rejections on a hot drafter).  Bit-equality with a pure
+    decode run is NOT asserted -- the wide program's numerics may differ
+    on knife-edge logits (see fleet.speculative docstring)."""
+    fleet = mk_spec_fleet(gamma=4, verify_mode="wide",
+                          drafter_temperature=1.2, drafter_top_k=8)
+    reqs = mk_requests(2, max_new=8)
+    outs = fleet.run(reqs)
+    st = fleet.spec_controllers["edge"].stats
+    assert all(len(outs[r.rid]) == 8 for r in reqs)
+    assert st.corrections > 0
+    assert st.rounds > 0 and st.proposed >= st.accepted
+
+
+# -- engine-level verify/rollback units --------------------------------------
+
+def test_verify_slots_stepwise_teacher_forcing_roundtrip():
+    """Engine-level: stepwise verification accepts exactly the pure-run
+    prefix and splices the pure-run correction."""
+    cloud = mk_engine(seed=3, max_len=EDGE_LEN)
+    req = Request("r", np.arange(6), max_new_tokens=12)
+    cloud.add_request(req)
+    ref = reference_output(np.arange(6), 12, max_len=EDGE_LEN)
+    # propose the true continuation with one token vandalised
+    tail = list(ref[:4])
+    tail[2] = (tail[2] + 1) % CFG.vocab_size
+    n, tok = cloud.verify_slots_stepwise({req.slot: tail})[req.slot]
+    assert n == 2
+    assert tok == ref[2]                  # the correction is the truth
+    # the slot continues bit-exactly after the bounce
+    req.output[:] = ref[:3]
+    while not req.done:
+        cloud.step()
+    assert req.output == ref
+
+
+def test_rollback_slot_rewinds_draft_tail():
+    edge = mk_engine(seed=5)
+    twin = mk_engine(seed=5)
+    req = Request("r", np.arange(4), max_new_tokens=10)
+    twin_req = Request("r", np.arange(4), max_new_tokens=10)
+    edge.add_request(req)
+    twin.add_request(twin_req)
+    for _ in range(2):
+        edge.step(auto_retire=False)
+        twin.step(auto_retire=False)
+    # edge drafts 3 junk-policy tokens, then rewinds keeping none and
+    # splicing the twin's (true greedy) next token
+    edge.state = dataclasses.replace(
+        edge.state,
+        temperature=edge.state.temperature.at[req.slot].set(1.5),
+        top_k=edge.state.top_k.at[req.slot].set(4))
+    for _ in range(3):
+        edge.step(auto_retire=False)
+    truth = twin.step(auto_retire=False)["r"]
+    edge.rollback_slot(req.slot, 3, 0, truth)
+    edge.state = dataclasses.replace(
+        edge.state,
+        temperature=edge.state.temperature.at[req.slot].set(0.0),
+        top_k=edge.state.top_k.at[req.slot].set(0))
+    req.output[:] = req.output[:2] + [truth]
+    while not req.done:
+        edge.step()
+        if len(req.output) >= 10:
+            req.done = True
+    while not twin_req.done:
+        twin.step()
+        if len(twin_req.output) >= 10:
+            twin_req.done = True
+    assert req.output == twin_req.output
+
+
+# -- repack_slot (heterogeneous max_len re-layout) ---------------------------
+
+def test_repack_slot_grow_then_shrink_roundtrips_bit_exactly():
+    src = mk_engine(seed=9)
+    src.add_request(Request("r", np.arange(5), max_new_tokens=20))
+    for _ in range(3):
+        src.step()
+    snap = src.extract_slot(0, keep=True)
+    grown = repack_slot(snap, CLOUD_LEN)
+    assert grown.arrays.tokens.shape[-1] == CLOUD_LEN
+    back = repack_slot(grown, EDGE_LEN)
+    assert pack_slot(back) == pack_slot(snap)      # wire-level identical
+
+
+def test_repack_slot_grow_preserves_position_and_rng():
+    src = mk_engine(seed=9)
+    src.add_request(Request("r", np.arange(5), max_new_tokens=20,
+                            temperature=0.7, top_k=4))
+    src.step()
+    snap = src.extract_slot(0, keep=True)
+    grown = repack_slot(snap, CLOUD_LEN)
+    assert int(grown.arrays.position) == int(snap.arrays.position)
+    assert (jax.random.key_data(grown.arrays.rng)
+            == jax.random.key_data(snap.arrays.rng)).all()
+    assert float(grown.arrays.temperature) == float(np.float32(0.7))
+    # appended rows are empty: sentinel -1 abs_pos, zero tokens
+    flat, _ = jax.tree_util.tree_flatten_with_path(grown.arrays.caches)
+    for path, leaf in flat:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name == "abs_pos":
+            assert (np.asarray(leaf)[..., EDGE_LEN:] == -1).all()
+    assert (np.asarray(grown.arrays.tokens)[EDGE_LEN:] == 0).all()
+
+
+def test_repack_slot_shrink_rejects_tail_truncation_loudly():
+    src = mk_engine(seed=9, max_len=CLOUD_LEN)
+    src.add_request(Request("r", np.arange(40), max_new_tokens=80))
+    src.step()
+    snap = src.extract_slot(0, keep=True)
+    with pytest.raises(ValueError, match="tail truncation"):
+        repack_slot(snap, EDGE_LEN)     # 40 + 80 live rows > 64
+
+
+def test_heterogeneous_drain_migrates_and_finishes():
+    """The fleet-level form of the lifted limitation: draining a
+    max_len-64 engine live-migrates its slots into a max_len-160 peer
+    (grow), while a too-small peer is skipped instead of truncating."""
+    handles = [
+        EngineHandle("a", mk_engine(seed=0, max_len=EDGE_LEN), EDGE),
+        EngineHandle("b", mk_engine(seed=1, max_len=CLOUD_LEN), CLOUD),
+    ]
+    fleet = FleetController(handles, authority=TrustAuthority())
+    reqs = mk_requests(2, max_new=12)
+    for r in reqs:
+        fleet.submit(r)
+    for _ in range(3):
+        fleet.step()
+    loaded = max(fleet.handles,
+                 key=lambda n: len(fleet.handles[n].engine.requests))
+    n_inflight = len(fleet.handles[loaded].engine.requests)
+    assert fleet.drain(loaded) == n_inflight
+    outs = fleet.run()
+    assert len(outs) == 2 and all(len(v) == 12 for v in outs.values())
+    assert all(m.reason == "drain" for m in fleet.telemetry.migrations)
+
+
+def test_drain_skips_target_too_small_for_slot():
+    handles = [
+        EngineHandle("big", mk_engine(seed=0, max_len=CLOUD_LEN), EDGE),
+        EngineHandle("small", mk_engine(seed=1, max_len=32), CLOUD),
+    ]
+    fleet = FleetController(handles, authority=TrustAuthority())
+    # needs 40 + 80 = 120 rows: can never fit the 32-row engine
+    fleet.submit(Request("r", np.arange(40), max_new_tokens=80))
+    fleet.step()
+    assert fleet.placement_of("r") == "big"
+    assert fleet.drain("big") == 0          # skipped, not truncated
+    assert "r" in {q.rid for q in fleet.handles["big"].engine.requests.values()}
+
+
+# -- telemetry percentile satellite ------------------------------------------
+
+def test_percentile_nearest_rank_known_distribution():
+    xs = [float(x) for x in range(1, 21)]       # 1..20
+    np.random.default_rng(0).shuffle(xs)        # order must not matter
+    assert percentile(xs, 50) == 10.0
+    assert percentile(xs, 95) == 19.0           # NOT the max (rank 19)
+    assert percentile(xs, 99) == 20.0
+    assert percentile(xs, 100) == 20.0
+    assert percentile(xs, 0) == 1.0
+    big = [float(x) for x in range(1, 1001)]
+    assert percentile(big, 99.9) == 999.0       # float-dust off-by-one
+    assert percentile(big, 95) == 950.0
+    assert percentile([], 50) == 0.0            # empty window
+    assert percentile([3.0], 99) == 3.0

@@ -131,3 +131,32 @@ def test_spec_verify_greedy_is_prefix_match(g, V, seed):
         expect_n += 1
     assert int(n) == expect_n
     assert int(nxt) == t_arg[expect_n]
+
+
+@given(st.integers(0, 10 ** 6),      # seed
+       st.integers(1, 3),            # cache stack repeats
+       st.integers(1, 2),            # kv heads
+       st.sampled_from([4, 8]),      # head dim
+       st.integers(1, 6),            # prompt length
+       st.integers(0, 4),            # tokens already decoded
+       st.integers(1, 6),            # max_new_tokens headroom
+       st.integers(0, 24))           # extra rows when growing
+@settings(max_examples=25, deadline=None)
+def test_repack_slot_roundtrip_bit_exact(seed, repeats, kv, dh, plen,
+                                         out_len, headroom, grow_extra):
+    """pack_slot -> repack_slot -> unpack_slot round-trips bit-exactly
+    for random slot shapes and both max_len directions; shrinking that
+    would truncate live tail state is rejected loudly."""
+    from tests.helpers import (assert_repack_roundtrip,
+                               synthetic_slot_snapshot)
+    from repro.core.migration import pack_slot, unpack_slot
+    max_new = out_len + headroom
+    max_len = plen + max_new + seed % 5          # a little slack
+    snap = synthetic_slot_snapshot(
+        seed=seed, repeats=repeats, max_len=max_len, kv_heads=kv,
+        head_dim=dh, plen=plen, out_len=out_len, max_new=max_new)
+    # the wire itself round-trips: pack(unpack(pack(x))) == pack(x)
+    wire = pack_slot(snap)
+    like = jax.eval_shape(lambda: snap.arrays)
+    assert pack_slot(unpack_slot(wire, like)) == wire
+    assert_repack_roundtrip(snap, max_len + grow_extra)
