@@ -1,5 +1,7 @@
 """Fleet orchestration overheads: scaling vs a single engine, the cost
-of shadow checkpoints, and per-slot live-migration latency.
+of shadow checkpoints, per-slot live-migration latency, and the
+lifecycle API under a mixed-priority workload (preemption-park latency
+and completion percentiles by priority class).
 
     PYTHONPATH=src python benchmarks/bench_fleet.py
 """
@@ -22,7 +24,6 @@ def mk_requests(cfg):
 
 
 def mk_fleet(cfg, params, n_engines, *, sync_every=1):
-    import jax
     from repro.core.attestation import TrustAuthority
     from repro.core.daemon import CLOUD, EDGE, DeviceProfile
     from repro.fleet import EngineHandle, FleetController, Rebalancer
@@ -80,7 +81,62 @@ def main():
         dst.retire(req.slot)
 
     emit("fleet/unpack_inject_slot", timeit(inject) * 1e6)
+
+    bench_priority_workload(cfg, params)
     write_bench_json("fleet")
+
+
+def bench_priority_workload(cfg, params):
+    """Mixed-priority stream through one scarce fleet: low-priority
+    batch work is in flight when high-priority interactive requests
+    arrive and preempt it (park via extract_slot/pack_slot).  Reports
+    the preemption round-trip (park -> resumed) latency and completion
+    latency p50/p99 per priority class, all off the ticket event log."""
+    from repro.core.attestation import TrustAuthority
+    from repro.core.daemon import EDGE
+    from repro.fleet import (EngineHandle, FleetController, RequestSpec,
+                             percentile)
+    from repro.serving.engine import Engine
+
+    rng = np.random.default_rng(0)
+    fleet = FleetController(
+        [EngineHandle("e0", Engine(cfg, params, slots=2, max_len=64,
+                                   seed=0), EDGE)],
+        authority=TrustAuthority())
+
+    def spec(i, prio):
+        return RequestSpec(rid=f"p{prio}-{i}",
+                           prompt=rng.integers(5, cfg.vocab_size, 6),
+                           max_new_tokens=MAX_NEW, priority=prio)
+
+    # phase 1: low-priority batch work fills the fleet...
+    tickets = [fleet.submit(spec(i, 0)) for i in range(4)]
+    for _ in range(4):
+        fleet.step()
+    # ...phase 2: high/medium-priority interactive work arrives late
+    tickets += [fleet.submit(spec(i, 10)) for i in range(2)]
+    tickets += [fleet.submit(spec(i, 5)) for i in range(2)]
+    for t in tickets:
+        t.result()
+
+    tel = fleet.telemetry
+    emit("fleet/preemptions", float(tel.preemptions), "parked slots")
+    emit("fleet/preempt_park_resume_p50",
+         percentile(tel.preempt_wait_s, 50) * 1e6, "park->resume wait")
+    emit("fleet/preempt_park_resume_p99",
+         percentile(tel.preempt_wait_s, 99) * 1e6)
+    by_prio = {}
+    for t in tickets:
+        done = [ev.t for ev in t.events if ev.dst == "done"]
+        if done:
+            by_prio.setdefault(t.spec.priority, []).append(
+                done[0] - t.submitted_at)
+    for prio in sorted(by_prio, reverse=True):
+        xs = by_prio[prio]
+        emit(f"fleet/prio{prio}_complete_p50",
+             percentile(xs, 50) * 1e6,
+             f"{len(xs)} requests")
+        emit(f"fleet/prio{prio}_complete_p99", percentile(xs, 99) * 1e6)
 
 
 if __name__ == "__main__":

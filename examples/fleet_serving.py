@@ -2,6 +2,12 @@
 and cloud pod serves one request stream; the cloud node dies mid-decode
 and every conversation continues, bit-identically, on the survivors.
 
+Act two shows the request-lifecycle API: ``submit(RequestSpec)`` returns
+a ``RequestTicket`` you can stream (``tokens()``), cancel, or block on
+(``result()``); a high-priority arrival preempts the lowest-priority
+slot *via the migration machinery* (parked with extract_slot/pack_slot,
+resumed bit-identically when capacity frees).
+
     PYTHONPATH=src python examples/fleet_serving.py
 """
 
@@ -17,7 +23,8 @@ from repro.configs import get
 from repro.configs.tiny import make_tiny
 from repro.core.attestation import TrustAuthority
 from repro.core.daemon import CLOUD, EDGE, MCU
-from repro.fleet import EngineHandle, FleetController
+from repro.fleet import (EngineHandle, FleetController, RequestSpec,
+                         RequestState)
 from repro.models.init import init_params
 from repro.serving.engine import Engine, Request
 
@@ -62,6 +69,54 @@ def main():
     assert all("phone" not in fleet.placements[r.rid]
                for r in reqs if r.sensitivity != "public")
     print("policy held: nothing sensitive ever touched the phone")
+
+    lifecycle_act(cfg, params)
+
+
+def lifecycle_act(cfg, params):
+    """Tickets, priorities, preemption-by-migration, cancellation."""
+    print("\n-- act two: the request-lifecycle API --")
+    rng = np.random.default_rng(11)
+    fleet = FleetController(
+        [EngineHandle("laptop",
+                      Engine(cfg, params, slots=1, max_len=64, seed=4),
+                      EDGE)],
+        authority=TrustAuthority())
+
+    batch = fleet.submit(RequestSpec(
+        rid="batch-job", prompt=rng.integers(5, cfg.vocab_size, 6),
+        max_new_tokens=20, priority=0))
+    for _ in range(4):
+        fleet.step()                  # the batch job is mid-decode...
+    print(f"batch-job: {batch.state.value}, "
+          f"{len(batch.tokens())} tokens streamed so far")
+
+    # ...when an interactive request arrives at higher priority: the
+    # batch slot is parked (extract_slot -> pack_slot, the migration
+    # departure path) and the interactive one takes the engine
+    chat = fleet.submit(RequestSpec(
+        rid="chat", prompt=rng.integers(5, cfg.vocab_size, 5),
+        max_new_tokens=8, priority=10))
+    fleet.step()
+    assert batch.state is RequestState.MIGRATING   # parked off-engine
+    print(f"chat arrived at priority 10: batch-job is "
+          f"{batch.state.value} (parked), chat is {chat.state.value}")
+    print(f"chat result: {chat.result()}")
+
+    # the parked slot resumes bit-identically and finishes
+    out = batch.result()
+    print(f"batch-job resumed and finished: {len(out)} tokens, "
+          f"states {[ev.dst for ev in batch.events]}")
+
+    # cancellation frees a slot immediately
+    doomed = fleet.submit(RequestSpec(
+        rid="doomed", prompt=rng.integers(5, cfg.vocab_size, 4),
+        max_new_tokens=30))
+    fleet.step()
+    doomed.cancel()
+    print(f"doomed: {doomed.state.value}; engine free again: "
+          f"{fleet.handles['laptop'].engine.free_slots == [0]}")
+    print("lifecycle telemetry:", fleet.telemetry.summary()["lifecycle"])
 
 
 if __name__ == "__main__":

@@ -2,11 +2,12 @@
 # Tier-1 verify: the exact command ROADMAP.md documents, runnable as
 #   make check        (or)        sh scripts/check.sh [pytest args...]
 #
-# LINT=1 additionally runs ruff over the fleet layer and its surfaces
-# before the tests: `ruff check` (blocking) plus a `ruff format`
-# advisory diff (non-blocking -- the repo's hand-aligned 79-col style
-# predates ruff's formatter).  ruff is a dev extra (requirements.txt);
-# the flag fails fast when it is absent rather than silently skipping.
+# LINT=1 additionally runs ruff over all of src/ plus the fleet-facing
+# surfaces before the tests: `ruff check` (blocking) plus a
+# `ruff format` advisory diff (non-blocking -- the repo's hand-aligned
+# 79-col style predates ruff's formatter).  ruff is a dev extra
+# (requirements.txt); the flag fails fast when it is absent rather than
+# silently skipping.
 set -e
 cd "$(dirname "$0")/.."
 if [ "${LINT:-0}" = "1" ]; then
@@ -15,10 +16,11 @@ if [ "${LINT:-0}" = "1" ]; then
         exit 1
     fi
     ruff check --select E9,F --line-length 100 \
-        src/repro/fleet src/repro/launch/fleet.py \
+        src \
         benchmarks/bench_fleet.py benchmarks/bench_fleet_speculation.py \
         examples/speculative_fleet.py examples/fleet_serving.py \
-        tests/test_fleet.py tests/test_fleet_speculation.py
+        tests/test_fleet.py tests/test_fleet_lifecycle.py \
+        tests/test_fleet_speculation.py
     ruff format --diff src/repro/fleet \
         || echo "note: ruff format suggestions above are advisory"
 fi

@@ -1,3 +1,8 @@
 from repro.configs.base import (SHAPES, ArchEntry, BlockDef, LayerSpec,
                                 ModelConfig, MoESpec, ShapeSpec, entry, get,
                                 names, register)
+
+__all__ = [
+    "SHAPES", "ArchEntry", "BlockDef", "LayerSpec", "ModelConfig",
+    "MoESpec", "ShapeSpec", "entry", "get", "names", "register",
+]

@@ -11,7 +11,7 @@ O(num_layers) -- essential for the 512-device dry-run on one CPU core.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 # ---------------------------------------------------------------------------

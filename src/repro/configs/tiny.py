@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.configs.base import BlockDef, LayerSpec, ModelConfig, MoESpec
+from repro.configs.base import BlockDef, ModelConfig, MoESpec
 
 
 def make_tiny(cfg: ModelConfig, *, d_model=64, repeats_cap=2) -> ModelConfig:

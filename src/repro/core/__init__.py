@@ -30,3 +30,17 @@ from repro.core.speculation import (SpecStats, SpeculationOutcome,
 from repro.core.validation import (ValidationFramework, ValidationReport,
                                    Validator, default_zoo)
 from repro.core.workspace import AgentWorkspace, VectorClock
+
+__all__ = [
+    "AgentWorkspace", "AttestationError", "AttestedSession", "Attester",
+    "CLOUD", "Channel", "DeviceProfile", "EDGE", "Fabric",
+    "FailoverEvent", "MCU", "MerkleTree", "MigrationReport", "Migrator",
+    "NetworkCondition", "PlacementDecision", "PrivacyAwareDaemon",
+    "Quote", "ReplicaTier", "ReplicationManager", "SimClock", "Snapshot",
+    "SpecStats", "SpeculationOutcome", "SpeculativeExecutor",
+    "TrustAuthority", "ValidationFramework", "ValidationReport",
+    "Validator", "VectorClock", "autoregressive_generate",
+    "capabilities", "criu_restore", "criu_snapshot", "default_zoo",
+    "measure_config", "pack_slot", "placement_allowed", "qemu_snapshot",
+    "semantic_attest", "speculative_generate", "unpack_slot",
+]

@@ -15,8 +15,7 @@ import os
 from dataclasses import dataclass, field
 
 from repro.core import crypto
-from repro.core.attestation import (Attester, AttestationError, Quote,
-                                    required_capabilities)
+from repro.core.attestation import Attester, Quote
 
 
 class SimClock:

@@ -12,7 +12,6 @@ from __future__ import annotations
 import hashlib
 import hmac
 import os
-import struct
 
 
 class IntegrityError(Exception):

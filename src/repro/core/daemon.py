@@ -12,7 +12,7 @@ Decides local-vs-remote execution from
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.configs.base import ModelConfig
 from repro.core.channel import NetworkCondition

@@ -20,9 +20,8 @@ Baselines implemented for Fig 2/3:
 from __future__ import annotations
 
 import hashlib
-import io
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +29,6 @@ import msgpack
 import numpy as np
 
 from repro import compression
-from repro.core import crypto
 from repro.core.channel import AttestedSession, Channel
 from repro.core.workspace import AgentWorkspace, VectorClock
 from repro.serving.engine import Engine, SlotArrays, SlotSnapshot

@@ -22,10 +22,9 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.core.channel import NetworkCondition
-from repro.core.migration import (Snapshot, apply_delta, delta_fraction,
+from repro.core.migration import (Snapshot, delta_fraction,
                                   make_delta, _pack_workspace,
                                   _unpack_workspace, page_hashes)
 from repro.core.workspace import AgentWorkspace, VectorClock

@@ -19,7 +19,7 @@ revises otherwise.  Latency accounting uses the simulated clock.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kops
-from repro.models.model import forward, make_cache, vocab_mask_logits
+from repro.models.model import forward, vocab_mask_logits
 
 
 # ---------------------------------------------------------------------------

@@ -22,7 +22,7 @@ thresholds trade off exactly like the originals.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np

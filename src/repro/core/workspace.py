@@ -12,12 +12,10 @@ Everything an agent needs to resume exactly where it stopped:
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 
-import jax
 
-from repro.serving.engine import (Engine, EngineState, Request,
+from repro.serving.engine import (Engine, EngineState,
                                   request_from_dict, request_to_dict)
 
 

@@ -1,14 +1,20 @@
 """Fleet orchestration: N heterogeneous Engine replicas, one request
 stream (the cluster-level layer over the pairwise MVVM primitives).
 
+lifecycle   -- the request-lifecycle API: immutable RequestSpec
+               (priority, deadline) in, RequestTicket out -- a typed
+               state machine with token streaming, cancel(), blocking
+               result(), and preemption-by-migration semantics
 cluster     -- FleetController: engine registry, admission control,
-               bounded queue with backpressure, the fleet step loop
-router      -- sensitivity/attestation gates composed with roofline cost
-               and per-engine load
+               priority-ordered dispatch with preemption via the
+               migration machinery, deadline expiry, the fleet step loop
+router      -- sensitivity/attestation gates composed with roofline cost,
+               per-engine load, and deadline urgency
 balancer    -- shadow checkpoints, failure-driven re-placement, planned
                live migration of individual in-flight slots
 telemetry   -- per-engine + fleet tokens/s, latency percentiles,
-               migration/failover audit log
+               queue-wait/preemption latencies, migration audit log, and
+               the unified lifecycle event log
 speculative -- draft/verify tier pairs: draft on an edge engine, slot
                hand-off over the attested wire (heterogeneous max_len
                via migration.repack_slot), teacher-forced verification
@@ -17,14 +23,23 @@ speculative -- draft/verify tier pairs: draft on an edge engine, slot
 
 from repro.fleet.balancer import Rebalancer, peek_slot_meta
 from repro.fleet.cluster import EngineHandle, FleetController
+from repro.fleet.lifecycle import (DeadlineExpired, LifecycleError,
+                                   LifecycleEvent, RequestCancelled,
+                                   RequestFailed, RequestSpec,
+                                   RequestState, RequestTicket,
+                                   TERMINAL_STATES, WorkItem, WorkQueue,
+                                   work_order)
 from repro.fleet.router import RouteDecision, Router
 from repro.fleet.speculative import SpecTierStats, SpeculativeTierController
 from repro.fleet.telemetry import (EngineStats, FleetTelemetry,
                                    MigrationRecord, percentile)
 
 __all__ = [
-    "EngineHandle", "EngineStats", "FleetController", "FleetTelemetry",
-    "MigrationRecord", "Rebalancer", "RouteDecision", "Router",
-    "SpecTierStats", "SpeculativeTierController",
-    "peek_slot_meta", "percentile",
+    "DeadlineExpired", "EngineHandle", "EngineStats", "FleetController",
+    "FleetTelemetry", "LifecycleError", "LifecycleEvent",
+    "MigrationRecord", "Rebalancer", "RequestCancelled", "RequestFailed",
+    "RequestSpec", "RequestState", "RequestTicket", "RouteDecision",
+    "Router", "SpecTierStats", "SpeculativeTierController",
+    "TERMINAL_STATES", "WorkItem", "WorkQueue",
+    "peek_slot_meta", "percentile", "work_order",
 ]

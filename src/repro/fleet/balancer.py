@@ -23,6 +23,7 @@ import msgpack
 from repro import compression
 from repro.core.channel import AttestedSession
 from repro.core.migration import pack_slot, repack_slot, unpack_slot
+from repro.fleet.lifecycle import RequestState
 from repro.fleet.telemetry import MigrationRecord
 
 
@@ -101,10 +102,13 @@ class Rebalancer:
             covered.add(rid)
             if rid in fleet.done:
                 continue
+            fleet.ticket_transition(rid, RequestState.MIGRATING,
+                                    reason="failover", engine=dead.name)
             rec = self.place_blob(blob, survivors, fleet,
                                   src=dead.name, reason="failover")
             if rec is None:
-                fleet.orphans.append((dead.name, blob))
+                fleet.inflight.pop(rid, None)
+                fleet.park_blob(dead.name, blob, origin="failover")
             else:
                 recs.append(rec)
         for rid, (req, hname, t0) in list(fleet.inflight.items()):
@@ -112,18 +116,21 @@ class Rebalancer:
                 continue
             req.output, req.done, req.slot = [], False, -1
             del fleet.inflight[rid]
-            fleet.queue.appendleft((req, t0))
+            fleet.requeue_request(req, t0)
         return recs
 
     def place_blob(self, blob: bytes, handles, fleet, *, src: str,
-                   reason: str) -> MigrationRecord | None:
+                   reason: str,
+                   deadline_slack: float | None = None) \
+            -> MigrationRecord | None:
         meta = peek_slot_meta(blob)
         remaining = meta["max_new_tokens"] - len(meta["output"])
         need = len(meta["prompt"]) + meta["max_new_tokens"]
         dec = fleet.router.route(
             [h for h in handles if need <= h.engine.max_len], fleet.cfg,
             sensitivity=meta["sensitivity"],
-            prefill_tokens=0, decode_tokens=remaining)
+            prefill_tokens=0, decode_tokens=remaining,
+            deadline_slack=deadline_slack)
         if dec.target is None:
             return None
         target = fleet.handles[dec.target]
@@ -131,6 +138,8 @@ class Rebalancer:
         snap = repack_slot(snap, target.engine.max_len)
         req = target.engine.inject_slot(snap)
         fleet.reassign(req, target.name)
+        fleet.ticket_transition(req.rid, RequestState.DECODING,
+                                reason=reason, engine=target.name)
         return MigrationRecord(rid=req.rid, src=src, dst=target.name,
                                reason=reason, step=snap.step,
                                wire_bytes=len(blob))
@@ -152,6 +161,8 @@ class Rebalancer:
             "slot does not fit the target's context budget"
         snap = src.engine.extract_slot(slot)
         self.shadow.get(src.name, {}).pop(snap.rid, None)
+        fleet.ticket_transition(snap.rid, RequestState.MIGRATING,
+                                reason=reason, engine=src.name)
         link = fleet.fabric.link(src.name, dst.name)
         session = None
         if src.attester is not None and dst.attester is not None:
@@ -163,6 +174,8 @@ class Rebalancer:
             compression_level=self.compression_level)
         req = dst.engine.inject_slot(snap2)
         fleet.reassign(req, dst.name)
+        fleet.ticket_transition(req.rid, RequestState.DECODING,
+                                reason=reason, engine=dst.name)
         return MigrationRecord(rid=req.rid, src=src.name, dst=dst.name,
                                reason=reason, step=snap2.step,
                                wire_bytes=wire_bytes)

@@ -2,28 +2,41 @@
 
 The controller owns the engine registry (``EngineHandle``: engine +
 ``DeviceProfile`` + optional attester; per-link network conditions
-live in the shared ``Fabric``), admission
-control (a bounded queue -- ``submit`` refuses work when full, the
-backpressure signal), the dispatch loop (router picks an engine per
-request), and failure handling (fail-stop an engine at a stable point
+live in the shared ``Fabric``), admission control (a bounded queue --
+``submit`` refuses work when full, the backpressure signal), the
+dispatch loop (router picks an engine per request, highest priority
+first), and failure handling (fail-stop an engine at a stable point
 and the balancer re-places its in-flight slots on survivors).
+
+Requests enter as immutable ``RequestSpec``s and are tracked by
+``RequestTicket``s (see fleet.lifecycle): a typed state machine with
+incremental token streaming, ``cancel()``, deadlines, and priorities.
+When a higher-priority spec arrives and no slot is eligible, the
+lowest-priority in-flight slot is *preempted via the migration
+machinery*: ``extract_slot`` -> ``pack_slot`` parks it fleet-side (the
+same re-placement path a failover orphan takes) and it resumes
+bit-identically once capacity frees -- migration as the scheduling
+primitive.
 
 One ``step()`` advances every healthy engine one decode step -- the
 fleet-level stable point: between two controller steps every request is
-either queued (no device state), shadow-checkpointed, or complete.
+either queued (no device state), parked/shadow-checkpointed, or
+complete.
 """
 
 from __future__ import annotations
 
 import time
-from collections import deque
 from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.attestation import Attester, capabilities, measure_config
 from repro.core.channel import Fabric
 from repro.core.daemon import DeviceProfile
+from repro.core.migration import pack_slot
 from repro.fleet.balancer import Rebalancer, peek_slot_meta
+from repro.fleet.lifecycle import (RequestSpec, RequestState, RequestTicket,
+                                   WorkItem, WorkQueue, spec_of_request)
 from repro.fleet.router import Router
 from repro.fleet.speculative import SpeculativeTierController
 from repro.fleet.telemetry import FleetTelemetry
@@ -54,13 +67,23 @@ class FleetController:
                  authority=None,
                  rebalance_every: int = 0,
                  spec_tiers: dict[str, str] | None = None,
-                 spec_options: dict | None = None):
+                 spec_options: dict | None = None,
+                 clock=None):
         assert handles, "a fleet needs at least one engine"
         self.handles: dict[str, EngineHandle] = {h.name: h for h in handles}
         self.cfg = handles[0].engine.cfg
+        # the fleet clock: any zero-arg float callable (channel.SimClock
+        # qualifies).  Deadlines are absolute times on THIS clock, and
+        # all queue-wait / latency accounting reads it, so tests that
+        # inject a SimClock get deterministic timing end to end.
+        self.clock = clock or time.perf_counter
         self.router = router or Router()
         self.balancer = balancer or Rebalancer()
-        self.telemetry = telemetry or FleetTelemetry()
+        if telemetry is None:
+            telemetry = FleetTelemetry(clock=self.clock)
+        elif clock is not None:
+            telemetry.bind_clock(self.clock)  # one time base everywhere
+        self.telemetry = telemetry
         self.fabric = fabric or Fabric()
         self.queue_limit = queue_limit
         self.rebalance_every = rebalance_every
@@ -85,32 +108,76 @@ class FleetController:
             self.spec_controllers[dname] = SpeculativeTierController(
                 d, v, fabric=self.fabric, whitelist=self.whitelist,
                 measurement=self.measurement, router=self.router,
-                telemetry=self.telemetry, **(spec_options or {}))
-        self.queue: deque = deque()          # (Request, t_submitted)
-        self.orphans: list[tuple[str, bytes]] = []  # (src, shadow blob)
+                telemetry=self.telemetry, fleet=self, clock=self.clock,
+                **(spec_options or {}))
+        self.queue = WorkQueue()             # fresh + parked work items
+        self.tickets: dict[str, RequestTicket] = {}
         self.inflight: dict[str, tuple[Request, str, float]] = {}
         self.done: dict[str, Request] = {}
         self.placements: dict[str, list[str]] = {}  # rid -> engine history
         self.stalled: list[str] = []         # rids stuck at last run()
         self._steps = 0
+        self._auto_rid = 0
+
+    # -- legacy view: parked slot snapshots -----------------------------------
+    @property
+    def orphans(self) -> list[tuple[str, bytes]]:
+        """Parked slot snapshots awaiting re-placement, as (src, blob)
+        pairs -- the pre-lifecycle orphan-list view.  Preempted slots
+        and failover orphans both live here (same re-placement path)."""
+        return [(it.src, it.blob) for it in self.queue.parked()]
 
     # -- admission control ----------------------------------------------------
-    def submit(self, req: Request) -> bool:
-        """Admit a request; False = queue full (caller must back off)."""
+    def submit(self, req: Request | RequestSpec):
+        """Admit work.
+
+        A ``RequestSpec`` returns a ``RequestTicket`` (None when the
+        queue is full -- backpressure, the caller must back off).  A
+        legacy mutable ``Request`` returns bool, the pre-lifecycle
+        contract; a ticket is still created internally so priorities,
+        deadlines and the event log stay uniform."""
+        legacy = isinstance(req, Request)
+        if legacy:
+            engine_req = req
+        else:
+            rid = req.rid
+            if rid is None:
+                rid, self._auto_rid = f"req{self._auto_rid}", \
+                    self._auto_rid + 1
+            engine_req = req.to_request(rid)
         if len(self.queue) >= self.queue_limit:
             self.telemetry.record_reject()
-            return False
-        self.queue.append((req, time.perf_counter()))
-        return True
+            return False if legacy else None
+        assert engine_req.rid not in self.tickets, \
+            f"duplicate rid {engine_req.rid!r}"
+        spec = spec_of_request(engine_req) if legacy else req
+        ticket = RequestTicket(spec, engine_req, self)
+        ticket.seq = self.queue.next_seq()
+        self.tickets[engine_req.rid] = ticket
+        self.queue.push(WorkItem(
+            rid=engine_req.rid, priority=engine_req.priority,
+            seq=ticket.seq, t_submit=ticket.submitted_at,
+            sensitivity=engine_req.sensitivity,
+            rows_needed=len(engine_req.prompt) + engine_req.max_new_tokens,
+            deadline=engine_req.deadline, ticket=ticket, req=engine_req))
+        return True if legacy else ticket
 
     # -- bookkeeping shared with the balancer ----------------------------------
     def reassign(self, req: Request, handle_name: str):
         """A request object changed engines (and identity: inject_slot
         rebuilds it); keep latency accounting anchored at submission."""
         old = self.inflight.get(req.rid)
-        t0 = old[2] if old is not None else time.perf_counter()
+        ticket = self.tickets.get(req.rid)
+        if old is not None:
+            t0 = old[2]
+        elif ticket is not None:
+            t0 = ticket.submitted_at
+        else:
+            t0 = self.clock()
         self.inflight[req.rid] = (req, handle_name, t0)
         self.placements.setdefault(req.rid, []).append(handle_name)
+        if ticket is not None:
+            ticket._req = req
 
     def placement_of(self, rid: str) -> str | None:
         entry = self.inflight.get(rid)
@@ -122,46 +189,203 @@ class FleetController:
         entry = self.inflight.get(rid)
         return entry[0] if entry is not None else None
 
+    def ticket_transition(self, rid: str, state: RequestState, *,
+                          reason: str = "", engine: str | None = None):
+        """Advance a ticket's state machine (no-op for unticketed rids
+        -- e.g. synthetic snapshots -- and for terminal tickets)."""
+        ticket = self.tickets.get(rid)
+        if ticket is not None and not ticket.done:
+            ticket._transition(state, reason=reason, engine=engine)
+
+    def committed_output(self, rid: str) -> list[int]:
+        """The committed token stream of a request, wherever it lives:
+        a drafting slot's uncommitted speculative tail is excluded, a
+        parked slot's output is read out of its snapshot."""
+        for spec in self.spec_controllers.values():
+            st = spec._spec.get(rid)
+            if st is not None:
+                return list(st.req.output[:st.committed])
+        req = self.request(rid)
+        if req is not None:
+            return list(req.output)
+        item = self.queue.find(rid)
+        if item is not None and item.parked:
+            return list(peek_slot_meta(item.blob)["output"])
+        return []
+
+    # -- lifecycle control ------------------------------------------------------
+    def cancel(self, rid: str, *, reason: str = "caller cancelled") -> bool:
+        """Cancel a request.  Queued/parked work is dropped outright; an
+        in-flight slot (draft + verify replica for speculative requests)
+        is retired immediately, so capacity frees within one step."""
+        ticket = self.tickets.get(rid)
+        if ticket is None or ticket.done:
+            return False
+        if self.queue.find(rid) is not None:
+            self.queue.remove(rid)
+        elif rid in self.inflight:
+            req, hname, _ = self.inflight.pop(rid)
+            handle = self.handles[hname]
+            spec = self.spec_controllers.get(hname)
+            if not (spec is not None and spec.release(rid)):
+                if handle.engine.requests.get(req.slot) is req:
+                    handle.engine.retire(req.slot)
+            self.balancer.shadow.get(hname, {}).pop(rid, None)
+        else:
+            return False
+        self.telemetry.record_cancelled()
+        self.ticket_transition(rid, RequestState.CANCELLED, reason=reason)
+        return True
+
+    def abandon(self, rid: str, *, reason: str):
+        """Fail a ticket that can never run (used by ``result()`` when
+        the fleet stalls with the work still pending)."""
+        self.queue.remove(rid)
+        self.ticket_transition(rid, RequestState.FAILED, reason=reason)
+
+    def park_blob(self, src: str, blob: bytes, *,
+                  origin: str = "failover"):
+        """A packed slot with nowhere to go joins the parked work list
+        (the orphan re-placement path); dispatch retries it in priority
+        order alongside fresh admissions."""
+        meta = peek_slot_meta(blob)
+        ticket = self.tickets.get(meta["rid"])
+        now = self.clock()
+        self.queue.push(WorkItem(
+            rid=meta["rid"], priority=int(meta.get("priority", 0)),
+            seq=ticket.seq if ticket is not None else self.queue.next_seq(),
+            t_submit=ticket.submitted_at if ticket is not None else now,
+            sensitivity=meta["sensitivity"],
+            rows_needed=len(meta["prompt"]) + meta["max_new_tokens"],
+            deadline=meta.get("deadline"), ticket=ticket,
+            blob=blob, src=src, origin=origin, parked_at=now))
+
+    def requeue_request(self, req: Request, t_submit: float):
+        """A request restarts from its prompt (failure before its first
+        shadow sync): back into the queue at its original position."""
+        ticket = self.tickets.get(req.rid)
+        self.queue.push(WorkItem(
+            rid=req.rid, priority=req.priority,
+            seq=ticket.seq if ticket is not None else self.queue.next_seq(),
+            t_submit=t_submit, sensitivity=req.sensitivity,
+            rows_needed=len(req.prompt) + req.max_new_tokens,
+            deadline=req.deadline, ticket=ticket, req=req))
+        self.ticket_transition(req.rid, RequestState.QUEUED,
+                               reason="failover restart (no shadow)")
+
     # -- dispatch ---------------------------------------------------------------
+    def _expire(self, now: float):
+        """Deadline expiry of queued and parked work (in-flight slots
+        keep decoding: they already paid for their state)."""
+        for item in self.queue.expired(now):
+            self.queue.remove(item.rid)
+            self.telemetry.record_expired()
+            self.ticket_transition(
+                item.rid, RequestState.EXPIRED,
+                reason=f"deadline {item.deadline:.4f} passed at {now:.4f}",
+                engine=item.src or None)
+
+    def _park_victim(self, item: WorkItem, handles) -> bool:
+        """Preemption-by-migration: free a slot for ``item`` by parking
+        the lowest-priority (strictly lower than ``item``'s) in-flight
+        request on an engine ``item`` could actually use.  The victim's
+        slot leaves through ``extract_slot``/``pack_slot`` -- the exact
+        live-migration departure path -- and resumes bit-identically
+        later via the parked-work re-placement path."""
+        best = None
+        for h in handles:
+            if not h.healthy or h.engine.max_len < item.rows_needed \
+                    or not self.router.eligible(item.sensitivity, h):
+                continue
+            spec = self.spec_controllers.get(h.name)
+            for slot, req in h.engine.requests.items():
+                if req.done or req.priority >= item.priority:
+                    continue
+                if spec is not None and req.rid in spec._spec:
+                    continue         # uncommitted speculative tail
+                vt = self.tickets.get(req.rid)
+                # lowest priority first; youngest within a class (the
+                # most recently admitted victim loses the least work)
+                key = (req.priority, -(vt.seq if vt is not None else 0))
+                if best is None or key < best[0]:
+                    best = (key, h, slot, req)
+        if best is None:
+            return False
+        _, handle, slot, req = best
+        snap = handle.engine.extract_slot(slot)
+        blob = pack_slot(snap)
+        self.balancer.shadow.get(handle.name, {}).pop(req.rid, None)
+        self.inflight.pop(req.rid, None)
+        self.telemetry.record_preemption()
+        self.ticket_transition(req.rid, RequestState.MIGRATING,
+                               reason=f"preempted by {item.rid}",
+                               engine=handle.name)
+        self.park_blob(handle.name, blob, origin="preempt")
+        return True
+
+    def _dispatch_fresh(self, item: WorkItem, handles,
+                        slack: float | None, now: float):
+        req = item.req
+        route = lambda: self.router.route(  # noqa: E731
+            handles, self.cfg, sensitivity=req.sensitivity,
+            prefill_tokens=len(req.prompt),
+            decode_tokens=req.max_new_tokens, deadline_slack=slack)
+        dec = route()
+        if dec.target is None and dec.saturated \
+                and self._park_victim(item, handles):
+            dec = route()
+        if dec.target is None:
+            return
+        handle = self.handles[dec.target]
+        placed = handle.engine.add_request(req)
+        assert placed, f"router sent {req.rid} to a full engine"
+        self.queue.remove(item.rid)
+        self.inflight[req.rid] = (req, handle.name, item.t_submit)
+        self.placements.setdefault(req.rid, []).append(handle.name)
+        self.telemetry.record_admit(handle.name)
+        self.telemetry.record_queue_wait(now - item.t_submit)
+        self.ticket_transition(req.rid, RequestState.PREFILLING,
+                               engine=handle.name, reason=dec.reason)
+        spec = self.spec_controllers.get(handle.name)
+        if spec is not None and spec.attach(req) == "spec":
+            # the replica slot lives on the verify engine: audit it
+            self.placements[req.rid].append(spec.verify.name)
+            self.ticket_transition(
+                req.rid, RequestState.DRAFTING, engine=handle.name,
+                reason=f"tier pair {handle.name}->{spec.verify.name}")
+        else:
+            self.ticket_transition(req.rid, RequestState.DECODING,
+                                   engine=handle.name)
+
+    def _dispatch_parked(self, item: WorkItem, handles,
+                         slack: float | None, now: float):
+        reason = "resume" if item.origin == "preempt" else "failover"
+        place = lambda: self.balancer.place_blob(  # noqa: E731
+            item.blob, handles, self, src=item.src, reason=reason,
+            deadline_slack=slack)
+        rec = place()
+        if rec is None and self._park_victim(item, handles):
+            rec = place()
+        if rec is None:
+            return
+        self.queue.remove(item.rid)
+        self.telemetry.record_migration(rec)
+        if item.origin == "preempt":
+            self.telemetry.record_resume(now - item.parked_at)
+
     def _dispatch(self):
-        # re-placed-but-orphaned slots first: they hold device state
-        if self.orphans:
-            survivors = [h for h in self.handles.values()
-                         if h.healthy and h.spec_role != "verify"]
-            still = []
-            for src, blob in self.orphans:
-                rec = self.balancer.place_blob(blob, survivors, self,
-                                               src=src, reason="failover")
-                if rec is None:
-                    still.append((src, blob))
-                else:
-                    self.telemetry.record_migration(rec)
-            self.orphans = still
+        now = self.clock()
+        self._expire(now)
         # verify-tier engines are reserved replica capacity, never
         # dispatch targets
         handles = [h for h in self.handles.values()
-                   if h.spec_role != "verify"]
-        unplaced = deque()
-        while self.queue:
-            req, t0 = self.queue.popleft()
-            dec = self.router.route(handles, self.cfg,
-                                    sensitivity=req.sensitivity,
-                                    prefill_tokens=len(req.prompt),
-                                    decode_tokens=req.max_new_tokens)
-            if dec.target is None:
-                unplaced.append((req, t0))
-                continue
-            handle = self.handles[dec.target]
-            placed = handle.engine.add_request(req)
-            assert placed, f"router sent {req.rid} to a full engine"
-            self.inflight[req.rid] = (req, handle.name, t0)
-            self.placements.setdefault(req.rid, []).append(handle.name)
-            self.telemetry.record_admit(handle.name)
-            spec = self.spec_controllers.get(handle.name)
-            if spec is not None and spec.attach(req) == "spec":
-                # the replica slot lives on the verify engine: audit it
-                self.placements[req.rid].append(spec.verify.name)
-        self.queue = unplaced
+                   if h.healthy and h.spec_role != "verify"]
+        for item in self.queue.ordered():
+            slack = None if item.deadline is None else item.deadline - now
+            if item.parked:
+                self._dispatch_parked(item, handles, slack, now)
+            else:
+                self._dispatch_fresh(item, handles, slack, now)
 
     # -- the fleet step ----------------------------------------------------------
     def step(self) -> dict[str, int]:
@@ -174,20 +398,22 @@ class FleetController:
                 continue             # stepped by its tier controller
             if not handle.healthy or not handle.engine.requests:
                 continue
-            t0 = time.perf_counter()
+            t0 = self.clock()
             out = handle.engine.step()
             self.telemetry.record_step(handle.name, len(out),
-                                       time.perf_counter() - t0)
+                                       self.clock() - t0)
             emitted.update(out)
         for spec in self.spec_controllers.values():
             emitted.update(spec.step())
-        now = time.perf_counter()
+        now = self.clock()
         for rid in list(self.inflight):
             req, hname, t0 = self.inflight[rid]
             if req.done:
                 self.done[rid] = req
                 del self.inflight[rid]
                 self.telemetry.record_complete(hname, now - t0)
+                self.ticket_transition(rid, RequestState.DONE,
+                                       engine=hname)
         self.balancer.after_step(self)
         if self.rebalance_every and \
                 self._steps % self.rebalance_every == self.rebalance_every - 1:
@@ -198,7 +424,8 @@ class FleetController:
 
     def run(self, reqs: list[Request] | None = None, *,
             max_steps: int = 10_000) -> dict[str, list[int]]:
-        """Serve ``reqs`` (plus anything already queued) to completion.
+        """Serve ``reqs`` (plus anything already queued) to completion
+        -- the thin batch-mode wrapper over the ticket API.
 
         Stops early when the fleet is *stalled*: nothing in flight and a
         step changed nothing, i.e. queued work no engine is eligible to
@@ -212,7 +439,7 @@ class FleetController:
             while pending and len(self.queue) < self.queue_limit \
                     and self.submit(pending[0]):
                 pending.pop(0)
-            if not (pending or self.queue or self.orphans or self.inflight):
+            if not (pending or self.queue or self.inflight):
                 break
             qlen, orph = len(self.queue), len(self.orphans)
             self.step()
@@ -228,13 +455,13 @@ class FleetController:
 
     def is_stalled(self, qlen: int, orph: int) -> bool:
         """True when nothing can ever change: no request is decoding on
-        a healthy engine, and the last step left the queue and orphan
+        a healthy engine, and the last step left the queue and parked
         list exactly as it found them."""
         if any(self.handles[h].healthy
                for _, h, _ in self.inflight.values()):
             return False
         return (len(self.queue) == qlen and len(self.orphans) == orph
-                and bool(self.queue or self.orphans or self.inflight))
+                and bool(self.queue or self.inflight))
 
     # -- membership events ---------------------------------------------------------
     def fail(self, name: str, *, reason: str = "crash"):
@@ -248,25 +475,40 @@ class FleetController:
         for rec in self.balancer.on_failure(handle, self):
             self.telemetry.record_migration(rec)
 
-    def _dissolve_pair(self, handle: EngineHandle):
-        """One member of a draft/verify pair died: tell the pair's
-        controller, then release the survivor back into the normal
-        fleet (a reserved verify engine becomes routable again)."""
+    def _dissolve_pair(self, handle: EngineHandle, *,
+                       graceful: bool = False):
+        """Unpair a draft/verify tier.  ``graceful`` (planned drain)
+        rolls every speculative request back to its committed prefix and
+        keeps it decoding local-only; the crash form defers to the
+        controller's failure handling.  Either way the reserved verify
+        engine rejoins the routable fleet."""
         for dname, spec in list(self.spec_controllers.items()):
-            if handle.name in (spec.draft.name, spec.verify.name):
+            if handle.name not in (spec.draft.name, spec.verify.name):
+                continue
+            spec_rids = list(spec._spec)
+            if graceful:
+                spec.dissolve()
+            else:
                 spec.on_engine_failure(handle.name)
-                spec.draft.spec_role = spec.verify.spec_role = None
-                del self.spec_controllers[dname]
+            spec.draft.spec_role = spec.verify.spec_role = None
+            del self.spec_controllers[dname]
+            if graceful or handle.name == spec.verify.name:
+                # the requests stay live on the draft engine, local-only
+                # (draft-death restarts are requeued by the balancer)
+                for rid in spec_rids:
+                    self.ticket_transition(
+                        rid, RequestState.DECODING,
+                        reason="tier pair dissolved: local-only",
+                        engine=spec.draft.name)
 
     def drain(self, name: str) -> int:
-        """Planned removal: live-migrate every slot off ``name``."""
+        """Planned removal: live-migrate every slot off ``name``.  A
+        tier-paired engine dissolves its pair first (speculative
+        requests drop uncommitted tails and continue local-only), then
+        drains like any other engine."""
         handle = self.handles[name]
         if handle.spec_role is not None:
-            # draft slots hold uncommitted speculative tails and verify
-            # slots are replicas -- neither survives a generic move
-            raise ValueError(
-                f"cannot drain {name!r}: tier-paired engines are "
-                "pinned (fail() dissolves the pair instead)")
+            self._dissolve_pair(handle, graceful=True)
         recs = self.balancer.drain(handle, self)
         for rec in recs:
             self.telemetry.record_migration(rec)

@@ -28,6 +28,10 @@ class RouteDecision:
     target: str | None               # engine name, or None (stay queued)
     reason: str
     scores: dict[str, float] = field(default_factory=dict)
+    # policy gates passed but nothing had capacity: the one failure mode
+    # preemption can fix (a policy refusal never is -- evicting a slot
+    # does not make an engine attested)
+    saturated: bool = False
 
 
 class Router:
@@ -42,17 +46,26 @@ class Router:
                                       self.max_unattested_sensitivity))
 
     def score(self, handle, cfg: ModelConfig, *, prefill_tokens: int,
-              decode_tokens: int) -> float:
+              decode_tokens: int, loaded: bool = True) -> float:
         """Estimated seconds to finish this request here: roofline time
-        for the remaining work, inflated by current occupancy."""
+        for the remaining work, inflated by current occupancy
+        (``loaded=False`` gives the raw latency-optimal estimate)."""
         t = PrivacyAwareDaemon.step_time(cfg, handle.profile,
                                          prefill_tokens=prefill_tokens,
                                          decode_tokens=decode_tokens)
+        if not loaded:
+            return t
         return t * (1.0 + self.load_weight * handle.load)
 
     def route(self, handles, cfg: ModelConfig, *, sensitivity: str,
               prefill_tokens: int, decode_tokens: int,
-              exclude: frozenset[str] = frozenset()) -> RouteDecision:
+              exclude: frozenset[str] = frozenset(),
+              deadline_slack: float | None = None) -> RouteDecision:
+        """Pick an engine.  ``deadline_slack`` (seconds until the
+        request's deadline) feeds the cost model: when the normal
+        load-balanced pick would miss the deadline, routing turns
+        latency-optimal -- the load-inflation term is dropped and the
+        raw-fastest eligible engine wins even if it is busy."""
         gated = [h for h in handles
                  if h.name not in exclude and self.eligible(sensitivity, h)]
         if not gated:
@@ -65,12 +78,24 @@ class Router:
                  and h.engine.max_len >= prefill_tokens + decode_tokens]
         if not ready:
             return RouteDecision(None, "all eligible engines full "
-                                       "(slots or context budget)")
+                                       "(slots or context budget)",
+                                 saturated=True)
         scores = {h.name: self.score(h, cfg,
                                      prefill_tokens=prefill_tokens,
                                      decode_tokens=decode_tokens)
                   for h in ready}
         best = min(ready, key=lambda h: scores[h.name])
+        if deadline_slack is not None and scores[best.name] > deadline_slack:
+            raw = {h.name: self.score(h, cfg,
+                                      prefill_tokens=prefill_tokens,
+                                      decode_tokens=decode_tokens,
+                                      loaded=False)
+                   for h in ready}
+            best = min(ready, key=lambda h: raw[h.name])
+            return RouteDecision(best.name,
+                                 f"deadline-urgent: raw roofline "
+                                 f"{raw[best.name]:.2e}s (load-blind)",
+                                 raw)
         return RouteDecision(best.name,
                              f"min roofline+load cost "
                              f"{scores[best.name]:.2e}s", scores)

@@ -57,6 +57,7 @@ import msgpack
 from repro.core.channel import AttestedSession
 from repro.core.validation import ValidationFramework
 from repro.fleet.balancer import wire_slot
+from repro.fleet.lifecycle import RequestState
 from repro.fleet.router import Router
 from repro.fleet.telemetry import MigrationRecord
 
@@ -117,6 +118,7 @@ class SpeculativeTierController:
 
     def __init__(self, draft, verify, *, fabric, whitelist, measurement,
                  router: Router | None = None, telemetry=None,
+                 fleet=None, clock=None,
                  gamma: int = 4, drafter_temperature: float = 0.0,
                  drafter_top_k: int = 0, verify_mode: str = "stepwise",
                  validators=None, compression_level: int = 3):
@@ -138,6 +140,8 @@ class SpeculativeTierController:
         self.draft, self.verify = draft, verify
         self.router = router or Router()
         self.telemetry = telemetry
+        self.fleet = fleet               # lifecycle transitions (optional)
+        self._clock = clock or time.perf_counter
         self.gamma = gamma
         self.drafter_temperature = drafter_temperature
         self.drafter_top_k = drafter_top_k
@@ -232,9 +236,9 @@ class SpeculativeTierController:
         emitted: dict[str, int] = {}
         if not self.draft.healthy or not self.draft.engine.requests:
             return emitted
-        t0 = time.perf_counter()
+        t0 = self._clock()
         out = self.draft.engine.step(auto_retire=False)
-        dt = time.perf_counter() - t0
+        dt = self._clock() - t0
         # every non-speculative slot decodes plainly here: local
         # fallbacks, and requests the balancer re-placed onto the draft
         # engine (failover/drain targets) that never went through attach
@@ -273,13 +277,17 @@ class SpeculativeTierController:
         msg = msgpack.packb({"slots": [[s, list(map(int, t))]
                                        for s, t in sorted(tails.items())]})
         self._send(msg)
-        t0 = time.perf_counter()
+        for rid in due.values():
+            self._ticket(rid, RequestState.VERIFYING,
+                         reason=f"{len(tails[self._spec[rid].replica_slot])}"
+                                " drafted tokens due")
+        t0 = self._clock()
         if self.verify_mode == "wide":
             results = self.verify.engine.verify_slots(tails,
                                                       width=self.gamma)
         else:
             results = self.verify.engine.verify_slots_stepwise(tails)
-        dt = time.perf_counter() - t0
+        dt = self._clock() - t0
         # ...and the rejected suffix bounces back as a verdict message
         verdict = msgpack.packb({"verdicts": [
             [s, results[s][0], results[s][1]] for s in sorted(results)]})
@@ -309,10 +317,22 @@ class SpeculativeTierController:
             if self.validation is not None and self._intervene(st):
                 continue
             if st.committed >= req.max_new_tokens:
-                self._finish(rid)
+                self._finish(rid)    # stays VERIFYING; the fleet's
+                continue             # retire loop transitions it DONE
+            self._ticket(rid, RequestState.DRAFTING,
+                         reason=f"{n_acc}/{len(tail)} accepted")
         if self.telemetry is not None:
             self.telemetry.record_step(self.verify.name, n_committed, dt)
         return emitted
+
+    def _ticket(self, rid: str, state, *, reason: str = ""):
+        """Lifecycle transition on the shared audit log (no-op when the
+        controller runs outside a fleet)."""
+        if self.fleet is not None:
+            engine = self.verify.name if state is RequestState.VERIFYING \
+                else self.draft.name
+            self.fleet.ticket_transition(rid, state, reason=reason,
+                                         engine=engine)
 
     def _intervene(self, st: _SpecReq) -> bool:
         """Validators run on the *committed* stream only: an accepted
@@ -325,6 +345,8 @@ class SpeculativeTierController:
         st.committed = len(st.req.output)
         self.stats.interventions += 1
         st.req.done = True
+        self._ticket(st.req.rid, RequestState.HALTED,
+                     reason=f"validator halt at {report.halt_position}")
         self._finish(st.req.rid, retired_done=True)
         return True
 
@@ -337,6 +359,51 @@ class SpeculativeTierController:
         if st.replica_slot in self.verify.engine.requests:
             self.verify.engine.retire(st.replica_slot)
 
+    # -- lifecycle hooks -------------------------------------------------------
+    def release(self, rid: str) -> bool:
+        """Free a speculative request's slots (cancellation): the draft
+        slot and the verify replica are retired, the uncommitted tail is
+        discarded.  Returns False for requests this pair never attached
+        (local fallbacks keep their plain slot for the caller to free)."""
+        self._local.discard(rid)
+        st = self._spec.pop(rid, None)
+        if st is None:
+            return False
+        if self.draft.engine.requests.get(st.req.slot) is st.req:
+            self.draft.engine.retire(st.req.slot)
+        if st.replica_slot in self.verify.engine.requests:
+            self.verify.engine.retire(st.replica_slot)
+        return True
+
+    def _fall_back_to_local(self, rid: str, st: _SpecReq):
+        """Roll one speculative request back to its committed prefix and
+        hand it to the draft engine as a plain local request: drop the
+        uncommitted tail, restore the request's own sampling policy."""
+        req = st.req
+        pending = len(req.output) - st.committed
+        if pending > 0 and req.slot in self.draft.engine.requests:
+            self.draft.engine.rollback_slot(req.slot, pending, 0, None)
+        req.output[:] = req.output[:st.committed]
+        self._set_policy(self.draft.engine, req.slot,
+                         req.temperature, req.top_k)
+        self._local.add(rid)
+        self.stats.local_fallbacks += 1
+
+    def dissolve(self):
+        """Planned pair dissolution (drain/rebalance of a tier-paired
+        engine): every speculative request falls back to local-only
+        drafting; replica slots on the verify engine are freed.  Unlike
+        ``on_engine_failure`` both engines stay healthy and rejoin the
+        routable fleet."""
+        if self._dissolved:
+            return
+        self._dissolved = True
+        for rid, st in list(self._spec.items()):
+            self._fall_back_to_local(rid, st)
+            if st.replica_slot in self.verify.engine.requests:
+                self.verify.engine.retire(st.replica_slot)
+        self._spec.clear()
+
     # -- membership events ---------------------------------------------------
     def on_engine_failure(self, name: str):
         """A pair member fail-stopped.  Verify died: speculative slots
@@ -348,16 +415,7 @@ class SpeculativeTierController:
         self._dissolved = True
         if name == self.verify.name:
             for rid, st in list(self._spec.items()):
-                req = st.req
-                pending = len(req.output) - st.committed
-                if pending > 0 and req.slot in self.draft.engine.requests:
-                    self.draft.engine.rollback_slot(req.slot, pending, 0,
-                                                    None)
-                req.output[:] = req.output[:st.committed]
-                self._set_policy(self.draft.engine, req.slot,
-                                 req.temperature, req.top_k)
-                self._local.add(rid)
-                self.stats.local_fallbacks += 1
+                self._fall_back_to_local(rid, st)
         else:                                   # draft died
             for st in self._spec.values():
                 if st.replica_slot in self.verify.engine.requests:

@@ -2,8 +2,15 @@
 
 Everything the balancer and the operator need to see: tokens/s per
 engine and aggregate, request-completion latency percentiles
-(p50/p95/p99), admission rejections (backpressure), and a full audit log
-of per-request live migrations (who moved, from where, to where, why).
+(p50/p95/p99), admission rejections (backpressure), queue-wait and
+preemption-park latencies, a full audit log of per-request live
+migrations (who moved, from where, to where, why), and the unified
+lifecycle event log (every typed ``RequestTicket`` transition, recorded
+by cluster, balancer and speculative controller alike).
+
+All timing reads go through an injectable clock (any zero-arg float
+callable; ``channel.SimClock`` qualifies) so latency accounting and
+deadline expiry are deterministic under test.
 """
 
 from __future__ import annotations
@@ -57,14 +64,27 @@ def percentile(xs: list[float], q: float) -> float:
 
 
 class FleetTelemetry:
-    def __init__(self):
+    def __init__(self, clock=None):
+        self._clock = clock or time.perf_counter
         self.engines: dict[str, EngineStats] = {}
         self.migrations: list[MigrationRecord] = []
+        self.events: list = []           # LifecycleEvent audit log
         self.request_latency_s: list[float] = []
         self.step_latency_s: list[float] = []
+        self.queue_wait_s: list[float] = []
+        self.preempt_wait_s: list[float] = []   # park -> resume latency
         self.rejected = 0
         self.failovers = 0
-        self._t0 = time.perf_counter()
+        self.preemptions = 0
+        self.cancelled = 0
+        self.expired = 0
+        self._t0 = self._clock()
+
+    def bind_clock(self, clock):
+        """Adopt the fleet's injected clock so every timing read shares
+        one time base; re-anchors the tokens/s window."""
+        self._clock = clock
+        self._t0 = clock()
 
     def stats(self, name: str) -> EngineStats:
         if name not in self.engines:
@@ -98,12 +118,34 @@ class FleetTelemetry:
         self.stats(name).failed = True
         self.failovers += 1
 
+    def record_event(self, ev):
+        """A typed lifecycle transition (LifecycleEvent)."""
+        self.events.append(ev)
+
+    def record_queue_wait(self, wait_s: float):
+        self.queue_wait_s.append(wait_s)
+
+    def record_preemption(self):
+        self.preemptions += 1
+
+    def record_resume(self, wait_s: float):
+        self.preempt_wait_s.append(wait_s)
+
+    def record_cancelled(self):
+        self.cancelled += 1
+
+    def record_expired(self):
+        self.expired += 1
+
+    def events_of(self, rid: str) -> list:
+        return [ev for ev in self.events if ev.rid == rid]
+
     # -- reading ------------------------------------------------------------
     def fleet_tokens(self) -> int:
         return sum(s.tokens for s in self.engines.values())
 
     def fleet_tokens_per_s(self) -> float:
-        dt = time.perf_counter() - self._t0
+        dt = self._clock() - self._t0
         return self.fleet_tokens() / dt if dt > 0 else 0.0
 
     def latency_percentiles(self) -> dict[str, float]:
@@ -129,5 +171,15 @@ class FleetTelemetry:
                 "migrations": len(self.migrations),
                 **{k: round(v, 4)
                    for k, v in self.latency_percentiles().items()},
+            },
+            "lifecycle": {
+                "events": len(self.events),
+                "preemptions": self.preemptions,
+                "cancelled": self.cancelled,
+                "expired": self.expired,
+                "queue_wait_p50": round(percentile(self.queue_wait_s, 50),
+                                        4),
+                "preempt_wait_p50": round(
+                    percentile(self.preempt_wait_s, 50), 4),
             },
         }

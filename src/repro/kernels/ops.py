@@ -17,10 +17,8 @@ jnp oracle (``ref.py``).  Dispatch policy:
 from __future__ import annotations
 
 import os
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import attention as attn_ref
 

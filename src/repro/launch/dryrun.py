@@ -23,7 +23,6 @@ import time
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
-    import jax
     from repro.configs import SHAPES, entry, get
     from repro.launch import roofline, steps
     from repro.launch.mesh import make_production_mesh

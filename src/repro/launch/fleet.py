@@ -10,6 +10,14 @@ Speculative tier hand-off (draft on edge, verify on cloud):
         --engines edge:edge:96,cloud:cloud:256,mcu:mcu \
         --spec-tiers edge:cloud --drafter-temperature 0.8
 
+Priorities + preemption-by-migration (lifecycle API): one engine, a
+mixed-priority stream -- watch low-priority slots get parked
+(extract_slot/pack_slot) and resume when the high-priority work clears:
+
+    PYTHONPATH=src python -m repro.launch.fleet --tiny --requests 6 \
+        --engines edge:edge --slots 2 --priorities 0,5,10 \
+        --queue-limit 1 --deadline-s 60
+
 Flags
   --arch NAME            model config (default llama-1.5b)
   --tiny                 shrink the config (CPU-friendly smoke scale)
@@ -25,6 +33,14 @@ Flags
   --max-new N            tokens generated per request (default 16)
   --temperature F        sampling temperature for odd-numbered requests
                          (even ones stay greedy: mixed-policy batches)
+  --priorities LIST      comma list of ints cycled across the synthetic
+                         requests (e.g. 0,5,10); a higher-priority
+                         arrival preempts the lowest-priority in-flight
+                         slot via the migration machinery when no slot
+                         is free
+  --deadline-s F         relative deadline per request (seconds on the
+                         fleet clock); queued or parked work past it
+                         expires instead of occupying capacity
   --queue-limit N        admission-control bound (backpressure beyond it)
   --sync-every N         shadow-checkpoint cadence in fleet steps
   --rebalance-every N    load-smoothing cadence (0 = off, default)
@@ -48,6 +64,7 @@ Flags
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 PROFILES = {"edge": "EDGE", "cloud": "CLOUD", "mcu": "MCU"}
@@ -81,6 +98,8 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--priorities", default="0", metavar="LIST")
+    ap.add_argument("--deadline-s", type=float, default=None)
     ap.add_argument("--queue-limit", type=int, default=32)
     ap.add_argument("--sync-every", type=int, default=1)
     ap.add_argument("--rebalance-every", type=int, default=0)
@@ -102,9 +121,10 @@ def main():
     from repro.configs.tiny import make_tiny
     from repro.core import daemon
     from repro.core.attestation import TrustAuthority
-    from repro.fleet import EngineHandle, FleetController, Rebalancer
+    from repro.fleet import (EngineHandle, FleetController, Rebalancer,
+                             RequestSpec)
     from repro.models.init import init_params
-    from repro.serving.engine import Engine, Request
+    from repro.serving.engine import Engine
 
     cfg = get(args.arch)
     if args.tiny:
@@ -142,19 +162,33 @@ def main():
 
     rng = np.random.default_rng(args.seed)
     sens = ["public", "personal", "confidential"]
-    pending = [Request(rid=f"r{i}",
-                       prompt=rng.integers(5, cfg.vocab_size, 8),
-                       max_new_tokens=args.max_new,
-                       temperature=args.temperature if i % 2 else 0.0,
-                       top_k=16 if i % 2 else 0,
-                       sensitivity=sens[i % 3])
+    prios = [int(p) for p in args.priorities.split(",")]
+    pending = [RequestSpec(rid=f"r{i}",
+                           prompt=rng.integers(5, cfg.vocab_size, 8),
+                           max_new_tokens=args.max_new,
+                           temperature=args.temperature if i % 2 else 0.0,
+                           top_k=16 if i % 2 else 0,
+                           sensitivity=sens[i % 3],
+                           priority=prios[i % len(prios)])
                for i in range(args.requests)]
 
     fail = parse_event(args.fail)
     drain = parse_event(args.drain)
+    tickets = {}
     step = 0
     while pending or fleet.queue or fleet.orphans or fleet.inflight:
-        while pending and fleet.submit(pending[0]):
+        while pending:
+            spec = pending[0]
+            if args.deadline_s is not None:
+                # relative per request: anchor at actual submission,
+                # not at driver startup (backpressure must not shrink
+                # the window)
+                spec = dataclasses.replace(
+                    spec, deadline=fleet.clock() + args.deadline_s)
+            t = fleet.submit(spec)
+            if t is None:
+                break                # queue full: back off a step
+            tickets[t.rid] = t
             pending.pop(0)
         if fail and step == fail[1]:
             print(f"-- failing {fail[0]} at step {step} --")
@@ -184,11 +218,17 @@ def main():
                       f"orphaned snapshot from {src}, no eligible engine")
             raise SystemExit(1)
 
-    for rid in sorted(fleet.done):
-        req = fleet.done[rid]
-        route = "->".join(fleet.placements[rid])
-        print(f"{rid}[{req.sensitivity:12s}] via {route}: "
-              f"{req.output[:8]}{'...' if len(req.output) > 8 else ''}")
+    for rid in sorted(tickets):
+        t = tickets[rid]
+        route = "->".join(fleet.placements.get(rid, [])) or "-"
+        out = t.output
+        print(f"{rid}[{t.spec.sensitivity:12s} p{t.spec.priority:<3d} "
+              f"{t.state.value:9s}] via {route}: "
+              f"{out[:8]}{'...' if len(out) > 8 else ''}")
+    preempted = [ev for ev in fleet.telemetry.events
+                 if ev.dst == "migrating" and "preempted" in ev.reason]
+    for ev in preempted:
+        print(f"preempted {ev.rid} on {ev.engine}: {ev.reason}")
     print(json.dumps(fleet.telemetry.summary(), indent=1))
     for dname, spec in fleet.spec_controllers.items():
         print(f"speculative tier {dname}->{spec.verify.name}: "

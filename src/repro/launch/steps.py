@@ -6,7 +6,6 @@ the dry-run can ``.lower(*args).compile()`` without allocating anything.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,6 @@ attention-logit softcap (gemma2).  Softmax statistics are fp32.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -160,7 +159,6 @@ def flash_windowed(q, k, v, *, window: int, softcap=0.0, block=512,
     n = S // block
     scale = D ** -0.5
     band = window + block          # static band length
-    Skv = k.shape[1]
     # pad KV on the left so every band slice is in-bounds
     pad = band
     kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))

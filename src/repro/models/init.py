@@ -6,7 +6,6 @@ import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.schema import ParamDef, model_schema

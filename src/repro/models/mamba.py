@@ -107,7 +107,6 @@ def mamba_parallel(p, x, cfg: ModelConfig, *, state=None, conv_tail=None,
 
 def mamba_step(p, x, cfg: ModelConfig, *, state, conv_tail):
     """O(1) decode.  x: (B,1,d)."""
-    B = x.shape[0]
     di, st = cfg.d_inner, cfg.mamba_d_state
     xz = jnp.einsum("btd,dki->btki", x, p["in_proj"])
     xi, z = xz[:, :, 0], xz[:, :, 1]

@@ -15,13 +15,12 @@ Encoder-decoder (whisper) runs the encoder inside prefill/train; VLM
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.configs.base import LayerSpec, ModelConfig
+from repro.configs.base import ModelConfig
 from repro import sharding as shd
 from repro.models.layers import layer_apply, make_layer_cache, rmsnorm
 

@@ -19,7 +19,6 @@ capacity drops, which are disabled for the comparison).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -129,7 +128,6 @@ def moe_ep(p, x, cfg: ModelConfig, mesh: Mesh, rules=None):
     """Expert-parallel MoE.  x: (B,S,d).  Returns (out, aux_loss)."""
     moe = cfg.moe
     B, S, d = x.shape
-    T = B * S
     E = moe.num_experts
     ep_ax = "model"
     P_ep = mesh.shape[ep_ax]
@@ -220,7 +218,6 @@ def _moe_ep_replicated(p, x, cfg, mesh, E_loc, ep_ax):
     B, S, d = x.shape
     T = B * S
     E = moe.num_experts
-    P_ep = mesh.shape[ep_ax]
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape
                        and T % mesh.shape[a] == 0)
     t_loc = T

@@ -147,7 +147,6 @@ def timemix_parallel(p, x, cfg: ModelConfig, *, state=None, x_last=None,
 
 def timemix_step(p, x, cfg: ModelConfig, *, state, x_last):
     """O(1) decode step.  x: (B,1,d)."""
-    B = x.shape[0]
     x_prev = x_last[:, None]
     r, k, v, g, w = _projections(p, x, x_prev, cfg)
     r, k, v, w = (a[:, 0].astype(jnp.float32) for a in (r, k, v, w))

@@ -12,7 +12,7 @@ so shapes/shardings can never drift apart.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.configs.base import BlockDef, LayerSpec, ModelConfig
 

@@ -1,3 +1,8 @@
 from repro.serving.engine import (Engine, EngineState, Request, SlotArrays,
                                   SlotSnapshot, request_from_dict,
                                   request_to_dict)
+
+__all__ = [
+    "Engine", "EngineState", "Request", "SlotArrays", "SlotSnapshot",
+    "request_from_dict", "request_to_dict",
+]

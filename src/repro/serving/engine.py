@@ -53,6 +53,8 @@ class Request:
     temperature: float = 0.0
     top_k: int = 0
     sensitivity: str = "public"      # public | personal | confidential
+    priority: int = 0                # higher dispatches first / preempts
+    deadline: Optional[float] = None  # absolute fleet-clock expiry
     done: bool = False
     output: list = field(default_factory=list)
     slot: int = -1
@@ -64,7 +66,8 @@ def request_to_dict(req: Request) -> dict:
         "rid": req.rid, "prompt": np.asarray(req.prompt).tolist(),
         "max_new_tokens": req.max_new_tokens,
         "temperature": req.temperature, "top_k": req.top_k,
-        "sensitivity": req.sensitivity, "output": list(req.output),
+        "sensitivity": req.sensitivity, "priority": req.priority,
+        "deadline": req.deadline, "output": list(req.output),
         "slot": req.slot, "done": req.done,
     }
 
@@ -73,7 +76,9 @@ def request_from_dict(d: dict) -> Request:
     req = Request(rid=d["rid"], prompt=np.asarray(d["prompt"]),
                   max_new_tokens=d["max_new_tokens"],
                   temperature=d["temperature"], top_k=d["top_k"],
-                  sensitivity=d["sensitivity"])
+                  sensitivity=d["sensitivity"],
+                  priority=d.get("priority", 0),
+                  deadline=d.get("deadline"))
     req.output = list(d["output"])
     req.slot = d["slot"]
     req.done = d["done"]
@@ -452,7 +457,6 @@ def _decode_step(params, state: EngineState, *, cfg, mesh, rules):
     their state is masked out -- the static-shape batching standard).
     Sampling policy is per-slot: mixed-temperature batches read their
     temperature/top_k rows out of the state."""
-    B = state.last_token.shape[0]
     pos = state.positions[:, None]
     logits, caches, _ = forward(
         params, {"tokens": state.last_token[:, None]}, cfg=cfg,

@@ -11,19 +11,18 @@ GSPMD from the output sharding of the grads (same spec as params).
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.model import forward
 from repro.optim import adamw
 from repro.optim.adamw import AdamWConfig
-from repro.optim.compression import compressed_psum, init_residuals
+from repro.optim.compression import compressed_psum
 from repro import sharding as shd
 
 

@@ -1,0 +1,295 @@
+"""Request-lifecycle API: tickets, priorities, preemption-by-migration,
+deadlines, cancellation -- and the unified audit log behind them."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.configs.tiny import make_tiny
+from repro.core.attestation import TrustAuthority
+from repro.core.channel import SimClock
+from repro.core.daemon import EDGE, DeviceProfile
+from repro.fleet import (DeadlineExpired, EngineHandle, FleetController,
+                         RequestCancelled, RequestSpec, RequestState,
+                         Router)
+from repro.models.init import init_params
+from repro.serving.engine import Engine, Request
+
+CFG = make_tiny(get("llama-1.5b"))
+PARAMS = None
+MAX_LEN = 64
+
+
+def _params():
+    global PARAMS
+    if PARAMS is None:
+        PARAMS = init_params(CFG, jax.random.key(0))
+    return PARAMS
+
+
+def mk_engine(seed=0, slots=1, max_len=MAX_LEN):
+    return Engine(CFG, _params(), slots=slots, max_len=max_len, seed=seed)
+
+
+def mk_fleet(n=1, slots=1, **kw):
+    handles = [EngineHandle(f"e{i}", mk_engine(seed=i, slots=slots), EDGE)
+               for i in range(n)]
+    return FleetController(handles, authority=TrustAuthority(), **kw)
+
+
+def reference_output(prompt, max_new, *, slots=1, seed=1234):
+    """Uninterrupted solo run on the SAME compiled geometry (slots,
+    max_len) as the fleet engines: the bit-exactness oracle."""
+    eng = mk_engine(seed=seed, slots=slots)
+    req = Request("ref", np.asarray(prompt), max_new_tokens=max_new)
+    eng.add_request(req)
+    while not req.done:
+        eng.step()
+    return req.output
+
+
+def states_of(ticket):
+    return [ev.dst for ev in ticket.events]
+
+
+# -- tickets: observation and streaming --------------------------------------
+
+def test_submit_returns_ticket_with_streaming_and_event_chain():
+    fleet = mk_fleet()
+    t = fleet.submit(RequestSpec(prompt=np.arange(5), rid="r0",
+                                 max_new_tokens=8))
+    assert t.state is RequestState.QUEUED
+    assert t.tokens() == []
+    fleet.step()
+    assert t.state is RequestState.DECODING
+    streamed = t.tokens()
+    assert len(streamed) == 1                 # one committed token so far
+    out = t.result()
+    assert streamed + t.tokens() == out       # incremental reads compose
+    assert out == reference_output(np.arange(5), 8)
+    assert states_of(t) == ["queued", "prefilling", "decoding", "done"]
+    # the same transitions landed on the fleet-wide audit log
+    assert [ev.dst for ev in fleet.telemetry.events_of("r0")] == \
+        states_of(t)
+
+
+def test_legacy_request_submission_still_returns_bool():
+    """The back-compat contract: mutable Requests get exact booleans
+    (and an internal ticket so the audit log stays uniform)."""
+    fleet = mk_fleet(slots=2, queue_limit=2)
+    oks = [fleet.submit(Request(f"r{i}", np.arange(4), max_new_tokens=4))
+           for i in range(3)]
+    assert oks == [True, True, False]
+    assert fleet.telemetry.rejected == 1
+    assert fleet.tickets["r0"].state is RequestState.QUEUED
+    outs = fleet.run()
+    assert len(outs) == 2
+    assert fleet.tickets["r0"].state is RequestState.DONE
+
+
+# -- preemption via the migration machinery ----------------------------------
+
+def test_preempted_request_resumes_bit_identical():
+    """Acceptance: a higher-priority arrival parks the lowest-priority
+    in-flight slot (extract_slot -> pack_slot, the migration departure
+    path); the victim resumes later and its final output is bit-exactly
+    the uninterrupted run on the same engine geometry."""
+    fleet = mk_fleet(n=1, slots=1)
+    low = fleet.submit(RequestSpec(prompt=np.arange(6), rid="low",
+                                   max_new_tokens=16, priority=0))
+    for _ in range(4):
+        fleet.step()                  # low is mid-decode
+    assert low.state is RequestState.DECODING
+    high = fleet.submit(RequestSpec(prompt=np.arange(5), rid="high",
+                                    max_new_tokens=6, priority=10))
+    fleet.step()
+    # migration as the preemption primitive: low is parked off-engine
+    assert low.state is RequestState.MIGRATING
+    assert high.state is RequestState.DECODING
+    assert len(fleet.orphans) == 1    # the parked slot rides the orphan path
+    assert fleet.telemetry.preemptions == 1
+
+    assert high.result() == reference_output(np.arange(5), 6)
+    assert low.result() == reference_output(np.arange(6), 16)
+    assert states_of(low) == ["queued", "prefilling", "decoding",
+                              "migrating", "decoding", "done"]
+    # the resume is on the migration audit log and its wait was measured
+    assert any(m.reason == "resume" and m.rid == "low"
+               for m in fleet.telemetry.migrations)
+    assert len(fleet.telemetry.preempt_wait_s) == 1
+
+
+def test_preemption_respects_priority_strictness_and_policy():
+    """Equal priority never preempts (no livelock), and a policy-gated
+    request never evicts anyone (a freed slot would not help it)."""
+    fleet = mk_fleet(n=1, slots=1)
+    a = fleet.submit(RequestSpec(prompt=np.arange(4), rid="a",
+                                 max_new_tokens=12, priority=5))
+    fleet.step()
+    b = fleet.submit(RequestSpec(prompt=np.arange(4), rid="b",
+                                 max_new_tokens=4, priority=5))
+    fleet.step()
+    assert a.state is RequestState.DECODING      # not preempted by equal
+    assert b.state is RequestState.QUEUED
+    assert fleet.telemetry.preemptions == 0
+    # unattested-only fleet: confidential work must not evict public work
+    from repro.core.daemon import MCU
+    mfleet = FleetController([EngineHandle("mcu", mk_engine(seed=7), MCU)],
+                             authority=TrustAuthority())
+    pub = mfleet.submit(RequestSpec(prompt=np.arange(4), rid="pub",
+                                    max_new_tokens=12))
+    mfleet.step()
+    conf = mfleet.submit(RequestSpec(prompt=np.arange(4), rid="conf",
+                                     max_new_tokens=4, priority=99,
+                                     sensitivity="confidential"))
+    mfleet.step()
+    assert pub.state is RequestState.DECODING
+    assert conf.state is RequestState.QUEUED
+    assert mfleet.telemetry.preemptions == 0
+
+
+def test_preempted_then_cancelled_frees_everything():
+    fleet = mk_fleet(n=1, slots=1)
+    low = fleet.submit(RequestSpec(prompt=np.arange(6), rid="low",
+                                   max_new_tokens=16))
+    fleet.step()
+    high = fleet.submit(RequestSpec(prompt=np.arange(5), rid="high",
+                                    max_new_tokens=6, priority=3))
+    fleet.step()
+    assert low.state is RequestState.MIGRATING
+    assert low.cancel()
+    assert low.state is RequestState.CANCELLED
+    assert len(fleet.orphans) == 0    # parked blob dropped
+    assert high.result() == reference_output(np.arange(5), 6)
+    with pytest.raises(RequestCancelled):
+        low.result()
+
+
+# -- cancellation ------------------------------------------------------------
+
+def test_cancel_frees_slot_immediately():
+    fleet = mk_fleet(n=1, slots=1)
+    a = fleet.submit(RequestSpec(prompt=np.arange(4), rid="a",
+                                 max_new_tokens=30))
+    fleet.step()
+    assert a.state is RequestState.DECODING
+    assert a.cancel() is True
+    assert a.cancel() is False                 # idempotent: already dead
+    assert fleet.handles["e0"].engine.free_slots == [0]
+    assert "a" not in fleet.inflight
+    b = fleet.submit(RequestSpec(prompt=np.arange(4), rid="b",
+                                 max_new_tokens=4))
+    assert b.result() == reference_output(np.arange(4), 4)
+    assert "a" not in fleet.done               # cancelled != completed
+    assert fleet.telemetry.cancelled == 1
+
+
+def test_cancel_queued_request_never_runs():
+    fleet = mk_fleet(n=1, slots=1)
+    fleet.submit(RequestSpec(prompt=np.arange(4), rid="a",
+                             max_new_tokens=20))
+    fleet.step()
+    c = fleet.submit(RequestSpec(prompt=np.arange(4), rid="c",
+                                 max_new_tokens=4))
+    assert c.cancel()
+    outs = fleet.run()
+    assert "c" not in outs and "c" not in fleet.placements
+    assert c.state is RequestState.CANCELLED
+
+
+# -- deadlines (deterministic via the injected SimClock) ---------------------
+
+def test_deadline_expires_queued_ticket_deterministically():
+    clk = SimClock()
+    fleet = mk_fleet(n=1, slots=1, clock=clk)
+    fleet.submit(RequestSpec(prompt=np.arange(4), rid="a",
+                             max_new_tokens=20))
+    fleet.step()
+    d = fleet.submit(RequestSpec(prompt=np.arange(4), rid="d",
+                                 max_new_tokens=4, deadline=clk() + 5.0))
+    clk.advance(4.0)
+    fleet.step()
+    assert d.state is RequestState.QUEUED      # still within deadline
+    clk.advance(2.0)
+    fleet.step()                               # 6.0 > 5.0: expired
+    assert d.state is RequestState.EXPIRED
+    assert fleet.telemetry.expired == 1
+    with pytest.raises(DeadlineExpired):
+        d.result()
+    # queue-wait accounting reads the same injected clock
+    assert fleet.telemetry.queue_wait_s == [0.0]
+
+
+def test_deadline_expires_parked_ticket():
+    """A preempted-parked request past its deadline is dropped instead
+    of re-placed: the blob leaves the orphan path within one step."""
+    clk = SimClock()
+    fleet = mk_fleet(n=1, slots=1, clock=clk)
+    low = fleet.submit(RequestSpec(prompt=np.arange(6), rid="low",
+                                   max_new_tokens=16, priority=0,
+                                   deadline=clk() + 5.0))
+    fleet.step()
+    high = fleet.submit(RequestSpec(prompt=np.arange(5), rid="high",
+                                    max_new_tokens=8, priority=9))
+    fleet.step()
+    assert low.state is RequestState.MIGRATING and len(fleet.orphans) == 1
+    clk.advance(10.0)
+    fleet.step()
+    assert low.state is RequestState.EXPIRED
+    assert len(fleet.orphans) == 0
+    assert high.result() == reference_output(np.arange(5), 8)
+
+
+def test_deadline_urgency_feeds_router_cost_model():
+    """When the load-balanced pick would miss the deadline, routing goes
+    latency-optimal: the raw-fastest engine wins even though it is busy
+    and the idle slower engine would normally get the request."""
+    fast_prof = DeviceProfile("fast", peak_flops=30e12, hbm_bw=450e9)
+    slow_prof = DeviceProfile("slow", peak_flops=20e12, hbm_bw=300e9)
+    fast = EngineHandle("fast", mk_engine(seed=0, slots=4), fast_prof)
+    slow = EngineHandle("slow", mk_engine(seed=1, slots=4), slow_prof)
+    for i in range(3):                # fast is busy: load 0.75
+        fast.engine.add_request(Request(f"pad{i}", np.arange(3),
+                                        max_new_tokens=30))
+    router = Router()
+    kw = dict(sensitivity="public", prefill_tokens=6, decode_tokens=16)
+    lax = router.route([fast, slow], CFG, **kw)
+    assert lax.target == "slow"       # load-balanced: idle engine wins
+    urgent = router.route([fast, slow], CFG, deadline_slack=1e-12, **kw)
+    assert urgent.target == "fast"    # latency-optimal: raw roofline wins
+    assert "deadline-urgent" in urgent.reason
+    plenty = router.route([fast, slow], CFG, deadline_slack=1e9, **kw)
+    assert plenty.target == "slow"    # met comfortably: stay balanced
+
+
+# -- failover interplay ------------------------------------------------------
+
+def test_failover_transitions_ride_the_same_audit_log():
+    """An engine failure shows up on tickets as DECODING -> MIGRATING ->
+    DECODING (shadow re-placement) and the request still completes."""
+    fleet = mk_fleet(n=2, slots=2)
+    t = fleet.submit(RequestSpec(prompt=np.arange(6), rid="r",
+                                 max_new_tokens=12))
+    for _ in range(3):
+        fleet.step()
+    victim = fleet.placement_of("r")
+    fleet.fail(victim)
+    out = t.result()
+    assert out == reference_output(np.arange(6), 12, slots=2)
+    assert states_of(t) == ["queued", "prefilling", "decoding",
+                            "migrating", "decoding", "done"]
+
+
+def test_result_fails_cleanly_when_fleet_stalls():
+    from repro.core.daemon import MCU
+    from repro.fleet import RequestFailed
+    fleet = FleetController([EngineHandle("mcu", mk_engine(seed=2,
+                                                           slots=2), MCU)],
+                            authority=TrustAuthority())
+    t = fleet.submit(RequestSpec(prompt=np.arange(4), rid="conf",
+                                 max_new_tokens=4,
+                                 sensitivity="confidential"))
+    with pytest.raises(RequestFailed):
+        t.result(max_steps=50)
+    assert t.state is RequestState.FAILED

@@ -193,14 +193,54 @@ def test_foreign_failover_slot_onto_draft_engine_completes():
             fleet.done[rid].prompt, 10, max_len=EDGE_LEN), rid
 
 
-def test_drain_of_tier_paired_engine_is_refused():
-    fleet = mk_spec_fleet()
-    fleet.submit(mk_requests(1)[0])
-    fleet.step()
-    with pytest.raises(ValueError, match="pinned"):
-        fleet.drain("edge")
-    with pytest.raises(ValueError, match="pinned"):
-        fleet.drain("cloud")
+def test_drain_verify_engine_dissolves_pair_to_local_drafting():
+    """Draining the verify tier is a planned dissolution, not a refusal:
+    speculative requests drop their uncommitted tails and finish
+    local-only on the draft engine (drained early enough that nothing
+    was committed, the output is pure draft-engine greedy)."""
+    fleet = mk_spec_fleet(gamma=4)
+    reqs = mk_requests(2, max_new=12)
+    for r in reqs:
+        assert fleet.submit(r)
+    for _ in range(3):
+        fleet.step()                  # mid-draft, nothing committed yet
+    fleet.drain("cloud")
+    assert not fleet.spec_controllers           # pair dissolved
+    assert fleet.handles["edge"].spec_role is None
+    assert fleet.handles["cloud"].spec_role is None
+    assert not fleet.handles["cloud"].healthy   # drained away
+    outs = fleet.run()
+    for r in reqs:
+        assert outs[r.rid] == reference_output(r.prompt, 12,
+                                               max_len=EDGE_LEN), r.rid
+        assert fleet.tickets[r.rid].state.value == "done"
+
+
+def test_drain_draft_engine_dissolves_pair_and_migrates_slots():
+    """The ROADMAP 'drain/rebalance of tier-paired engines' item:
+    draining the *draft* engine dissolves the pair (uncommitted tails
+    dropped), releases the reserved verify engine back into the fleet,
+    and live-migrates the now-plain slots off the drained engine --
+    where they resume bit-identically (edge-computed prefix, verify-
+    geometry continuation, exactly the hand-off numerics contract)."""
+    fleet = mk_spec_fleet(gamma=4)
+    reqs = mk_requests(2, max_new=12)
+    for r in reqs:
+        assert fleet.submit(r)
+    for _ in range(3):
+        fleet.step()                  # mid-draft, nothing committed yet
+    moved = fleet.drain("edge")
+    assert moved == 2                 # both slots left the draft engine
+    assert not fleet.spec_controllers
+    assert not fleet.handles["edge"].healthy
+    assert all(m.reason == "drain" and m.src == "edge" and
+               m.dst == "cloud" for m in
+               fleet.telemetry.migrations if m.reason == "drain")
+    outs = fleet.run()
+    for r in reqs:
+        assert fleet.placements[r.rid][-1] == "cloud"
+        assert outs[r.rid] == reference_output(r.prompt, 12,
+                                               max_len=CLOUD_LEN), r.rid
 
 
 def test_wide_mode_refused_for_unsupported_mixers(monkeypatch):

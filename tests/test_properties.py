@@ -160,3 +160,65 @@ def test_repack_slot_roundtrip_bit_exact(seed, repeats, kv, dh, plen,
     like = jax.eval_shape(lambda: snap.arrays)
     assert pack_slot(unpack_slot(wire, like)) == wire
     assert_repack_roundtrip(snap, max_len + grow_extra)
+
+
+# -- fleet lifecycle: dispatch ordering ---------------------------------------
+
+_SCHED_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"), st.integers(0, 3)),
+        st.tuples(st.just("cancel"), st.integers(0, 31)),
+        st.tuples(st.just("expire"), st.integers(0, 31)),
+        st.tuples(st.just("preempt"), st.integers(0, 31)),
+        st.tuples(st.just("dispatch"), st.just(0)),
+    ),
+    min_size=1, max_size=60)
+
+
+@given(_SCHED_OPS)
+@settings(max_examples=80, deadline=None)
+def test_dispatch_order_respects_priority_then_submit_time(ops):
+    """The fleet's WorkQueue invariant under random interleavings of
+    submit / cancel / expire / preempt-park: every dispatch picks a
+    maximal item under (priority desc, submit-seq asc), and a preempted
+    item re-enters with its ORIGINAL seq (it resumes ahead of anything
+    admitted after it, never behind)."""
+    from repro.fleet.lifecycle import WorkItem, WorkQueue, work_order
+    wq = WorkQueue()
+    pending: dict[str, object] = {}   # rid -> WorkItem in the queue
+    running: dict[str, object] = {}   # rid -> dispatched item
+    n = 0
+    for op, arg in ops:
+        if op == "submit":
+            seq = wq.next_seq()
+            it = WorkItem(rid=f"r{n}", priority=arg, seq=seq,
+                          t_submit=float(seq))
+            wq.push(it)
+            pending[it.rid] = it
+            n += 1
+        elif op in ("cancel", "expire") and pending:
+            rid = sorted(pending)[arg % len(pending)]
+            assert wq.remove(rid) is not None
+            del pending[rid]
+        elif op == "preempt" and running:
+            rid = sorted(running)[arg % len(running)]
+            it = running.pop(rid)
+            parked = WorkItem(rid=it.rid, priority=it.priority,
+                              seq=it.seq, t_submit=it.t_submit,
+                              blob=b"x", src="e", origin="preempt")
+            wq.push(parked)           # keeps its original seq
+            pending[rid] = parked
+        elif op == "dispatch" and pending:
+            best = wq.ordered()[0]
+            key = (-best.priority, best.seq)
+            assert all(key <= (-it.priority, it.seq)
+                       for it in pending.values()), \
+                "dispatched a dominated item"
+            wq.remove(best.rid)
+            del pending[best.rid]
+            running[best.rid] = best
+    # draining what's left yields exactly the sorted survivors
+    final = [it.rid for it in wq.ordered()]
+    assert final == [it.rid for it in work_order(list(pending.values()))]
+    keys = [(-it.priority, it.seq) for it in wq.ordered()]
+    assert keys == sorted(keys)
