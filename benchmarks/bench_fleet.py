@@ -1,7 +1,9 @@
 """Fleet orchestration overheads: scaling vs a single engine, the cost
-of shadow checkpoints, per-slot live-migration latency, and the
-lifecycle API under a mixed-priority workload (preemption-park latency
-and completion percentiles by priority class).
+of shadow checkpoints, per-slot live-migration latency, the lifecycle
+API under a mixed-priority workload (preemption-park latency and
+completion percentiles by priority class), and elastic autoscaling
+(scale-up reaction latency, post-scale queue-wait percentiles, and
+per-priority completion with autoscaling on vs off).
 
     PYTHONPATH=src python benchmarks/bench_fleet.py
 """
@@ -83,6 +85,7 @@ def main():
     emit("fleet/unpack_inject_slot", timeit(inject) * 1e6)
 
     bench_priority_workload(cfg, params)
+    bench_autoscale(cfg, params)
     write_bench_json("fleet")
 
 
@@ -137,6 +140,76 @@ def bench_priority_workload(cfg, params):
              percentile(xs, 50) * 1e6,
              f"{len(xs)} requests")
         emit(f"fleet/prio{prio}_complete_p99", percentile(xs, 99) * 1e6)
+
+
+def bench_autoscale(cfg, params):
+    """A bursty mixed-priority stream hits a one-engine pool, with and
+    without the autoscaler armed.  Reports the scale-up reaction
+    latency (burst arrival -> first spawn event, in wall time and fleet
+    steps), queue-wait p50/p99, and per-priority completion p50/p99 for
+    both runs -- the direct cost/benefit of elasticity."""
+    from repro.core.attestation import TrustAuthority
+    from repro.core.daemon import EDGE
+    from repro.fleet import (Autoscaler, EngineHandle, EngineTemplate,
+                             FleetController, RequestSpec, ScalePolicy,
+                             percentile)
+    from repro.serving.engine import Engine
+
+    def run(autoscale: bool):
+        rng = np.random.default_rng(0)
+        autoscaler = Autoscaler(
+            EngineTemplate(name="auto", profile=EDGE, slots=2,
+                           max_len=64, seed=50),
+            ScalePolicy(min_engines=1, max_engines=3,
+                        scale_up_queue_depth=3)) if autoscale else None
+        fleet = FleetController(
+            [EngineHandle("e0", Engine(cfg, params, slots=2, max_len=64,
+                                       seed=0), EDGE)],
+            authority=TrustAuthority(), autoscaler=autoscaler)
+        t_burst = time.perf_counter()
+        tickets = [fleet.submit(RequestSpec(
+            rid=f"b{i}", prompt=rng.integers(5, cfg.vocab_size, 6),
+            max_new_tokens=MAX_NEW, priority=(0, 5, 10)[i % 3]))
+            for i in range(REQS)]
+        steps = 0
+        reaction_steps = None
+        while not all(t.done for t in tickets):
+            fleet.step()
+            steps += 1
+            if reaction_steps is None and fleet.telemetry.scale_ups:
+                reaction_steps = steps
+        spawns = [ev for ev in fleet.telemetry.scale_events()
+                  if ev.action == "spawn"]
+        reaction_s = spawns[0].t - t_burst if spawns else None
+        return fleet, tickets, reaction_s, reaction_steps, steps
+
+    for autoscale in (False, True):
+        tag = "autoscale" if autoscale else "noscale"
+        fleet, tickets, reaction_s, reaction_steps, steps = run(autoscale)
+        tel = fleet.telemetry
+        if autoscale and reaction_s is not None:
+            emit("fleet/autoscale_reaction", reaction_s * 1e6,
+                 f"burst -> first spawn (step {reaction_steps})")
+            emit("fleet/autoscale_spawns", float(tel.scale_ups),
+                 f"pool peaked at {tel.scale_ups + 1}")
+        emit(f"fleet/{tag}_steps_to_drain", float(steps),
+             f"{REQS} reqs x {MAX_NEW} tokens")
+        emit(f"fleet/{tag}_queue_wait_p50",
+             percentile(tel.queue_wait_s, 50) * 1e6)
+        emit(f"fleet/{tag}_queue_wait_p99",
+             percentile(tel.queue_wait_s, 99) * 1e6)
+        by_prio = {}
+        for t in tickets:
+            done = [ev.t for ev in t.events if ev.dst == "done"]
+            if done:
+                by_prio.setdefault(t.spec.priority, []).append(
+                    done[0] - t.submitted_at)
+        for prio in sorted(by_prio, reverse=True):
+            xs = by_prio[prio]
+            emit(f"fleet/{tag}_prio{prio}_complete_p50",
+                 percentile(xs, 50) * 1e6, f"{len(xs)} requests")
+            emit(f"fleet/{tag}_prio{prio}_complete_p99",
+                 percentile(xs, 99) * 1e6)
 
 
 if __name__ == "__main__":

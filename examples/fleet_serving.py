@@ -23,8 +23,9 @@ from repro.configs import get
 from repro.configs.tiny import make_tiny
 from repro.core.attestation import TrustAuthority
 from repro.core.daemon import CLOUD, EDGE, MCU
-from repro.fleet import (EngineHandle, FleetController, RequestSpec,
-                         RequestState)
+from repro.fleet import (Autoscaler, EngineHandle, EngineTemplate,
+                         FleetController, RequestSpec, RequestState,
+                         ScalePolicy)
 from repro.models.init import init_params
 from repro.serving.engine import Engine, Request
 
@@ -117,6 +118,53 @@ def lifecycle_act(cfg, params):
     print(f"doomed: {doomed.state.value}; engine free again: "
           f"{fleet.handles['laptop'].engine.free_slots == [0]}")
     print("lifecycle telemetry:", fleet.telemetry.summary()["lifecycle"])
+
+    autoscale_act(cfg, params)
+
+
+def autoscale_act(cfg, params):
+    """Elastic pool: a burst grows the fleet, idleness shrinks it --
+    and scale-down drains via the migration path, never dropping work."""
+    print("\n-- act three: elastic autoscaling --")
+    rng = np.random.default_rng(23)
+    fleet = FleetController(
+        [EngineHandle("seed",
+                      Engine(cfg, params, slots=2, max_len=64, seed=30),
+                      EDGE)],
+        authority=TrustAuthority(),
+        autoscaler=Autoscaler(
+            EngineTemplate(name="burst", profile=EDGE, slots=2,
+                           max_len=64, seed=40),
+            ScalePolicy(min_engines=1, max_engines=3,
+                        scale_up_queue_depth=3, scale_down_util=0.3)))
+
+    # burst arrival: eight requests hit a one-engine, two-slot pool
+    burst = [fleet.submit(RequestSpec(
+        rid=f"burst{i}", prompt=rng.integers(5, cfg.vocab_size, 6),
+        max_new_tokens=10)) for i in range(8)]
+    while not all(t.done for t in burst):
+        fleet.step()
+    grown = [ev for ev in fleet.telemetry.scale_events()
+             if ev.action == "spawn"]
+    print(f"burst of {len(burst)} served; pool grew by {len(grown)}:")
+    for ev in grown:
+        print(f"  spawn {ev.engine} (pool {ev.engines}): {ev.reason}")
+
+    # idle: the pool drains back down to min_engines, each retired
+    # engine leaving through drain() -- migration, not deletion
+    while fleet.autoscaler.spawned:
+        fleet.step()
+    retired = [ev for ev in fleet.telemetry.scale_events()
+               if ev.action == "retire"]
+    print(f"idle again: pool shrank to {sorted(fleet.handles)} "
+          f"({len(retired)} retires, all drained via migration)")
+    placements = {t.rid: "->".join(fleet.placements[t.rid])
+                  for t in burst}
+    moved = {r: p for r, p in placements.items() if "->" in p}
+    print(f"requests that rode a scale event: {moved or 'none'}")
+    print("scaling telemetry:", {
+        k: v for k, v in fleet.telemetry.summary()["lifecycle"].items()
+        if k.startswith("scale")})
 
 
 if __name__ == "__main__":

@@ -19,8 +19,15 @@ speculative -- draft/verify tier pairs: draft on an edge engine, slot
                hand-off over the attested wire (heterogeneous max_len
                via migration.repack_slot), teacher-forced verification
                on a cloud engine with rejected suffixes bounced back
+autoscaler  -- elastic pool membership: EngineTemplate + ScalePolicy
+               drive spawn (new engine joins router/balancer at once)
+               and drain-then-retire (every slot migrates or parks via
+               the migration path -- scaling is migration), with typed
+               ScaleEvents on the unified audit log
 """
 
+from repro.fleet.autoscaler import (Autoscaler, EngineTemplate,
+                                    ScaleEvent, ScalePolicy, ScaleSignals)
 from repro.fleet.balancer import Rebalancer, peek_slot_meta
 from repro.fleet.cluster import EngineHandle, FleetController
 from repro.fleet.lifecycle import (DeadlineExpired, LifecycleError,
@@ -28,18 +35,20 @@ from repro.fleet.lifecycle import (DeadlineExpired, LifecycleError,
                                    RequestFailed, RequestSpec,
                                    RequestState, RequestTicket,
                                    TERMINAL_STATES, WorkItem, WorkQueue,
-                                   work_order)
+                                   effective_priority, work_order)
 from repro.fleet.router import RouteDecision, Router
 from repro.fleet.speculative import SpecTierStats, SpeculativeTierController
 from repro.fleet.telemetry import (EngineStats, FleetTelemetry,
                                    MigrationRecord, percentile)
 
 __all__ = [
-    "DeadlineExpired", "EngineHandle", "EngineStats", "FleetController",
-    "FleetTelemetry", "LifecycleError", "LifecycleEvent",
-    "MigrationRecord", "Rebalancer", "RequestCancelled", "RequestFailed",
-    "RequestSpec", "RequestState", "RequestTicket", "RouteDecision",
-    "Router", "SpecTierStats", "SpeculativeTierController",
-    "TERMINAL_STATES", "WorkItem", "WorkQueue",
-    "peek_slot_meta", "percentile", "work_order",
+    "Autoscaler", "DeadlineExpired", "EngineHandle", "EngineStats",
+    "EngineTemplate", "FleetController", "FleetTelemetry",
+    "LifecycleError", "LifecycleEvent", "MigrationRecord", "Rebalancer",
+    "RequestCancelled", "RequestFailed", "RequestSpec", "RequestState",
+    "RequestTicket", "RouteDecision", "Router", "ScaleEvent",
+    "ScalePolicy", "ScaleSignals", "SpecTierStats",
+    "SpeculativeTierController", "TERMINAL_STATES", "WorkItem",
+    "WorkQueue", "effective_priority", "peek_slot_meta", "percentile",
+    "work_order",
 ]

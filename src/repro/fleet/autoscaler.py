@@ -1,0 +1,229 @@
+"""Elastic autoscaling: queue/deadline-driven engine spawn & drain.
+
+MVVM keeps service alive by moving work between heterogeneous hosts;
+this module makes the *pool itself* elastic while holding the same
+invariant the migration machinery already guarantees: **scaling is
+migration**.  Scale-up instantiates a fresh ``Engine`` from a declared
+``EngineTemplate`` and registers it with the router/balancer, so queued
+and parked work dispatches onto it at the very next dispatch pass.
+Scale-down never kills state: the victim engine is drained through the
+exact live-migration departure path (``extract_slot -> pack_slot ->
+place_blob``; anything momentarily unplaceable parks on the fleet work
+queue like a preempted slot) and only then is the handle retired --
+no request is ever lost or duplicated by a scale event, which is what
+makes elasticity *testable* (see tests/test_fleet_autoscale.py).
+
+The ``Autoscaler`` runs once per ``FleetController.step()``, reading
+the telemetry signals the lifecycle layer already records -- work-queue
+depth (fresh + parked), queue-wait p95 over a recent window, the
+deadline-expiry rate, and per-engine slot utilization -- against a
+declarative ``ScalePolicy``.  All timing (cooldown included) reads the
+injectable fleet clock, so every decision is deterministic under a
+``channel.SimClock``.
+
+Every membership change is a typed ``ScaleEvent`` on the *unified*
+audit log (``FleetTelemetry.events``), interleaved with the
+``LifecycleEvent`` stream: a chronological read shows the retire event
+immediately followed by the MIGRATING transitions of the slots it
+displaced.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.daemon import DeviceProfile
+from repro.fleet.cluster import EngineHandle
+from repro.fleet.telemetry import percentile
+from repro.serving.engine import Engine
+
+
+@dataclass(frozen=True)
+class EngineTemplate:
+    """Everything needed to stamp out one more engine replica: the
+    device profile (its ``attested`` bit decides whether the fleet
+    authority issues the new engine an attester -- a spawned attested
+    engine can unstick a policy-gated confidential backlog), the
+    compiled geometry (``slots``, ``max_len`` -- greedy bit-exactness
+    only holds within one geometry, so templates should match the fleet
+    they join), and a base rng seed (spawn *i* uses ``seed + i``)."""
+    name: str = "auto"               # spawned engines are name0, name1...
+    profile: DeviceProfile = None
+    slots: int = 4
+    max_len: int = 128
+    seed: int = 10_000
+
+
+@dataclass(frozen=True)
+class ScalePolicy:
+    """Declarative scaling rules.  ``min_engines``/``max_engines``
+    bound the routable pool (healthy, non-verify-reserved engines).
+    Scale-up fires when ANY armed pressure signal trips; scale-down
+    only when the backlog is empty and mean slot utilization sits at or
+    below ``scale_down_util``.  ``cooldown_s`` (fleet clock) separates
+    consecutive scale events so one burst cannot thrash the pool."""
+    min_engines: int = 1
+    max_engines: int = 4
+    scale_up_queue_depth: int = 4    # pending items (fresh+parked); 0 = off
+    scale_up_wait_p95: Optional[float] = None   # seconds; None = off
+    scale_up_on_expiry: bool = True  # deadline misses while queued/parked
+    scale_down_util: float = 0.25    # mean occupied-slot fraction
+    cooldown_s: float = 0.0
+    window: int = 64                 # queue-wait samples for the p95
+
+    def decide(self, sig: "ScaleSignals", *, now: float,
+               last_scale: Optional[float]) -> tuple[Optional[str], str]:
+        """Pure decision: ("up"|"down"|None, reason).  Separated from
+        application so tests can drive it without real engines."""
+        if last_scale is not None and now - last_scale < self.cooldown_s:
+            return None, "cooldown"
+        if sig.engines < self.min_engines:
+            return "up", f"pool {sig.engines} below min {self.min_engines}"
+        if sig.engines < self.max_engines:
+            if 0 < self.scale_up_queue_depth <= sig.depth:
+                return "up", (f"queue depth {sig.depth} >= "
+                              f"{self.scale_up_queue_depth}")
+            if self.scale_up_wait_p95 is not None \
+                    and sig.wait_p95 > self.scale_up_wait_p95:
+                return "up", (f"queue-wait p95 {sig.wait_p95:.4f}s > "
+                              f"{self.scale_up_wait_p95:.4f}s")
+            if self.scale_up_on_expiry and sig.expired_delta > 0:
+                return "up", (f"{sig.expired_delta} deadline expiries "
+                              "since last decision")
+        if sig.engines > self.min_engines and sig.depth == 0 \
+                and sig.utilization <= self.scale_down_util:
+            return "down", (f"idle: utilization {sig.utilization:.2f} <= "
+                            f"{self.scale_down_util:.2f}")
+        return None, ""
+
+
+@dataclass
+class ScaleSignals:
+    """One observation of the pressure signals a decision reads."""
+    depth: int                       # pending work items (fresh + parked)
+    wait_p95: float                  # recent queue-wait p95 (seconds)
+    expired_delta: int               # deadline expiries since last look
+    utilization: float               # mean occupied-slot fraction
+    engines: int                     # routable pool size
+
+
+@dataclass
+class ScaleEvent:
+    """One fleet membership change on the unified audit log."""
+    action: str                      # "spawn" | "retire"
+    engine: str
+    reason: str
+    t: float                         # fleet clock at the decision
+    engines: int = 0                 # routable pool size AFTER the event
+    signals: Optional[ScaleSignals] = None
+    rid: str = ""                    # keeps per-rid filters on the mixed
+    #                                  event log trivially correct
+
+
+class Autoscaler:
+    """Spawn/retire engines from telemetry pressure, one decision per
+    fleet step.  Only engines this autoscaler spawned are retirement
+    candidates -- the operator's seed fleet is never scaled away."""
+
+    def __init__(self, template: EngineTemplate,
+                 policy: ScalePolicy | None = None):
+        assert template.profile is not None, \
+            "EngineTemplate needs a DeviceProfile"
+        self.template = template
+        self.policy = policy or ScalePolicy()
+        self.spawned: list[str] = []     # live spawned engine names
+        self.events: list[ScaleEvent] = []
+        self._n_spawned = 0              # ever, for unique names/seeds
+        self._last_scale: Optional[float] = None
+        self._expired_seen = 0
+
+    # -- observation --------------------------------------------------------
+    def signals(self, fleet) -> ScaleSignals:
+        routable = [h for h in fleet.handles.values()
+                    if h.healthy and h.spec_role != "verify"]
+        waits = fleet.telemetry.queue_wait_s[-self.policy.window:]
+        util = (sum(h.load for h in routable) / len(routable)
+                if routable else 0.0)
+        return ScaleSignals(
+            depth=fleet.queue.depth(),
+            wait_p95=percentile(waits, 95),
+            expired_delta=fleet.telemetry.expired - self._expired_seen,
+            utilization=util,
+            engines=len(routable))
+
+    # -- the per-step hook --------------------------------------------------
+    def step(self, fleet) -> Optional[ScaleEvent]:
+        # a spawned engine that failed is a corpse, not capacity: it is
+        # neither retirable nor "live spawned" (keeps idle-drain loops
+        # over .spawned terminating after chaos)
+        self.spawned = [n for n in self.spawned
+                        if n in fleet.handles and fleet.handles[n].healthy]
+        sig = self.signals(fleet)
+        now = fleet.clock()
+        action, why = self.policy.decide(sig, now=now,
+                                         last_scale=self._last_scale)
+        # consume the expiry counter only when the scale-up path could
+        # actually act on it (a decision fired, or the up-branch was
+        # evaluated and declined on its merits).  Expiries observed
+        # while gated -- cooldown, or pool at max -- stay accumulated
+        # so the signal fires as soon as the gate lifts.
+        gated = (self._last_scale is not None
+                 and now - self._last_scale < self.policy.cooldown_s)
+        if action is not None or \
+                (not gated and sig.engines < self.policy.max_engines):
+            self._expired_seen = fleet.telemetry.expired
+        if action == "up":
+            return self.scale_up(fleet, reason=why, signals=sig)
+        if action == "down":
+            return self.scale_down(fleet, reason=why, signals=sig)
+        return None
+
+    # -- scale events -------------------------------------------------------
+    def _record(self, fleet, action: str, name: str, reason: str,
+                signals: Optional[ScaleSignals]) -> ScaleEvent:
+        self._last_scale = fleet.clock()
+        pool = len([h for h in fleet.handles.values()
+                    if h.healthy and h.spec_role != "verify"])
+        ev = ScaleEvent(action=action, engine=name, reason=reason,
+                        t=self._last_scale, engines=pool, signals=signals)
+        self.events.append(ev)
+        fleet.telemetry.record_scale(ev)
+        return ev
+
+    def scale_up(self, fleet, *, reason: str = "manual",
+                 signals: Optional[ScaleSignals] = None) -> ScaleEvent:
+        """Instantiate one engine from the template and register it.
+        The new engine shares the fleet's params (any live engine
+        carries them) and joins the router/balancer immediately: queued
+        and parked work dispatches onto it in this very step's dispatch
+        pass."""
+        ref = next(iter(fleet.handles.values())).engine
+        while f"{self.template.name}{self._n_spawned}" in fleet.handles:
+            self._n_spawned += 1
+        name = f"{self.template.name}{self._n_spawned}"
+        eng = Engine(fleet.cfg, ref.params, slots=self.template.slots,
+                     max_len=self.template.max_len,
+                     seed=self.template.seed + self._n_spawned)
+        self._n_spawned += 1
+        fleet.add_engine(EngineHandle(name, eng, self.template.profile))
+        self.spawned.append(name)
+        return self._record(fleet, "spawn", name, reason, signals)
+
+    def scale_down(self, fleet, *, reason: str = "manual",
+                   signals: Optional[ScaleSignals] = None) \
+            -> Optional[ScaleEvent]:
+        """Retire the least-loaded eligible spawned engine.  Scaling is
+        migration: ``FleetController.retire_engine`` live-migrates every
+        slot off (parking what has nowhere to go) BEFORE the handle
+        disappears, so a scale-down can displace work but never drop
+        it."""
+        pool = [fleet.handles[n] for n in self.spawned
+                if n in fleet.handles]
+        pool = [h for h in pool if h.healthy and h.spec_role is None]
+        if not pool:
+            return None
+        victim = min(pool, key=lambda h: h.load)
+        fleet.retire_engine(victim.name, reason=reason)
+        self.spawned.remove(victim.name)
+        return self._record(fleet, "retire", victim.name, reason, signals)

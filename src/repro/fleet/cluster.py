@@ -68,7 +68,9 @@ class FleetController:
                  rebalance_every: int = 0,
                  spec_tiers: dict[str, str] | None = None,
                  spec_options: dict | None = None,
-                 clock=None):
+                 clock=None,
+                 autoscaler=None,
+                 aging_rate: float = 0.0):
         assert handles, "a fleet needs at least one engine"
         self.handles: dict[str, EngineHandle] = {h.name: h for h in handles}
         self.cfg = handles[0].engine.cfg
@@ -89,12 +91,22 @@ class FleetController:
         self.rebalance_every = rebalance_every
         self.measurement = measure_config(self.cfg)
         self.whitelist = {self.measurement}
+        self.authority = authority   # kept: late-joining engines attest too
         if authority is not None:
             caps = capabilities(self.cfg)
             for h in handles:
                 if h.profile.attested and h.attester is None:
                     h.attester = Attester(h.name, authority,
                                           self.measurement, caps)
+        # elastic membership: the autoscaler (when armed) runs once per
+        # step, spawning engines from its template under queue/deadline
+        # pressure and retiring idle spawned engines via retire_engine
+        self.autoscaler = autoscaler
+        # priority aging: dispatch points gained per second of queue
+        # wait (0 = off).  Affects dispatch ORDER only -- preemption
+        # keeps reading declared priorities, so aged work never parks
+        # live slots
+        self.aging_rate = aging_rate
         # draft/verify tier map: each entry pairs a draft engine with a
         # verify engine; the pair is stepped by its own controller and
         # the verify engine is reserved (excluded from normal routing)
@@ -291,16 +303,31 @@ class FleetController:
         request on an engine ``item`` could actually use.  The victim's
         slot leaves through ``extract_slot``/``pack_slot`` -- the exact
         live-migration departure path -- and resumes bit-identically
-        later via the parked-work re-placement path."""
+        later via the parked-work re-placement path.
+
+        Deadline-aware victim selection: a slot whose deadline would
+        pass before it could plausibly resume is never parked --
+        parking it converts work that would have *finished* (in-flight
+        slots keep decoding past their deadline) into a guaranteed
+        expiry on the parked queue.  "Expected resume" is approximated
+        by the preemptor's raw roofline time on the victim's engine:
+        the victim cannot come back before the work that displaced it
+        is done."""
         best = None
+        now = self.clock()
         for h in handles:
             if not h.healthy or h.engine.max_len < item.rows_needed \
                     or not self.router.eligible(item.sensitivity, h):
                 continue
+            est_resume = now + self.router.score(
+                h, self.cfg, prefill_tokens=0,
+                decode_tokens=item.rows_needed, loaded=False)
             spec = self.spec_controllers.get(h.name)
             for slot, req in h.engine.requests.items():
                 if req.done or req.priority >= item.priority:
                     continue
+                if req.deadline is not None and req.deadline < est_resume:
+                    continue         # would expire while parked
                 if spec is not None and req.rid in spec._spec:
                     continue         # uncommitted speculative tail
                 vt = self.tickets.get(req.rid)
@@ -359,7 +386,8 @@ class FleetController:
 
     def _dispatch_parked(self, item: WorkItem, handles,
                          slack: float | None, now: float):
-        reason = "resume" if item.origin == "preempt" else "failover"
+        reason = {"preempt": "resume",
+                  "drain": "drain"}.get(item.origin, "failover")
         place = lambda: self.balancer.place_blob(  # noqa: E731
             item.blob, handles, self, src=item.src, reason=reason,
             deadline_slack=slack)
@@ -380,7 +408,8 @@ class FleetController:
         # dispatch targets
         handles = [h for h in self.handles.values()
                    if h.healthy and h.spec_role != "verify"]
-        for item in self.queue.ordered():
+        for item in self.queue.ordered(now=now,
+                                       aging_rate=self.aging_rate):
             slack = None if item.deadline is None else item.deadline - now
             if item.parked:
                 self._dispatch_parked(item, handles, slack, now)
@@ -389,8 +418,17 @@ class FleetController:
 
     # -- the fleet step ----------------------------------------------------------
     def step(self) -> dict[str, int]:
-        """Dispatch, advance every healthy engine one decode step, retire
-        completions, shadow-checkpoint.  Returns {rid: token} emitted."""
+        """Autoscale, dispatch, advance every healthy engine one decode
+        step, retire completions, shadow-checkpoint.  Returns
+        {rid: token} emitted."""
+        if self.autoscaler is not None:
+            # before dispatch: a spawn decision serves THIS step's
+            # backlog, and a retire decision's displaced slots re-place
+            # in this step's dispatch pass.  Expire first so the
+            # autoscaler never spawns for (or counts) work that is
+            # already dead -- and sees this step's expiries as signal
+            self._expire(self.clock())
+            self.autoscaler.step(self)
         self._dispatch()
         emitted: dict[str, int] = {}
         for handle in self.handles.values():
@@ -464,6 +502,65 @@ class FleetController:
                 and bool(self.queue or self.inflight))
 
     # -- membership events ---------------------------------------------------------
+    def add_engine(self, handle: EngineHandle) -> EngineHandle:
+        """Register a late-joining engine (scale-up).  The new engine
+        serves the same config, gets an attester from the fleet
+        authority when its profile attests (so a spawned engine can
+        take confidential work an unattested fleet could not), and is
+        immediately visible to the router, balancer and telemetry --
+        queued and parked work dispatches onto it at the next dispatch
+        pass."""
+        assert handle.name not in self.handles, \
+            f"engine name {handle.name!r} already registered"
+        assert handle.engine.cfg.name == self.cfg.name, \
+            f"config mismatch: {handle.engine.cfg.name} != {self.cfg.name}"
+        if self.authority is not None and handle.profile.attested \
+                and handle.attester is None:
+            handle.attester = Attester(handle.name, self.authority,
+                                       self.measurement,
+                                       capabilities(self.cfg))
+        self.handles[handle.name] = handle
+        self.telemetry.stats(handle.name)     # appears in summaries now
+        return handle
+
+    def retire_engine(self, name: str, *, reason: str = "scale-down") \
+            -> int:
+        """Remove an engine from the fleet without losing a single
+        request: scaling is migration, the same way preemption is.
+        Every live slot leaves through the migration departure path --
+        ``drain()`` live-migrates what the survivors can take right
+        now, and whatever has nowhere to go is parked on the work queue
+        (``extract_slot -> pack_slot -> park_blob``) exactly like a
+        preempted slot, to be re-placed by a later dispatch pass.  Only
+        then is the handle deregistered.  Returns the number of slots
+        displaced (migrated + parked)."""
+        handle = self.handles[name]
+        assert len(self.handles) > 1, "cannot retire the last engine"
+        if handle.spec_role is not None:
+            self._dissolve_pair(handle, graceful=True)
+        recs = self.balancer.drain(handle, self)
+        for rec in recs:
+            self.telemetry.record_migration(rec)
+        parked = 0
+        for slot in sorted(handle.engine.requests):
+            snap = handle.engine.extract_slot(slot)
+            blob = pack_slot(snap)
+            self.balancer.shadow.get(name, {}).pop(snap.rid, None)
+            self.inflight.pop(snap.rid, None)
+            # stable "scale-down ... parked off" audit prefix: tests and
+            # operators grep it regardless of the caller's policy reason
+            self.ticket_transition(
+                snap.rid, RequestState.MIGRATING,
+                reason=f"scale-down: parked off {name} ({reason})",
+                engine=name)
+            self.park_blob(name, blob, origin="drain")
+            parked += 1
+        self.balancer.shadow.pop(name, None)
+        handle.healthy = False
+        self.telemetry.stats(name).retired = True
+        del self.handles[name]
+        return len(recs) + parked
+
     def fail(self, name: str, *, reason: str = "crash"):
         """Fail-stop an engine at the fleet stable point: mark it dead,
         then re-place its in-flight requests from shadow checkpoints."""

@@ -277,11 +277,30 @@ class WorkItem:
         return self.blob is not None
 
 
-def work_order(items) -> list:
-    """Dispatch order: highest priority first, submit order (seq) within
-    a priority class.  Parked items keep their original seq, so a
-    preempted request resumes ahead of anything submitted after it."""
-    return sorted(items, key=lambda it: (-it.priority, it.seq))
+def effective_priority(item, now: float = 0.0,
+                       aging_rate: float = 0.0) -> float:
+    """Dispatch priority after aging: the declared class plus
+    ``aging_rate`` points per second spent waiting since submission.
+    With a positive rate a starved low-priority item eventually
+    out-ranks any *later* high-priority arrival (two items submitted at
+    the same instant never reorder) -- starvation freedom against an
+    endless stream of fresh urgent work.  Aging affects dispatch order
+    only; preemption always reads the declared priority, so an aged
+    item never starts parking live slots."""
+    if aging_rate <= 0.0:
+        return float(item.priority)
+    return item.priority + aging_rate * max(now - item.t_submit, 0.0)
+
+
+def work_order(items, *, now: float = 0.0,
+               aging_rate: float = 0.0) -> list:
+    """Dispatch order: highest (aged) priority first, submit order (seq)
+    within a class.  Parked items keep their original seq AND t_submit,
+    so a preempted request resumes ahead of anything submitted after it
+    and keeps accruing age while parked."""
+    return sorted(items,
+                  key=lambda it: (-effective_priority(it, now, aging_rate),
+                                  it.seq))
 
 
 class WorkQueue:
@@ -318,8 +337,15 @@ class WorkQueue:
             self._items.remove(it)
         return it
 
-    def ordered(self) -> list[WorkItem]:
-        return work_order(self._items)
+    def ordered(self, *, now: float = 0.0,
+                aging_rate: float = 0.0) -> list[WorkItem]:
+        return work_order(self._items, now=now, aging_rate=aging_rate)
+
+    def depth(self) -> int:
+        """Total pending work -- fresh admissions AND parked slots (the
+        autoscaler's backlog signal; ``len()`` stays the legacy
+        fresh-only admission-control depth)."""
+        return len(self._items)
 
     def expired(self, now: float) -> list[WorkItem]:
         return [it for it in self._items

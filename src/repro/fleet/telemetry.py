@@ -31,6 +31,7 @@ class EngineStats:
     migrations_in: int = 0
     migrations_out: int = 0
     failed: bool = False
+    retired: bool = False            # scaled down (drained + removed)
 
     @property
     def tokens_per_s(self) -> float:
@@ -78,6 +79,8 @@ class FleetTelemetry:
         self.preemptions = 0
         self.cancelled = 0
         self.expired = 0
+        self.scale_ups = 0
+        self.scale_downs = 0
         self._t0 = self._clock()
 
     def bind_clock(self, clock):
@@ -122,6 +125,20 @@ class FleetTelemetry:
         """A typed lifecycle transition (LifecycleEvent)."""
         self.events.append(ev)
 
+    def record_scale(self, ev):
+        """A fleet membership change (ScaleEvent) -- rides the same
+        unified audit log as lifecycle transitions, so one chronological
+        read shows WHY a request moved (the retire event precedes its
+        slots' MIGRATING transitions)."""
+        self.events.append(ev)
+        if ev.action == "spawn":
+            self.scale_ups += 1
+        else:
+            self.scale_downs += 1
+
+    def scale_events(self) -> list:
+        return [ev for ev in self.events if hasattr(ev, "action")]
+
     def record_queue_wait(self, wait_s: float):
         self.queue_wait_s.append(wait_s)
 
@@ -161,7 +178,7 @@ class FleetTelemetry:
                     "admitted": s.admitted, "completed": s.completed,
                     "migrations_in": s.migrations_in,
                     "migrations_out": s.migrations_out,
-                    "failed": s.failed}
+                    "failed": s.failed, "retired": s.retired}
                 for n, s in sorted(self.engines.items())},
             "fleet": {
                 "tokens": self.fleet_tokens(),
@@ -177,6 +194,8 @@ class FleetTelemetry:
                 "preemptions": self.preemptions,
                 "cancelled": self.cancelled,
                 "expired": self.expired,
+                "scale_ups": self.scale_ups,
+                "scale_downs": self.scale_downs,
                 "queue_wait_p50": round(percentile(self.queue_wait_s, 50),
                                         4),
                 "preempt_wait_p50": round(

@@ -18,6 +18,14 @@ mixed-priority stream -- watch low-priority slots get parked
         --engines edge:edge --slots 2 --priorities 0,5,10 \
         --queue-limit 1 --deadline-s 60
 
+Elastic autoscaling: a one-engine fleet grows under the burst (watch
+the spawn ScaleEvents), then drains the spawned engines -- every live
+slot migrating or parking via the migration path -- once idle:
+
+    PYTHONPATH=src python -m repro.launch.fleet --tiny --requests 12 \
+        --engines edge:edge --slots 2 --autoscale 1:3 \
+        --scale-up-queue-depth 3 --scale-cooldown-s 0
+
 Flags
   --arch NAME            model config (default llama-1.5b)
   --tiny                 shrink the config (CPU-friendly smoke scale)
@@ -42,6 +50,25 @@ Flags
                          fleet clock); queued or parked work past it
                          expires instead of occupying capacity
   --queue-limit N        admission-control bound (backpressure beyond it)
+  --autoscale MIN:MAX    arm the autoscaler: keep between MIN and MAX
+                         routable engines, spawning from a template
+                         (profile --autoscale-profile, geometry
+                         --slots/--max-len) under queue/deadline
+                         pressure and retiring spawned engines once
+                         idle -- scale-down drains every slot via the
+                         migration path before the handle disappears
+  --autoscale-profile P  device profile for spawned engines (default
+                         edge; attested, so spawned capacity can take
+                         sensitive work)
+  --scale-up-queue-depth N  pending work (fresh + parked) that triggers
+                         a spawn (default 4; 0 disables the signal)
+  --scale-up-wait-p95 F  recent queue-wait p95 (seconds) that triggers
+                         a spawn (default: off)
+  --scale-cooldown-s F   minimum fleet-clock seconds between scale
+                         events (default 0)
+  --aging-rate F         priority points gained per second of queue
+                         wait, so starved low-priority work eventually
+                         dispatches (default 0 = strict priority)
   --sync-every N         shadow-checkpoint cadence in fleet steps
   --rebalance-every N    load-smoothing cadence (0 = off, default)
   --fail NAME@STEP       fail-stop engine NAME before fleet step STEP;
@@ -101,6 +128,13 @@ def main():
     ap.add_argument("--priorities", default="0", metavar="LIST")
     ap.add_argument("--deadline-s", type=float, default=None)
     ap.add_argument("--queue-limit", type=int, default=32)
+    ap.add_argument("--autoscale", default=None, metavar="MIN:MAX")
+    ap.add_argument("--autoscale-profile", default="edge",
+                    choices=sorted(PROFILES))
+    ap.add_argument("--scale-up-queue-depth", type=int, default=4)
+    ap.add_argument("--scale-up-wait-p95", type=float, default=None)
+    ap.add_argument("--scale-cooldown-s", type=float, default=0.0)
+    ap.add_argument("--aging-rate", type=float, default=0.0)
     ap.add_argument("--sync-every", type=int, default=1)
     ap.add_argument("--rebalance-every", type=int, default=0)
     ap.add_argument("--fail", default=None, metavar="NAME@STEP")
@@ -121,8 +155,9 @@ def main():
     from repro.configs.tiny import make_tiny
     from repro.core import daemon
     from repro.core.attestation import TrustAuthority
-    from repro.fleet import (EngineHandle, FleetController, Rebalancer,
-                             RequestSpec)
+    from repro.fleet import (Autoscaler, EngineHandle, EngineTemplate,
+                             FleetController, Rebalancer, RequestSpec,
+                             ScalePolicy)
     from repro.models.init import init_params
     from repro.serving.engine import Engine
 
@@ -149,11 +184,26 @@ def main():
                 vname not in {h.name for h in handles}:
             ap.error(f"--spec-tiers pair {dname}:{vname} names an "
                      "engine missing from --engines")
+    autoscaler = None
+    if args.autoscale:
+        lo, _, hi = args.autoscale.partition(":")
+        autoscaler = Autoscaler(
+            EngineTemplate(name="auto",
+                           profile=getattr(
+                               daemon, PROFILES[args.autoscale_profile]),
+                           slots=args.slots, max_len=args.max_len,
+                           seed=args.seed + 100),
+            ScalePolicy(min_engines=int(lo), max_engines=int(hi or lo),
+                        scale_up_queue_depth=args.scale_up_queue_depth,
+                        scale_up_wait_p95=args.scale_up_wait_p95,
+                        cooldown_s=args.scale_cooldown_s))
     fleet = FleetController(
         handles, authority=TrustAuthority(),
         balancer=Rebalancer(sync_every=args.sync_every),
         queue_limit=args.queue_limit,
         rebalance_every=args.rebalance_every,
+        autoscaler=autoscaler,
+        aging_rate=args.aging_rate,
         spec_tiers=spec_tiers,
         spec_options={"gamma": args.spec_gamma,
                       "drafter_temperature": args.drafter_temperature,
@@ -225,10 +275,20 @@ def main():
         print(f"{rid}[{t.spec.sensitivity:12s} p{t.spec.priority:<3d} "
               f"{t.state.value:9s}] via {route}: "
               f"{out[:8]}{'...' if len(out) > 8 else ''}")
+    if autoscaler is not None:
+        # idle ticks let the autoscaler drain + retire what it spawned
+        for _ in range(16):
+            if not autoscaler.spawned:
+                break
+            fleet.step()
     preempted = [ev for ev in fleet.telemetry.events
-                 if ev.dst == "migrating" and "preempted" in ev.reason]
+                 if getattr(ev, "dst", None) == "migrating"
+                 and "preempted" in ev.reason]
     for ev in preempted:
         print(f"preempted {ev.rid} on {ev.engine}: {ev.reason}")
+    for ev in fleet.telemetry.scale_events():
+        print(f"scale {ev.action} {ev.engine} at t={ev.t:.3f} "
+              f"(pool {ev.engines}): {ev.reason}")
     print(json.dumps(fleet.telemetry.summary(), indent=1))
     for dname, spec in fleet.spec_controllers.items():
         print(f"speculative tier {dname}->{spec.verify.name}: "

@@ -149,6 +149,70 @@ def test_preemption_respects_priority_strictness_and_policy():
     assert mfleet.telemetry.preemptions == 0
 
 
+def test_preemption_skips_victim_that_would_expire_while_parked():
+    """Deadline-aware victim selection: parking a slot whose deadline
+    passes before its expected resume converts work that would have
+    finished (in-flight slots keep decoding past their deadline) into a
+    guaranteed expiry -- so such a slot is never the victim, even when
+    it is the lowest-priority one.  Deterministic on the SimClock: the
+    tight deadline is closer than any roofline estimate."""
+    clk = SimClock()
+    fleet = mk_fleet(n=1, slots=2, clock=clk)
+    tight = fleet.submit(RequestSpec(prompt=np.arange(6), rid="tight",
+                                     max_new_tokens=16, priority=0,
+                                     deadline=clk() + 1e-9))
+    loose = fleet.submit(RequestSpec(prompt=np.arange(6), rid="loose",
+                                     max_new_tokens=16, priority=1))
+    fleet.step()
+    assert tight.state is RequestState.DECODING
+    assert loose.state is RequestState.DECODING
+    high = fleet.submit(RequestSpec(prompt=np.arange(5), rid="high",
+                                    max_new_tokens=6, priority=9))
+    fleet.step()
+    # without the deadline guard the p0 slot would have been parked;
+    # instead the higher-priority-but-safe p1 slot is the victim
+    assert loose.state is RequestState.MIGRATING
+    assert tight.state is RequestState.DECODING
+    assert fleet.telemetry.preemptions == 1
+    # (no token-equality oracle here: requests share a slots=2 batch,
+    # and greedy argmax depends on batch co-residency -- see the
+    # ROADMAP reproducibility note; bit-exact resume is covered by
+    # test_preempted_request_resumes_bit_identical on slots=1)
+    assert len(high.result()) == 6
+    assert len(tight.result()) == 16
+    assert len(loose.result()) == 16
+    assert tight.state is RequestState.DONE        # finished, not expired
+    assert loose.state is RequestState.DONE        # parked, then resumed
+
+
+def test_priority_aging_prevents_starvation():
+    """With aging armed, a starved low-priority admission eventually
+    out-ranks later high-priority arrivals (one point per second here);
+    with aging off the fresh high-priority item dispatches first."""
+    def dispatch_order(aging_rate):
+        clk = SimClock()
+        fleet = mk_fleet(n=1, slots=1, clock=clk,
+                         aging_rate=aging_rate)
+        runner = fleet.submit(RequestSpec(prompt=np.arange(4),
+                                          rid="runner",
+                                          max_new_tokens=6, priority=5))
+        fleet.step()                     # occupies the only slot
+        fleet.submit(RequestSpec(prompt=np.arange(4), rid="old",
+                                 max_new_tokens=4, priority=0))
+        clk.advance(10.0)                # old starves for 10s...
+        fleet.submit(RequestSpec(prompt=np.arange(4), rid="new",
+                                 max_new_tokens=4, priority=5))
+        for t in list(fleet.tickets.values()):
+            t.result()
+        assert runner.state is RequestState.DONE
+        return [ev.rid for ev in fleet.telemetry.events
+                if ev.dst == "prefilling"]
+    # aged: 0 + 1.0*10s = 10 > 5, the starved item goes first
+    assert dispatch_order(1.0) == ["runner", "old", "new"]
+    # strict priorities: the later p5 arrival starves the p0 item
+    assert dispatch_order(0.0) == ["runner", "new", "old"]
+
+
 def test_preempted_then_cancelled_frees_everything():
     fleet = mk_fleet(n=1, slots=1)
     low = fleet.submit(RequestSpec(prompt=np.arange(6), rid="low",

@@ -171,31 +171,41 @@ _SCHED_OPS = st.lists(
         st.tuples(st.just("expire"), st.integers(0, 31)),
         st.tuples(st.just("preempt"), st.integers(0, 31)),
         st.tuples(st.just("dispatch"), st.just(0)),
+        st.tuples(st.just("age"), st.integers(1, 5)),
     ),
     min_size=1, max_size=60)
 
 
-@given(_SCHED_OPS)
+@given(_SCHED_OPS, st.sampled_from([0.0, 0.25, 2.0]))
 @settings(max_examples=80, deadline=None)
-def test_dispatch_order_respects_priority_then_submit_time(ops):
+def test_dispatch_order_respects_aged_priority_then_submit_time(
+        ops, aging_rate):
     """The fleet's WorkQueue invariant under random interleavings of
-    submit / cancel / expire / preempt-park: every dispatch picks a
-    maximal item under (priority desc, submit-seq asc), and a preempted
-    item re-enters with its ORIGINAL seq (it resumes ahead of anything
-    admitted after it, never behind)."""
-    from repro.fleet.lifecycle import WorkItem, WorkQueue, work_order
+    submit / cancel / expire / preempt-park / clock advance: every
+    dispatch picks a maximal item under (aged priority desc, submit-seq
+    asc), and a preempted item re-enters with its ORIGINAL seq AND
+    t_submit (it resumes ahead of anything admitted after it and keeps
+    accruing age while parked).  aging_rate=0 is the strict-priority
+    special case the pre-aging fleet shipped with."""
+    from repro.fleet.lifecycle import (WorkItem, WorkQueue,
+                                      effective_priority, work_order)
     wq = WorkQueue()
     pending: dict[str, object] = {}   # rid -> WorkItem in the queue
     running: dict[str, object] = {}   # rid -> dispatched item
     n = 0
+    now = 0.0
+    key = lambda it: (-effective_priority(it, now, aging_rate),  # noqa: E731
+                      it.seq)
     for op, arg in ops:
         if op == "submit":
             seq = wq.next_seq()
             it = WorkItem(rid=f"r{n}", priority=arg, seq=seq,
-                          t_submit=float(seq))
+                          t_submit=now)
             wq.push(it)
             pending[it.rid] = it
             n += 1
+        elif op == "age":
+            now += float(arg)
         elif op in ("cancel", "expire") and pending:
             rid = sorted(pending)[arg % len(pending)]
             assert wq.remove(rid) is not None
@@ -206,19 +216,131 @@ def test_dispatch_order_respects_priority_then_submit_time(ops):
             parked = WorkItem(rid=it.rid, priority=it.priority,
                               seq=it.seq, t_submit=it.t_submit,
                               blob=b"x", src="e", origin="preempt")
-            wq.push(parked)           # keeps its original seq
+            wq.push(parked)           # keeps its original seq/t_submit
             pending[rid] = parked
         elif op == "dispatch" and pending:
-            best = wq.ordered()[0]
-            key = (-best.priority, best.seq)
-            assert all(key <= (-it.priority, it.seq)
+            best = wq.ordered(now=now, aging_rate=aging_rate)[0]
+            assert all(key(best) <= key(it)
                        for it in pending.values()), \
                 "dispatched a dominated item"
             wq.remove(best.rid)
             del pending[best.rid]
             running[best.rid] = best
     # draining what's left yields exactly the sorted survivors
-    final = [it.rid for it in wq.ordered()]
-    assert final == [it.rid for it in work_order(list(pending.values()))]
-    keys = [(-it.priority, it.seq) for it in wq.ordered()]
+    final = [it.rid for it in wq.ordered(now=now, aging_rate=aging_rate)]
+    assert final == [it.rid for it in
+                     work_order(list(pending.values()), now=now,
+                                aging_rate=aging_rate)]
+    keys = [key(it) for it in wq.ordered(now=now, aging_rate=aging_rate)]
     assert keys == sorted(keys)
+
+
+@given(st.integers(0, 10), st.integers(0, 10),
+       st.floats(0.1, 5.0), st.floats(0.0, 100.0),
+       st.floats(0.0, 100.0), st.floats(0.0, 1000.0))
+@settings(max_examples=60, deadline=None)
+def test_aging_overtakes_any_later_higher_priority_arrival(
+        p_low, p_high, rate, t_low, gap, extra):
+    """Starvation freedom: once an item has waited long enough that its
+    accrued age exceeds the priority deficit (rate * gap > p_high -
+    p_low), NO later arrival of that higher class dominates it -- for
+    any rate, submit times and observation time."""
+    from hypothesis import assume
+    from repro.fleet.lifecycle import WorkItem, work_order
+    assume(rate * gap > p_high - p_low + 1e-6)   # float-margin guard
+    old = WorkItem(rid="old", priority=p_low, seq=0, t_submit=t_low)
+    new = WorkItem(rid="new", priority=p_high, seq=1,
+                   t_submit=t_low + gap)
+    now = t_low + gap + extra
+    assert [it.rid for it in
+            work_order([new, old], now=now, aging_rate=rate)] \
+        == ["old", "new"]
+    # and with aging off, declared priorities always win
+    strict = work_order([new, old], now=now, aging_rate=0.0)
+    expect = ["old", "new"] if p_low >= p_high else ["new", "old"]
+    assert [it.rid for it in strict] == expect
+
+
+# -- fleet autoscaling: request conservation under scale churn ----------------
+
+_SCALE_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"), st.integers(0, 3)),
+        st.tuples(st.just("dispatch"), st.just(0)),
+        st.tuples(st.just("complete"), st.integers(0, 31)),
+        st.tuples(st.just("cancel"), st.integers(0, 31)),
+        st.tuples(st.just("expire"), st.integers(0, 31)),
+        st.tuples(st.just("scale_up"), st.just(0)),
+        st.tuples(st.just("scale_down"), st.integers(0, 7)),
+    ),
+    min_size=1, max_size=80)
+
+
+@given(_SCALE_OPS)
+@settings(max_examples=60, deadline=None)
+def test_request_conservation_under_scale_churn(ops):
+    """The scaling-is-migration contract as a state-machine property:
+    under ANY interleaving of submit / dispatch / complete / cancel /
+    expire / scale_up / scale_down, the multiset of request ids across
+    {pending work (fresh + parked), running, terminal} is exactly the
+    set of submitted ids -- nothing lost, nothing duplicated.  Mirrors
+    FleetController.retire_engine: scale-down re-parks every live slot
+    of the retired engine onto the shared work queue (blobs, original
+    seq/t_submit) and never touches blobs already parked there."""
+    from repro.fleet.lifecycle import WorkItem, WorkQueue
+    SLOTS = 2
+    wq = WorkQueue()
+    engines: dict[str, dict[str, object]] = {"seed0": {}}
+    terminal: dict[str, str] = {}
+    submitted: list[str] = []
+    n_eng = 0
+
+    def check():
+        queued = [it.rid for it in wq.ordered()]
+        running = [rid for e in engines.values() for rid in e]
+        ids = queued + running + sorted(terminal)
+        assert sorted(ids) == sorted(submitted), "lost or duplicated"
+        assert len(ids) == len(set(ids)), "request in two places"
+
+    for op, arg in ops:
+        if op == "submit":
+            rid = f"r{len(submitted)}"
+            wq.push(WorkItem(rid=rid, priority=arg, seq=wq.next_seq(),
+                             t_submit=0.0))
+            submitted.append(rid)
+        elif op == "dispatch":
+            free = [n for n, e in sorted(engines.items())
+                    if len(e) < SLOTS]
+            items = wq.ordered()
+            if free and items:
+                it = items[0]
+                wq.remove(it.rid)
+                engines[free[0]][it.rid] = it
+        elif op == "complete":
+            running = [(n, rid) for n, e in sorted(engines.items())
+                       for rid in sorted(e)]
+            if running:
+                name, rid = running[arg % len(running)]
+                del engines[name][rid]
+                terminal[rid] = "done"
+        elif op in ("cancel", "expire"):
+            pend = [it.rid for it in wq.ordered()]
+            if pend:
+                rid = pend[arg % len(pend)]
+                wq.remove(rid)
+                terminal[rid] = op
+        elif op == "scale_up":
+            n_eng += 1
+            engines[f"auto{n_eng}"] = {}
+        elif op == "scale_down" and len(engines) > 1:
+            names = sorted(engines)
+            name = min(names, key=lambda n: (len(engines[n]), n))
+            parked_before = {it.rid for it in wq.parked()}
+            for rid, it in sorted(engines.pop(name).items()):
+                wq.push(WorkItem(rid=rid, priority=it.priority,
+                                 seq=it.seq, t_submit=it.t_submit,
+                                 blob=b"x", src=name, origin="drain"))
+            # scale-down never drops a parked blob: everything parked
+            # before survives, displaced slots are ADDED
+            assert parked_before <= {it.rid for it in wq.parked()}
+        check()
