@@ -86,6 +86,7 @@ def main():
 
     bench_priority_workload(cfg, params)
     bench_autoscale(cfg, params)
+    bench_quality(cfg, params)
     write_bench_json("fleet")
 
 
@@ -210,6 +211,76 @@ def bench_autoscale(cfg, params):
                  percentile(xs, 50) * 1e6, f"{len(xs)} requests")
             emit(f"fleet/{tag}_prio{prio}_complete_p99",
                  percentile(xs, 99) * 1e6)
+
+
+def bench_quality(cfg, params):
+    """The quality/latency trade-off of request-granular tiers: a
+    scarce full-bf16 tier next to a roomy int8 tier serves a mixed
+    stream, then the full tier's client link is cut mid-run.  Reports
+    per-tier completion p50/p99, the downshift count, and availability
+    (completed fraction) under the injected link failure."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.attestation import TrustAuthority
+    from repro.core.channel import NetworkCondition
+    from repro.core.daemon import CLOUD, EDGE
+    from repro.fleet import (EngineHandle, FleetController, QualityTier,
+                             RequestSpec, percentile)
+    from repro.optim.compression import dequantize_int8, quantize_int8
+    from repro.serving.engine import Engine
+
+    def f(w):
+        if hasattr(w, "dtype") and jnp.issubdtype(w.dtype, jnp.floating):
+            q, s = quantize_int8(w)
+            return dequantize_int8(q, s).astype(w.dtype)
+        return w
+    lite_params = jax.tree.map(f, params)
+    FULL = QualityTier("full", 1.0, "bf16")
+    LITE = QualityTier("lite", 0.6, "int8")
+
+    rng = np.random.default_rng(0)
+    fleet = FleetController(
+        [EngineHandle("pod", Engine(cfg, params, slots=2, max_len=64,
+                                    seed=0), CLOUD, tier=FULL),
+         EngineHandle("edge", Engine(cfg, lite_params, slots=4,
+                                     max_len=64, seed=1), EDGE,
+                      tier=LITE)],
+        authority=TrustAuthority())
+    tickets = [fleet.submit(RequestSpec(
+        rid=f"q{i}", prompt=rng.integers(5, cfg.vocab_size, 6),
+        max_new_tokens=MAX_NEW,
+        quality_floor=0.9 if i % 4 == 0 else 0.0)) for i in range(REQS)]
+    cut_at, outage_steps, step = 4, 2, 0
+    while not all(t.done for t in tickets):
+        if step == cut_at:
+            fleet.set_link("pod", NetworkCondition(up=False))
+        fleet.step()
+        step += 1
+        if step == cut_at + outage_steps:   # restored: floored work runs
+            fleet.set_link("pod", None)
+
+    by_tier = {}
+    for t in tickets:
+        done = [ev.t for ev in t.events if ev.dst == "done"]
+        if not done:
+            continue
+        tier = fleet.handles[fleet.placements[t.rid][-1]].tier.name
+        by_tier.setdefault(tier, []).append(done[0] - t.submitted_at)
+    for tier in sorted(by_tier):
+        xs = by_tier[tier]
+        emit(f"fleet/quality_{tier}_complete_p50",
+             percentile(xs, 50) * 1e6, f"{len(xs)} requests")
+        emit(f"fleet/quality_{tier}_complete_p99",
+             percentile(xs, 99) * 1e6)
+    tel = fleet.telemetry
+    emit("fleet/quality_downshifts", float(tel.downshifts),
+         "saturation + injected link failure")
+    emit("fleet/quality_upshifts", float(tel.upshifts))
+    done_n = sum(1 for t in tickets if t.state.value == "done")
+    emit("fleet/quality_availability", 100.0 * done_n / len(tickets),
+         f"% completed across a {outage_steps}-step link outage at "
+         f"step {cut_at} (lossy migrations: "
+         f"{sum(1 for m in tel.migrations if m.lossy)})")
 
 
 if __name__ == "__main__":

@@ -17,16 +17,19 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get
 from repro.configs.tiny import make_tiny
 from repro.core.attestation import TrustAuthority
+from repro.core.channel import NetworkCondition
 from repro.core.daemon import CLOUD, EDGE, MCU
 from repro.fleet import (Autoscaler, EngineHandle, EngineTemplate,
-                         FleetController, RequestSpec, RequestState,
-                         ScalePolicy)
+                         FleetController, QualityTier, RequestSpec,
+                         RequestState, ScalePolicy)
 from repro.models.init import init_params
+from repro.optim.compression import dequantize_int8, quantize_int8
 from repro.serving.engine import Engine, Request
 
 
@@ -165,6 +168,70 @@ def autoscale_act(cfg, params):
     print("scaling telemetry:", {
         k: v for k, v in fleet.telemetry.summary()["lifecycle"].items()
         if k.startswith("scale")})
+
+    quality_act(cfg, params)
+
+
+def quality_act(cfg, params):
+    """Quality tiers: a full-bf16 tier next to an int8 tier.  The full
+    tier saturates, then loses its client link entirely -- and service
+    stays up on the lite tier, every downshift a typed QualityEvent,
+    floored requests waiting rather than degrading below contract."""
+    print("\n-- act four: request-granular quality tiers --")
+
+    def int8_round_trip(p):
+        def f(w):
+            if hasattr(w, "dtype") and jnp.issubdtype(w.dtype,
+                                                      jnp.floating):
+                q, s = quantize_int8(w)
+                return dequantize_int8(q, s).astype(w.dtype)
+            return w
+        return jax.tree.map(f, p)
+
+    FULL = QualityTier("full", 1.0, "bf16")
+    LITE = QualityTier("lite", 0.6, "int8")
+    fleet = FleetController(
+        [EngineHandle("pod",
+                      Engine(cfg, params, slots=1, max_len=64, seed=50),
+                      CLOUD, tier=FULL),
+         EngineHandle("edge-box",
+                      Engine(cfg, int8_round_trip(params), slots=3,
+                             max_len=64, seed=51),
+                      EDGE, tier=LITE)],
+        authority=TrustAuthority())
+
+    rng = np.random.default_rng(31)
+    mk = lambda rid, floor: fleet.submit(RequestSpec(
+        rid=rid, prompt=rng.integers(5, cfg.vocab_size, 6),
+        max_new_tokens=10, quality_floor=floor))
+    flexible = [mk(f"flex{i}", 0.0) for i in range(3)]
+    strict = mk("strict", 0.9)        # full tier or nothing
+
+    while not all(t.done for t in flexible + [strict]):
+        fleet.step()
+    tiers_of = {t.rid: fleet.handles[fleet.placements[t.rid][-1]].tier.name
+                for t in flexible + [strict]}
+    print("placement tiers:", tiers_of)
+    assert tiers_of["strict"] == "full", "floored work never degrades"
+    for ev in fleet.telemetry.quality_events():
+        print(f"  {ev.direction}shift {ev.rid} {ev.src_tier}->"
+              f"{ev.dst_tier}: {ev.reason}")
+
+    # the full tier's uplink dies: traffic continues on the lite tier
+    print("-- full tier link down --")
+    fleet.set_link("pod", NetworkCondition(up=False))
+    survivors = [fleet.submit(RequestSpec(
+        rid=f"cut{i}", prompt=rng.integers(5, cfg.vocab_size, 6),
+        max_new_tokens=8)) for i in range(2)]
+    while not all(t.done for t in survivors):
+        fleet.step()
+    for t in survivors:
+        eng = fleet.placements[t.rid][-1]
+        print(f"  {t.rid}: served on {eng} "
+              f"(tier {fleet.handles[eng].tier.name}) despite the cut")
+        assert fleet.handles[eng].tier.name == "lite"
+    downs = fleet.telemetry.downshifts
+    print(f"service never dropped a request; {downs} audited downshifts")
 
 
 if __name__ == "__main__":

@@ -21,8 +21,8 @@ from repro.core.daemon import (CLOUD, EDGE, MCU, DeviceProfile,
 from repro.core.migration import (MigrationReport, Migrator, Snapshot,
                                   criu_restore, criu_snapshot, pack_slot,
                                   qemu_snapshot, unpack_slot)
-from repro.core.replication import (FailoverEvent, ReplicaTier,
-                                    ReplicationManager)
+from repro.core.replication import (FULL_TIER, FailoverEvent, QualityTier,
+                                    ReplicaTier, ReplicationManager)
 from repro.core.speculation import (SpecStats, SpeculationOutcome,
                                     SpeculativeExecutor,
                                     autoregressive_generate,
@@ -34,9 +34,10 @@ from repro.core.workspace import AgentWorkspace, VectorClock
 __all__ = [
     "AgentWorkspace", "AttestationError", "AttestedSession", "Attester",
     "CLOUD", "Channel", "DeviceProfile", "EDGE", "Fabric",
-    "FailoverEvent", "MCU", "MerkleTree", "MigrationReport", "Migrator",
-    "NetworkCondition", "PlacementDecision", "PrivacyAwareDaemon",
-    "Quote", "ReplicaTier", "ReplicationManager", "SimClock", "Snapshot",
+    "FULL_TIER", "FailoverEvent", "MCU", "MerkleTree", "MigrationReport",
+    "Migrator", "NetworkCondition", "PlacementDecision",
+    "PrivacyAwareDaemon", "QualityTier", "Quote", "ReplicaTier",
+    "ReplicationManager", "SimClock", "Snapshot",
     "SpecStats", "SpeculationOutcome", "SpeculativeExecutor",
     "TrustAuthority", "ValidationFramework", "ValidationReport",
     "Validator", "VectorClock", "autoregressive_generate",

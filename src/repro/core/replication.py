@@ -2,7 +2,13 @@
 
 Tiers (cloud / edge / device) each hold an Engine over a different
 quality point: full-precision full model, int8-quantized model, or a
-distilled narrow config.  A ``ReplicationManager``:
+distilled narrow config.  ``QualityTier`` names that quality point and
+is shared with the fleet layer, where it is a first-class routing
+dimension (``fleet.router`` degrades a request to a lower-but-acceptable
+tier under saturation, deadline pressure or link failure -- the
+request-granular form of the workspace-granular degradation here).
+
+A ``ReplicationManager``:
 
   * keeps replicas in sync with incremental page deltas of the primary's
     workspace (the ~12%-of-KV sync of §9.6), stamped with vector clocks;
@@ -11,12 +17,14 @@ distilled narrow config.  A ``ReplicationManager``:
   * degrades quality under bandwidth limits (lightweight models,
     "trading 8% accuracy for stable response times");
   * merges diverged replicas on reconnect (vector clocks: dominance
-    merges fast-forward; concurrent edits -> primary wins, divergent
-    suffix re-validated).
+    merges fast-forward; concurrent edits -> the higher-quality side
+    wins, divergent suffix re-validated).
 """
 
 from __future__ import annotations
 
+import copy
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -29,6 +37,27 @@ from repro.core.migration import (Snapshot, delta_fraction,
                                   _unpack_workspace, page_hashes)
 from repro.core.workspace import AgentWorkspace, VectorClock
 from repro.serving.engine import Engine
+
+
+@dataclass(frozen=True)
+class QualityTier:
+    """One quality point of a multi-tier deployment: a name, a relative
+    answer quality in [0, 1], and the kind of model behind it.  Shared
+    between the replication layer (workspace-granular failover) and the
+    fleet layer (request-granular routing): two engines of the *same*
+    tier run identical weights, so in-flight state migrates between
+    them bit-exactly; engines of *different* tiers run distinct weights
+    and a hand-off must re-prefill the committed token stream instead
+    (``fleet.balancer`` lossy hand-off)."""
+    name: str                        # "cloud" | "edge" | "device" | ...
+    quality: float = 1.0             # relative answer quality in [0,1]
+    kind: str = "bf16"               # "bf16" | "int8" | "small"
+
+
+# the single-tier default: a fleet that never declares tiers behaves
+# exactly as before (every engine shares one tier -> every migration is
+# the bit-exact kind)
+FULL_TIER = QualityTier("full", 1.0, "bf16")
 
 
 @dataclass
@@ -45,6 +74,10 @@ class ReplicaTier:
     def reachable(self) -> bool:
         return self.cond.up and self.cond.loss < 0.95
 
+    def as_quality_tier(self, kind: str = "bf16") -> QualityTier:
+        """The fleet-layer view of this replica's quality point."""
+        return QualityTier(self.name, self.quality, kind)
+
 
 @dataclass
 class FailoverEvent:
@@ -57,9 +90,17 @@ class FailoverEvent:
 
 
 class ReplicationManager:
-    def __init__(self, tiers: list[ReplicaTier], primary: str = "cloud"):
+    def __init__(self, tiers: list[ReplicaTier], primary: str = "cloud",
+                 *, local_tier: str | None = None):
+        """``local_tier`` names the always-available on-device tier the
+        manager falls back to under total disconnection; when None the
+        lowest-quality tier plays that role (an on-device tier needs no
+        network by construction, and the lowest tier is the cheapest
+        approximation of one)."""
         self.tiers = {t.name: t for t in tiers}
         self.primary = primary
+        assert local_tier is None or local_tier in self.tiers, local_tier
+        self.local_tier = local_tier
         self.events: list[FailoverEvent] = []
         self.sync_bytes_total = 0
         self.sync_count = 0
@@ -91,20 +132,32 @@ class ReplicationManager:
         return out
 
     # -- failover -----------------------------------------------------------
+    def _fallback_tier(self) -> ReplicaTier:
+        """The tier of last resort under total disconnection: the
+        configured local tier, else the lowest-quality tier.  Always
+        defined for a non-empty manager -- a cloud-only fleet degrades
+        to its cheapest cloud tier instead of raising KeyError on a
+        tier literally named "device"."""
+        if self.local_tier is not None:
+            return self.tiers[self.local_tier]
+        return min(self.tiers.values(), key=lambda t: t.quality)
+
     def pick_tier(self, *, bandwidth_floor: float = 1e6) -> ReplicaTier:
         """Best reachable tier: highest quality whose link sustains
         interactive traffic; bandwidth-limited networks prefer
         lightweight tiers (quality degradation)."""
+        fallback = self._fallback_tier()
         ranked = sorted(self.tiers.values(), key=lambda t: -t.quality)
         for tier in ranked:
             if not tier.reachable:
                 continue
             if tier.cond.bandwidth_bps < bandwidth_floor \
-                    and tier.quality > 0.5 and tier.name != "device":
+                    and tier.quality > 0.5 and tier is not fallback:
                 continue  # heavy tier over a starved link: skip
             return tier
-        # total disconnection: the on-device tier always works
-        return self.tiers["device"]
+        # total disconnection: degrade to the local/lowest tier, which
+        # needs no network to serve
+        return fallback
 
     def failover(self, reason: str = "network") -> tuple[ReplicaTier, float]:
         """Switch the active tier; returns (tier, failover latency).
@@ -130,21 +183,54 @@ class ReplicationManager:
         return tier, latency
 
     # -- reconnection merge ---------------------------------------------------
+    def _quality_of(self, tier_name: str | None) -> float:
+        """Quality of a named tier; unknown sides rank below every real
+        tier but above nothing (-1 keeps the primary tie-break in
+        charge when neither side is identified)."""
+        if tier_name is not None and tier_name in self.tiers:
+            return self.tiers[tier_name].quality
+        return -1.0
+
     def merge_on_reconnect(self, local_ws: AgentWorkspace,
-                           remote_ws: AgentWorkspace) -> AgentWorkspace:
+                           remote_ws: AgentWorkspace, *,
+                           local_tier: str | None = None,
+                           remote_tier: str | None = None) \
+            -> AgentWorkspace:
         """Vector-clock merge of diverged replicas (paper: eventual
-        consistency, temporary divergence during partitions)."""
+        consistency, temporary divergence during partitions).
+
+        Dominance fast-forwards.  Concurrent edits keep the side that
+        actually ran at higher quality -- ``local_tier``/``remote_tier``
+        name the tiers the workspaces came from; the primary tier breaks
+        quality ties, and with neither side identified the remote
+        (reconnecting-primary) side keeps the legacy benefit of the
+        doubt.  Either way the loser's request outputs are unioned in so
+        no user-visible work is lost.  The merge never mutates its
+        inputs: the winner is returned as a fresh workspace with copied
+        request and clock state (callers keep using their own replicas
+        for retries / re-validation)."""
         if remote_ws.vclock.dominates(local_ws.vclock):
-            winner = remote_ws
+            winner, loser = remote_ws, local_ws
         elif local_ws.vclock.dominates(remote_ws.vclock):
-            winner = local_ws
+            winner, loser = local_ws, remote_ws
         else:
-            # concurrent: keep the higher-quality (primary) side, but
-            # union request outputs so no user-visible work is lost
-            winner = remote_ws
-            by_rid = {r["rid"]: r for r in winner.requests}
-            for r in local_ws.requests:
-                if r["rid"] not in by_rid:
-                    winner.requests.append(r)
-        winner.vclock = local_ws.vclock.merge(remote_ws.vclock)
-        return winner
+            # concurrent: rank by the tiers the replicas ran on (the
+            # old code unconditionally crowned the remote side, which
+            # inverted the "keep the higher-quality side" contract
+            # whenever the LOCAL side was the better tier)
+            lq = self._quality_of(local_tier)
+            rq = self._quality_of(remote_tier)
+            if lq != rq:
+                local_wins = lq > rq
+            else:                     # tie: primary side wins
+                local_wins = local_tier == self.primary
+            winner, loser = (local_ws, remote_ws) if local_wins \
+                else (remote_ws, local_ws)
+        merged_requests = [copy.deepcopy(r) for r in winner.requests]
+        by_rid = {r["rid"] for r in merged_requests}
+        for r in loser.requests:
+            if r["rid"] not in by_rid:
+                merged_requests.append(copy.deepcopy(r))
+        return dataclasses.replace(
+            winner, requests=merged_requests,
+            vclock=local_ws.vclock.merge(remote_ws.vclock))

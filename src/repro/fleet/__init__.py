@@ -19,13 +19,25 @@ speculative -- draft/verify tier pairs: draft on an edge engine, slot
                hand-off over the attested wire (heterogeneous max_len
                via migration.repack_slot), teacher-forced verification
                on a cloud engine with rejected suffixes bounced back
-autoscaler  -- elastic pool membership: EngineTemplate + ScalePolicy
-               drive spawn (new engine joins router/balancer at once)
-               and drain-then-retire (every slot migrates or parks via
-               the migration path -- scaling is migration), with typed
+autoscaler  -- elastic pool membership: per-tier EngineTemplate pools +
+               ScalePolicy drive spawn at the tier the backlog needs
+               (new engine joins router/balancer at once) and
+               drain-then-retire (every slot migrates or parks via the
+               migration path -- scaling is migration), with typed
                ScaleEvents on the unified audit log
+
+Quality tiers (core.replication.QualityTier) are a first-class routing
+dimension: engines carry a tier (distinct weights -- full bf16, int8,
+small model), requests carry a quality_floor, the router degrades to a
+lower-but-acceptable tier under saturation / deadline pressure / link
+failure (typed QualityEvents on the audit log), cross-tier hand-offs
+re-prefill the committed stream (lossy -- bit-exactness is a same-tier
+property), and the speculative controller's "distribution" verify mode
+runs standard speculative-sampling accept/reject so a distinct-weights
+draft tier still commits target-distributed output.
 """
 
+from repro.core.replication import FULL_TIER, QualityTier
 from repro.fleet.autoscaler import (Autoscaler, EngineTemplate,
                                     ScaleEvent, ScalePolicy, ScaleSignals)
 from repro.fleet.balancer import Rebalancer, peek_slot_meta
@@ -39,16 +51,17 @@ from repro.fleet.lifecycle import (DeadlineExpired, LifecycleError,
 from repro.fleet.router import RouteDecision, Router
 from repro.fleet.speculative import SpecTierStats, SpeculativeTierController
 from repro.fleet.telemetry import (EngineStats, FleetTelemetry,
-                                   MigrationRecord, percentile)
+                                   MigrationRecord, QualityEvent,
+                                   percentile)
 
 __all__ = [
     "Autoscaler", "DeadlineExpired", "EngineHandle", "EngineStats",
-    "EngineTemplate", "FleetController", "FleetTelemetry",
-    "LifecycleError", "LifecycleEvent", "MigrationRecord", "Rebalancer",
-    "RequestCancelled", "RequestFailed", "RequestSpec", "RequestState",
-    "RequestTicket", "RouteDecision", "Router", "ScaleEvent",
-    "ScalePolicy", "ScaleSignals", "SpecTierStats",
-    "SpeculativeTierController", "TERMINAL_STATES", "WorkItem",
-    "WorkQueue", "effective_priority", "peek_slot_meta", "percentile",
-    "work_order",
+    "EngineTemplate", "FULL_TIER", "FleetController", "FleetTelemetry",
+    "LifecycleError", "LifecycleEvent", "MigrationRecord",
+    "QualityEvent", "QualityTier", "Rebalancer", "RequestCancelled",
+    "RequestFailed", "RequestSpec", "RequestState", "RequestTicket",
+    "RouteDecision", "Router", "ScaleEvent", "ScalePolicy",
+    "ScaleSignals", "SpecTierStats", "SpeculativeTierController",
+    "TERMINAL_STATES", "WorkItem", "WorkQueue", "effective_priority",
+    "peek_slot_meta", "percentile", "work_order",
 ]

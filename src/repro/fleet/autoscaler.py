@@ -30,10 +30,11 @@ displaced.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Any, Optional
 
 from repro.core.daemon import DeviceProfile
+from repro.core.replication import FULL_TIER, QualityTier
 from repro.fleet.cluster import EngineHandle
 from repro.fleet.telemetry import percentile
 from repro.serving.engine import Engine
@@ -47,12 +48,22 @@ class EngineTemplate:
     engine can unstick a policy-gated confidential backlog), the
     compiled geometry (``slots``, ``max_len`` -- greedy bit-exactness
     only holds within one geometry, so templates should match the fleet
-    they join), and a base rng seed (spawn *i* uses ``seed + i``)."""
+    they join), and a base rng seed (spawn *i* uses ``seed + i``).
+
+    Cross-model fleets add a quality dimension: ``tier`` stamps the
+    spawned engine's ``QualityTier``, and ``cfg``/``params`` carry the
+    tier's own model (int8-dequantized or small-model weights).  When
+    ``params`` is None the spawn borrows weights from a live engine of
+    the same tier (every tier's engines share weights by definition),
+    falling back to any live engine for the untiered legacy case."""
     name: str = "auto"               # spawned engines are name0, name1...
     profile: DeviceProfile = None
     slots: int = 4
     max_len: int = 128
     seed: int = 10_000
+    tier: QualityTier = FULL_TIER
+    cfg: Any = field(default=None, repr=False, compare=False)
+    params: Any = field(default=None, repr=False, compare=False)
 
 
 @dataclass(frozen=True)
@@ -124,19 +135,38 @@ class ScaleEvent:
 class Autoscaler:
     """Spawn/retire engines from telemetry pressure, one decision per
     fleet step.  Only engines this autoscaler spawned are retirement
-    candidates -- the operator's seed fleet is never scaled away."""
+    candidates -- the operator's seed fleet is never scaled away.
 
-    def __init__(self, template: EngineTemplate,
+    ``templates`` is one ``EngineTemplate`` (the single-tier legacy
+    form) or a list of them, one per quality tier: scale-up then adds
+    capacity at the tier the backlog actually needs -- each pending
+    item demands the cheapest template tier at/above its
+    ``quality_floor``, and the most-demanded tier spawns (capacity a
+    request may not legally use is no capacity at all)."""
+
+    def __init__(self, templates: EngineTemplate | list[EngineTemplate],
                  policy: ScalePolicy | None = None):
-        assert template.profile is not None, \
-            "EngineTemplate needs a DeviceProfile"
-        self.template = template
+        if isinstance(templates, EngineTemplate):
+            templates = [templates]
+        assert templates, "the autoscaler needs at least one template"
+        assert all(t.profile is not None for t in templates), \
+            "every EngineTemplate needs a DeviceProfile"
+        self.templates: dict[str, EngineTemplate] = {}
+        for t in templates:
+            assert t.tier.name not in self.templates, \
+                f"duplicate template for tier {t.tier.name!r}"
+            self.templates[t.tier.name] = t
         self.policy = policy or ScalePolicy()
         self.spawned: list[str] = []     # live spawned engine names
         self.events: list[ScaleEvent] = []
         self._n_spawned = 0              # ever, for unique names/seeds
         self._last_scale: Optional[float] = None
         self._expired_seen = 0
+
+    @property
+    def template(self) -> EngineTemplate:
+        """The single-template legacy view (first declared)."""
+        return next(iter(self.templates.values()))
 
     # -- observation --------------------------------------------------------
     def signals(self, fleet) -> ScaleSignals:
@@ -191,22 +221,62 @@ class Autoscaler:
         fleet.telemetry.record_scale(ev)
         return ev
 
+    def pick_template(self, fleet) -> EngineTemplate:
+        """The tier the backlog actually needs.  Each pending work item
+        (fresh or parked) demands the CHEAPEST template tier at/above
+        its quality floor -- elasticity adds the least-expensive
+        capacity the work may legally use -- and the most-demanded tier
+        wins (ties: cheapest).  An empty backlog (min-pool refills,
+        wait-p95 triggers) spawns the cheapest template."""
+        if len(self.templates) == 1:
+            return self.template
+        by_cost = sorted(self.templates.values(),
+                         key=lambda t: t.tier.quality)
+        demand = {t.tier.name: 0 for t in by_cost}
+        for item in fleet.queue.ordered():
+            floor = getattr(item, "quality_floor", 0.0)
+            for t in by_cost:
+                if t.tier.quality >= floor - 1e-12:
+                    demand[t.tier.name] += 1
+                    break
+        best = max(by_cost, key=lambda t: demand[t.tier.name])
+        return best if demand[best.tier.name] > 0 else by_cost[0]
+
+    def _params_for(self, fleet, template: EngineTemplate):
+        """Weights for a spawn: the template's own, else borrowed from a
+        live engine of the same tier (one tier = one weight set), else
+        -- untiered legacy -- from any live engine."""
+        if template.params is not None:
+            return template.cfg or fleet.cfg, template.params
+        for h in fleet.handles.values():
+            if h.tier.name == template.tier.name:
+                return h.engine.cfg, h.engine.params
+        # multi-template fleets may NEVER borrow across tiers: stamping
+        # tier X on tier Y's weights would serve floored requests below
+        # their contract with no audit trail
+        assert len(self.templates) == 1, \
+            (f"template tier {template.tier.name!r} declares no params "
+             "and no live engine of that tier exists to borrow from")
+        ref = next(iter(fleet.handles.values())).engine
+        return ref.cfg, ref.params
+
     def scale_up(self, fleet, *, reason: str = "manual",
                  signals: Optional[ScaleSignals] = None) -> ScaleEvent:
-        """Instantiate one engine from the template and register it.
-        The new engine shares the fleet's params (any live engine
-        carries them) and joins the router/balancer immediately: queued
-        and parked work dispatches onto it in this very step's dispatch
-        pass."""
-        ref = next(iter(fleet.handles.values())).engine
-        while f"{self.template.name}{self._n_spawned}" in fleet.handles:
+        """Instantiate one engine from the backlog-demanded tier's
+        template and register it.  It joins the router/balancer
+        immediately: queued and parked work dispatches onto it in this
+        very step's dispatch pass."""
+        template = self.pick_template(fleet)
+        cfg, params = self._params_for(fleet, template)
+        while f"{template.name}{self._n_spawned}" in fleet.handles:
             self._n_spawned += 1
-        name = f"{self.template.name}{self._n_spawned}"
-        eng = Engine(fleet.cfg, ref.params, slots=self.template.slots,
-                     max_len=self.template.max_len,
-                     seed=self.template.seed + self._n_spawned)
+        name = f"{template.name}{self._n_spawned}"
+        eng = Engine(cfg, params, slots=template.slots,
+                     max_len=template.max_len,
+                     seed=template.seed + self._n_spawned)
         self._n_spawned += 1
-        fleet.add_engine(EngineHandle(name, eng, self.template.profile))
+        fleet.add_engine(EngineHandle(name, eng, template.profile,
+                                      tier=template.tier))
         self.spawned.append(name)
         return self._record(fleet, "spawn", name, reason, signals)
 

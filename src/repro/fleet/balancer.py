@@ -14,6 +14,17 @@ Two mechanisms, both built on ``Engine.extract_slot``/``inject_slot``:
     migration/channel stack: compressed, then sealed through an
     ``AttestedSession`` when both endpoints attest (plain fabric link
     otherwise -- which the router only permits for public data).
+
+Cross-tier moves are *lossy by construction*: engines of different
+``QualityTier``s run distinct weights, so the donor's cache rows mean
+nothing on the destination and bit-exact resume is impossible in
+principle.  The lossy hand-off ships only the request metadata + the
+committed token stream (a few hundred bytes instead of the cache blob)
+and the destination **re-prefills** prompt + committed output before
+decoding on -- token history preserved exactly, device state rebuilt on
+the new tier's weights.  Every cross-tier move lands a ``QualityEvent``
+(down- or upshift) on the unified audit log next to its
+``MigrationRecord``.
 """
 
 from __future__ import annotations
@@ -25,6 +36,7 @@ from repro.core.channel import AttestedSession
 from repro.core.migration import pack_slot, repack_slot, unpack_slot
 from repro.fleet.lifecycle import RequestState
 from repro.fleet.telemetry import MigrationRecord
+from repro.serving.engine import request_from_dict, request_to_dict
 
 
 def peek_slot_meta(blob: bytes) -> dict:
@@ -104,8 +116,9 @@ class Rebalancer:
                 continue
             fleet.ticket_transition(rid, RequestState.MIGRATING,
                                     reason="failover", engine=dead.name)
-            rec = self.place_blob(blob, survivors, fleet,
-                                  src=dead.name, reason="failover")
+            rec = self.place_blob(
+                blob, survivors, fleet, src=dead.name, reason="failover",
+                src_tier=getattr(dead, "tier", None) and dead.tier.name)
             if rec is None:
                 fleet.inflight.pop(rid, None)
                 fleet.park_blob(dead.name, blob, origin="failover")
@@ -121,8 +134,15 @@ class Rebalancer:
 
     def place_blob(self, blob: bytes, handles, fleet, *, src: str,
                    reason: str,
-                   deadline_slack: float | None = None) \
+                   deadline_slack: float | None = None,
+                   src_tier: str | None = None) \
             -> MigrationRecord | None:
+        """Re-place a parked slot snapshot.  A same-tier target restores
+        the cache rows bit-exactly (``inject_slot``); a cross-tier
+        target cannot use them (distinct weights) and re-prefills the
+        committed token stream instead -- the lossy hand-off.  The
+        request's ``quality_floor`` bounds how far down the re-placement
+        may degrade."""
         meta = peek_slot_meta(blob)
         remaining = meta["max_new_tokens"] - len(meta["output"])
         need = len(meta["prompt"]) + meta["max_new_tokens"]
@@ -130,10 +150,33 @@ class Rebalancer:
             [h for h in handles if need <= h.engine.max_len], fleet.cfg,
             sensitivity=meta["sensitivity"],
             prefill_tokens=0, decode_tokens=remaining,
-            deadline_slack=deadline_slack)
+            deadline_slack=deadline_slack,
+            quality_floor=meta.get("quality_floor", 0.0),
+            src_tier=src_tier,
+            reprefill_tokens=len(meta["prompt"]) + len(meta["output"]))
         if dec.target is None:
             return None
         target = fleet.handles[dec.target]
+        if src_tier and getattr(target, "tier", None) is not None \
+                and target.tier.name != src_tier:
+            req = request_from_dict(meta)
+            req.done, req.slot = False, -1
+            placed = target.engine.add_request(req,
+                                               committed=meta["output"])
+            assert placed, f"router sent {req.rid} to a full engine"
+            fleet.reassign(req, target.name)
+            fleet.record_tier_change(req.rid, src_tier, target.tier.name,
+                                     reason=f"{reason}: "
+                                            f"{dec.cause or 'tier change'}",
+                                     engine=target.name)
+            fleet.ticket_transition(
+                req.rid, RequestState.DECODING,
+                reason=f"{reason} (lossy re-prefill on {target.tier.name})",
+                engine=target.name)
+            return MigrationRecord(rid=req.rid, src=src, dst=target.name,
+                                   reason=reason, step=0,
+                                   wire_bytes=len(msgpack.packb(meta)),
+                                   lossy=True)
         snap = unpack_slot(blob, target.engine.slot_like())
         snap = repack_slot(snap, target.engine.max_len)
         req = target.engine.inject_slot(snap)
@@ -152,6 +195,72 @@ class Rebalancer:
         return len(req.prompt) + req.max_new_tokens \
             <= handle.engine.max_len
 
+    @staticmethod
+    def same_tier(a, b) -> bool:
+        """Bit-exact migration is only defined between engines of one
+        tier (identical weights); anything else is a lossy hand-off."""
+        ta, tb = getattr(a, "tier", None), getattr(b, "tier", None)
+        if ta is None or tb is None:
+            return True              # untiered fleet: legacy behavior
+        return ta.name == tb.name
+
+    def migrate(self, src, dst, slot: int, fleet, *,
+                reason: str = "rebalance") -> MigrationRecord:
+        """Move one in-flight slot src->dst, picking the right wire:
+        bit-exact ``live_migrate`` within a tier, ``lossy_migrate``
+        (re-prefill of the committed stream) across tiers."""
+        if self.same_tier(src, dst):
+            return self.live_migrate(src, dst, slot, fleet, reason=reason)
+        return self.lossy_migrate(src, dst, slot, fleet, reason=reason)
+
+    def lossy_migrate(self, src, dst, slot: int, fleet, *,
+                      reason: str = "rebalance") -> MigrationRecord:
+        """Cross-tier hand-off: the destination runs *distinct weights*,
+        so the donor's cache rows are untranslatable and bit-exactness
+        cannot be claimed.  Only the request metadata + committed token
+        stream travel (sealed through an ``AttestedSession`` when both
+        endpoints attest); the destination re-prefills prompt +
+        committed output and decodes on.  Token history is preserved
+        exactly; the continuation is the new tier's -- that is the
+        availability-for-fidelity trade, and it is audited as a
+        ``QualityEvent``."""
+        req = src.engine.requests[slot]
+        assert self.fits(req, dst), \
+            "slot does not fit the target's context budget"
+        committed = list(req.output)
+        src.engine.retire(slot)
+        self.shadow.get(src.name, {}).pop(req.rid, None)
+        fleet.ticket_transition(req.rid, RequestState.MIGRATING,
+                                reason=f"{reason} (lossy)", engine=src.name)
+        link = fleet.fabric.link(src.name, dst.name)
+        session = None
+        if src.attester is not None and dst.attester is not None:
+            session = AttestedSession(src.attester, dst.attester, link,
+                                      fleet.whitelist)
+        wire = compression.compress(msgpack.packb(request_to_dict(req)),
+                                    level=self.compression_level)
+        if session is not None:
+            received = session.transfer(wire,
+                                        aad=fleet.measurement.encode())
+        else:
+            received = link.send(wire)
+        meta = msgpack.unpackb(compression.decompress(received))
+        req2 = request_from_dict(meta)
+        req2.done, req2.slot = False, -1
+        placed = dst.engine.add_request(req2, committed=committed)
+        assert placed, "lossy_migrate needs a free destination slot"
+        fleet.reassign(req2, dst.name)
+        fleet.record_tier_change(
+            req2.rid, getattr(src, "tier", None) and src.tier.name or "",
+            getattr(dst, "tier", None) and dst.tier.name or "",
+            reason=reason, engine=dst.name)
+        fleet.ticket_transition(
+            req2.rid, RequestState.DECODING,
+            reason=f"{reason} (lossy re-prefill)", engine=dst.name)
+        return MigrationRecord(rid=req2.rid, src=src.name, dst=dst.name,
+                               reason=reason, step=0,
+                               wire_bytes=len(wire), lossy=True)
+
     def live_migrate(self, src, dst, slot: int, fleet, *,
                      reason: str = "rebalance") -> MigrationRecord:
         """Move one in-flight slot src->dst through the wire stack.
@@ -159,6 +268,8 @@ class Rebalancer:
         cache rows are re-laid-out (``repack_slot``) at restore."""
         assert self.fits(src.engine.requests[slot], dst), \
             "slot does not fit the target's context budget"
+        assert self.same_tier(src, dst), \
+            "cross-tier moves must use lossy_migrate (distinct weights)"
         snap = src.engine.extract_slot(slot)
         self.shadow.get(src.name, {}).pop(snap.rid, None)
         fleet.ticket_transition(snap.rid, RequestState.MIGRATING,
@@ -187,38 +298,93 @@ class Rebalancer:
         others = [h for h in fleet.handles.values()
                   if h.healthy and h.name != src.name
                   and getattr(h, "spec_role", None) != "verify"]
+        src_tier = getattr(src, "tier", None)
         for slot, req in sorted(src.engine.requests.items()):
             remaining = req.max_new_tokens - len(req.output)
             dec = fleet.router.route(
                 [h for h in others if self.fits(req, h)], fleet.cfg,
                 sensitivity=req.sensitivity,
                 prefill_tokens=0,
-                decode_tokens=remaining)
+                decode_tokens=remaining,
+                quality_floor=req.quality_floor,
+                src_tier=src_tier.name if src_tier else None,
+                reprefill_tokens=len(req.prompt) + len(req.output))
             if dec.target is None:
                 continue             # stays until capacity frees up
-            recs.append(self.live_migrate(
+            recs.append(self.migrate(
                 src, fleet.handles[dec.target], slot, fleet,
                 reason="drain"))
         return recs
 
     def rebalance(self, fleet) -> list[MigrationRecord]:
         """One smoothing move when occupancy spread exceeds the
-        threshold: busiest engine sheds its most-remaining request to the
-        least-loaded eligible engine."""
+        threshold: busiest engine sheds its most-remaining request to
+        the least-loaded eligible engine.  When loads are already
+        smooth, one *upshift* instead: a request serving below the best
+        tier it could have (a past downshift) migrates back up as soon
+        as the better tier has room -- degradation is a lease, not a
+        sentence."""
         healthy = [h for h in fleet.handles.values()
                    if h.healthy and getattr(h, "spec_role", None) is None]
         if len(healthy) < 2:
             return []
         busiest = max(healthy, key=lambda h: h.load)
-        idlest = min(healthy, key=lambda h: h.load)
-        if busiest.load - idlest.load < self.imbalance_threshold \
-                or not busiest.engine.requests \
-                or not idlest.engine.free_slots:
+        # load smoothing never trades quality away: targets are the
+        # busiest engine's tier or better (a move DOWN the ladder is
+        # dispatch-time degradation's call, and smoothing downward
+        # would ping-pong with the upshift pass below) -- an idle
+        # lower-tier engine must not mask an idle same-tier peer
+        peers = [h for h in healthy if h is not busiest
+                 and self._tier_quality(h)
+                 >= self._tier_quality(busiest) - 1e-12]
+        idlest = min(peers, key=lambda h: h.load) if peers else None
+        if idlest is not None \
+                and busiest.load - idlest.load >= self.imbalance_threshold \
+                and busiest.engine.requests \
+                and idlest.engine.free_slots:
+            slot, req = max(busiest.engine.requests.items(),
+                            key=lambda kv: kv[1].max_new_tokens
+                            - len(kv[1].output))
+            if fleet.router.eligible(req.sensitivity, idlest) \
+                    and self.fits(req, idlest):
+                return [self.migrate(busiest, idlest, slot, fleet)]
             return []
-        slot, req = max(busiest.engine.requests.items(),
-                        key=lambda kv: kv[1].max_new_tokens
-                        - len(kv[1].output))
-        if not fleet.router.eligible(req.sensitivity, idlest) \
-                or not self.fits(req, idlest):
+        return self.upshift(fleet, healthy)
+
+    @staticmethod
+    def _tier_quality(handle) -> float:
+        tier = getattr(handle, "tier", None)
+        return 1.0 if tier is None else tier.quality
+
+    def upshift(self, fleet, healthy) -> list[MigrationRecord]:
+        """Move ONE degraded request up to the best reachable tier with
+        room (cross-tier, so a lossy re-prefill; emitted as an "up"
+        ``QualityEvent``).  The most-degraded request with the most
+        remaining work upgrades first -- it has the most quality left
+        to gain."""
+        best = None
+        for h in healthy:
+            if not getattr(h, "reachable", True):
+                continue
+            for slot, req in h.engine.requests.items():
+                if req.done:
+                    continue
+                targets = [
+                    t for t in healthy
+                    if t is not h and t.engine.free_slots
+                    and getattr(t, "reachable", True)
+                    and self._tier_quality(t) > self._tier_quality(h)
+                    and self.fits(req, t)
+                    and fleet.router.eligible(req.sensitivity, t)]
+                if not targets:
+                    continue
+                target = max(targets, key=self._tier_quality)
+                gain = self._tier_quality(target) - self._tier_quality(h)
+                remaining = req.max_new_tokens - len(req.output)
+                key = (gain, remaining)
+                if best is None or key > best[0]:
+                    best = (key, h, slot, target)
+        if best is None:
             return []
-        return [self.live_migrate(busiest, idlest, slot, fleet)]
+        _, src, slot, dst = best
+        return [self.migrate(src, dst, slot, fleet, reason="upshift")]

@@ -31,15 +31,16 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.attestation import Attester, capabilities, measure_config
-from repro.core.channel import Fabric
+from repro.core.channel import Fabric, NetworkCondition
 from repro.core.daemon import DeviceProfile
 from repro.core.migration import pack_slot
+from repro.core.replication import FULL_TIER, QualityTier
 from repro.fleet.balancer import Rebalancer, peek_slot_meta
 from repro.fleet.lifecycle import (RequestSpec, RequestState, RequestTicket,
                                    WorkItem, WorkQueue, spec_of_request)
 from repro.fleet.router import Router
 from repro.fleet.speculative import SpeculativeTierController
-from repro.fleet.telemetry import FleetTelemetry
+from repro.fleet.telemetry import FleetTelemetry, QualityEvent
 from repro.serving.engine import Engine, Request
 
 
@@ -51,10 +52,21 @@ class EngineHandle:
     attester: Optional[Attester] = None
     healthy: bool = True
     spec_role: Optional[str] = None  # "draft" | "verify" when paired
+    # the engine's quality point: engines of one tier share weights
+    # (bit-exact migration); engines of different tiers do not (lossy
+    # re-prefill hand-off).  Untiered fleets all share FULL_TIER.
+    tier: QualityTier = FULL_TIER
+    # link health of this engine as seen from the front door; None
+    # means "always reachable" (the in-process default)
+    cond: Optional[NetworkCondition] = None
 
     @property
     def load(self) -> float:
         return len(self.engine.requests) / max(self.engine.slots, 1)
+
+    @property
+    def reachable(self) -> bool:
+        return self.cond is None or (self.cond.up and self.cond.loss < 0.95)
 
 
 class FleetController:
@@ -90,14 +102,26 @@ class FleetController:
         self.queue_limit = queue_limit
         self.rebalance_every = rebalance_every
         self.measurement = measure_config(self.cfg)
-        self.whitelist = {self.measurement}
+        # cross-model fleets: every tier's config measures differently,
+        # and the attestation whitelist must admit each of them (the
+        # tiers registry survives engine retirement so audit events can
+        # still rank a departed tier's quality)
+        self.tiers: dict[str, QualityTier] = {}
+        self.whitelist = set()
+        for h in handles:
+            assert h.engine.cfg.vocab_size == self.cfg.vocab_size, \
+                (f"tiered engines must share a tokenizer: "
+                 f"{h.engine.cfg.name} vocab {h.engine.cfg.vocab_size} "
+                 f"!= {self.cfg.vocab_size}")
+            self.tiers.setdefault(h.tier.name, h.tier)
+            self.whitelist.add(measure_config(h.engine.cfg))
         self.authority = authority   # kept: late-joining engines attest too
         if authority is not None:
-            caps = capabilities(self.cfg)
             for h in handles:
                 if h.profile.attested and h.attester is None:
                     h.attester = Attester(h.name, authority,
-                                          self.measurement, caps)
+                                          measure_config(h.engine.cfg),
+                                          capabilities(h.engine.cfg))
         # elastic membership: the autoscaler (when armed) runs once per
         # step, spawning engines from its template under queue/deadline
         # pressure and retiring idle spawned engines via retire_engine
@@ -171,7 +195,9 @@ class FleetController:
             seq=ticket.seq, t_submit=ticket.submitted_at,
             sensitivity=engine_req.sensitivity,
             rows_needed=len(engine_req.prompt) + engine_req.max_new_tokens,
-            deadline=engine_req.deadline, ticket=ticket, req=engine_req))
+            deadline=engine_req.deadline,
+            quality_floor=engine_req.quality_floor,
+            ticket=ticket, req=engine_req))
         return True if legacy else ticket
 
     # -- bookkeeping shared with the balancer ----------------------------------
@@ -259,18 +285,37 @@ class FleetController:
                   origin: str = "failover"):
         """A packed slot with nowhere to go joins the parked work list
         (the orphan re-placement path); dispatch retries it in priority
-        order alongside fresh admissions."""
+        order alongside fresh admissions.  The source engine's tier
+        rides along: a later re-placement on a different tier must take
+        the lossy re-prefill path, not inject foreign cache rows."""
         meta = peek_slot_meta(blob)
         ticket = self.tickets.get(meta["rid"])
         now = self.clock()
+        src_handle = self.handles.get(src)
         self.queue.push(WorkItem(
             rid=meta["rid"], priority=int(meta.get("priority", 0)),
             seq=ticket.seq if ticket is not None else self.queue.next_seq(),
             t_submit=ticket.submitted_at if ticket is not None else now,
             sensitivity=meta["sensitivity"],
             rows_needed=len(meta["prompt"]) + meta["max_new_tokens"],
-            deadline=meta.get("deadline"), ticket=ticket,
-            blob=blob, src=src, origin=origin, parked_at=now))
+            deadline=meta.get("deadline"),
+            quality_floor=meta.get("quality_floor", 0.0), ticket=ticket,
+            blob=blob, src=src,
+            src_tier=src_handle.tier.name if src_handle is not None else "",
+            origin=origin, parked_at=now))
+
+    def record_tier_change(self, rid: str, src_tier: str, dst_tier: str,
+                           *, reason: str, engine: str | None = None):
+        """Audit a cross-tier move as a typed ``QualityEvent`` (down- or
+        upshift by the registered tiers' relative quality)."""
+        if not src_tier or not dst_tier or src_tier == dst_tier:
+            return
+        sq = self.tiers.get(src_tier, FULL_TIER).quality
+        dq = self.tiers.get(dst_tier, FULL_TIER).quality
+        self.telemetry.record_quality(QualityEvent(
+            rid=rid, src_tier=src_tier, dst_tier=dst_tier,
+            direction="down" if dq < sq else "up", reason=reason,
+            quality=dq, engine=engine or "", t=self.clock()))
 
     def requeue_request(self, req: Request, t_submit: float):
         """A request restarts from its prompt (failure before its first
@@ -312,7 +357,15 @@ class FleetController:
         expiry on the parked queue.  "Expected resume" is approximated
         by the preemptor's raw roofline time on the victim's engine:
         the victim cannot come back before the work that displaced it
-        is done."""
+        is done.
+
+        Speculative slots ARE parkable (the ROADMAP lifecycle gap):
+        the pair controller first rolls the uncommitted draft tail back
+        (``Engine.rollback_slot``) and dissolves the request's replica
+        slot on the verify engine, so the packed snapshot -- and the
+        stream the victim later resumes from -- holds only committed
+        tokens.  Plain slots win ties against speculative ones (no
+        rollback to pay)."""
         best = None
         now = self.clock()
         for h in handles:
@@ -328,17 +381,25 @@ class FleetController:
                     continue
                 if req.deadline is not None and req.deadline < est_resume:
                     continue         # would expire while parked
-                if spec is not None and req.rid in spec._spec:
-                    continue         # uncommitted speculative tail
+                speculative = spec is not None and req.rid in spec._spec
                 vt = self.tickets.get(req.rid)
-                # lowest priority first; youngest within a class (the
-                # most recently admitted victim loses the least work)
-                key = (req.priority, -(vt.seq if vt is not None else 0))
+                # lowest priority first; plain before speculative (a
+                # spec victim pays a draft-tail rollback); youngest
+                # within a class (the most recently admitted victim
+                # loses the least work)
+                key = (req.priority, speculative,
+                       -(vt.seq if vt is not None else 0))
                 if best is None or key < best[0]:
-                    best = (key, h, slot, req)
+                    best = (key, h, slot, req, spec if speculative
+                            else None)
         if best is None:
             return False
-        _, handle, slot, req = best
+        _, handle, slot, req, spec = best
+        if spec is not None:
+            # roll the uncommitted tail back and free the verify-tier
+            # replica BEFORE packing: only committed tokens may survive
+            # a park
+            spec.release_for_park(req.rid)
         snap = handle.engine.extract_slot(slot)
         blob = pack_slot(snap)
         self.balancer.shadow.get(handle.name, {}).pop(req.rid, None)
@@ -356,7 +417,8 @@ class FleetController:
         route = lambda: self.router.route(  # noqa: E731
             handles, self.cfg, sensitivity=req.sensitivity,
             prefill_tokens=len(req.prompt),
-            decode_tokens=req.max_new_tokens, deadline_slack=slack)
+            decode_tokens=req.max_new_tokens, deadline_slack=slack,
+            quality_floor=req.quality_floor)
         dec = route()
         if dec.target is None and dec.saturated \
                 and self._park_victim(item, handles):
@@ -371,6 +433,14 @@ class FleetController:
         self.placements.setdefault(req.rid, []).append(handle.name)
         self.telemetry.record_admit(handle.name)
         self.telemetry.record_queue_wait(now - item.t_submit)
+        if dec.degraded:
+            # routed below the best tier it could have had: a typed
+            # downshift on the audit log, naming the cause
+            self.telemetry.record_quality(QualityEvent(
+                rid=req.rid, src_tier=dec.preferred or "",
+                dst_tier=dec.tier or "", direction="down",
+                reason=dec.cause or dec.reason, quality=dec.quality,
+                engine=handle.name, t=now))
         self.ticket_transition(req.rid, RequestState.PREFILLING,
                                engine=handle.name, reason=dec.reason)
         spec = self.spec_controllers.get(handle.name)
@@ -390,7 +460,7 @@ class FleetController:
                   "drain": "drain"}.get(item.origin, "failover")
         place = lambda: self.balancer.place_blob(  # noqa: E731
             item.blob, handles, self, src=item.src, reason=reason,
-            deadline_slack=slack)
+            deadline_slack=slack, src_tier=item.src_tier or None)
         rec = place()
         if rec is None and self._park_victim(item, handles):
             rec = place()
@@ -512,16 +582,29 @@ class FleetController:
         pass."""
         assert handle.name not in self.handles, \
             f"engine name {handle.name!r} already registered"
-        assert handle.engine.cfg.name == self.cfg.name, \
-            f"config mismatch: {handle.engine.cfg.name} != {self.cfg.name}"
+        # cross-model fleets: tiers run distinct weights and even
+        # distinct (smaller) configs, but every tier must speak the
+        # same tokenizer or committed token streams are untranslatable
+        assert handle.engine.cfg.vocab_size == self.cfg.vocab_size, \
+            (f"tokenizer mismatch: {handle.engine.cfg.name} vocab "
+             f"{handle.engine.cfg.vocab_size} != {self.cfg.vocab_size}")
+        self.tiers.setdefault(handle.tier.name, handle.tier)
+        self.whitelist.add(measure_config(handle.engine.cfg))
         if self.authority is not None and handle.profile.attested \
                 and handle.attester is None:
             handle.attester = Attester(handle.name, self.authority,
-                                       self.measurement,
-                                       capabilities(self.cfg))
+                                       measure_config(handle.engine.cfg),
+                                       capabilities(handle.engine.cfg))
         self.handles[handle.name] = handle
         self.telemetry.stats(handle.name)     # appears in summaries now
         return handle
+
+    def set_link(self, name: str, cond: NetworkCondition | None):
+        """Inject (or clear) link conditions for one engine: the fleet-
+        level availability knob.  A downed/lossy link makes the engine
+        unreachable to the router, and requests degrade to reachable
+        tiers instead of queueing behind a dead uplink."""
+        self.handles[name].cond = cond
 
     def retire_engine(self, name: str, *, reason: str = "scale-down") \
             -> int:

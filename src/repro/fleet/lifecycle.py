@@ -17,6 +17,7 @@ State machine::
 
     QUEUED -> PREFILLING -> DECODING <-> MIGRATING
                          -> DRAFTING <-> VERIFYING
+                            DRAFTING  -> MIGRATING  (spec slot parked)
     any non-terminal     -> DONE | FAILED | CANCELLED | EXPIRED | HALTED
 
 ``MIGRATING`` covers every off-engine moment: a live move between
@@ -74,10 +75,12 @@ _ALLOWED = {
     RequestState.MIGRATING: {RequestState.DECODING, RequestState.CANCELLED,
                              RequestState.EXPIRED, RequestState.QUEUED,
                              RequestState.FAILED},
+    # DRAFTING -> MIGRATING: a speculative slot preempted/parked (its
+    # uncommitted tail rolled back first, replica slot dissolved)
     RequestState.DRAFTING: {RequestState.VERIFYING, RequestState.DECODING,
                             RequestState.DONE, RequestState.HALTED,
                             RequestState.CANCELLED, RequestState.QUEUED,
-                            RequestState.FAILED},
+                            RequestState.MIGRATING, RequestState.FAILED},
     RequestState.VERIFYING: {RequestState.DRAFTING, RequestState.DONE,
                              RequestState.HALTED, RequestState.FAILED},
 }
@@ -125,6 +128,10 @@ class RequestSpec:
     sensitivity: str = "public"      # public | personal | confidential
     priority: int = 0
     deadline: Optional[float] = None
+    # minimum acceptable tier quality in [0,1]: the router may degrade
+    # this request to a cheaper model tier under saturation / deadline
+    # pressure / link failure, but never below this floor (0 = any tier)
+    quality_floor: float = 0.0
 
     def to_request(self, rid: str) -> Request:
         """Materialize the mutable engine-side carrier."""
@@ -132,7 +139,8 @@ class RequestSpec:
                        max_new_tokens=self.max_new_tokens,
                        temperature=self.temperature, top_k=self.top_k,
                        sensitivity=self.sensitivity,
-                       priority=self.priority, deadline=self.deadline)
+                       priority=self.priority, deadline=self.deadline,
+                       quality_floor=self.quality_floor)
 
 
 def spec_of_request(req: Request) -> RequestSpec:
@@ -141,7 +149,8 @@ def spec_of_request(req: Request) -> RequestSpec:
                        max_new_tokens=req.max_new_tokens,
                        temperature=req.temperature, top_k=req.top_k,
                        sensitivity=req.sensitivity, priority=req.priority,
-                       deadline=req.deadline)
+                       deadline=req.deadline,
+                       quality_floor=req.quality_floor)
 
 
 class RequestTicket:
@@ -265,10 +274,12 @@ class WorkItem:
     sensitivity: str = "public"
     rows_needed: int = 0             # prompt + max_new context rows
     deadline: Optional[float] = None
+    quality_floor: float = 0.0       # min tier quality on re-placement
     ticket: Optional[RequestTicket] = None
     req: Optional[Request] = None
     blob: Optional[bytes] = None     # packed SlotSnapshot when parked
     src: str = ""                    # engine the parked slot left
+    src_tier: str = ""               # tier the parked slot's state is from
     origin: str = ""                 # "preempt" | "failover"
     parked_at: float = 0.0
 

@@ -4,11 +4,17 @@ Composes the daemon's placement rules with fleet-local signals:
 
   1. policy gate  -- ``daemon.placement_allowed``: sensitive data only on
      attested engines (the §7.4 rule, lifted from pairwise to N-way);
-  2. capacity     -- only engines with a free slot are candidates;
-  3. cost         -- the daemon's roofline model prices the request's
-     remaining work on each candidate's ``DeviceProfile``, scaled by the
-     engine's current load so a fast-but-busy pod loses to an idle edge
-     box when the work is small.
+  2. quality      -- engines carry a ``QualityTier`` (distinct weights:
+     full bf16, int8-quantized, small model); a request's
+     ``quality_floor`` bounds how far it may degrade, and the router
+     prefers the highest acceptable tier, downshifting only when the
+     preferred tier is saturated, misses the deadline, or its links are
+     down/starved (paper §3.5/§9.6: availability over fidelity);
+  3. capacity     -- only engines with a free slot are candidates;
+  4. cost         -- the daemon's roofline model prices the request's
+     remaining work on each candidate's own model config and
+     ``DeviceProfile``, scaled by the engine's current load so a
+     fast-but-busy pod loses to an idle edge box when the work is small.
 
 ``route`` is shape-agnostic: fresh admissions and failover re-placements
 go through the same scoring, so a re-placed slot obeys the same policy
@@ -32,13 +38,25 @@ class RouteDecision:
     # preemption can fix (a policy refusal never is -- evicting a slot
     # does not make an engine attested)
     saturated: bool = False
+    tier: str | None = None          # tier of the chosen engine
+    quality: float = 1.0             # quality of the chosen tier
+    preferred: str | None = None     # best acceptable tier in the fleet
+    degraded: bool = False           # chosen tier < preferred tier
+    cause: str = ""                  # "saturated" | "deadline" | "link"
 
 
 class Router:
     def __init__(self, *, max_unattested_sensitivity: str = "public",
-                 load_weight: float = 1.0):
+                 load_weight: float = 1.0,
+                 bandwidth_floor: float = 0.0):
+        """``bandwidth_floor`` (bytes/s; 0 = off) is the interactive-
+        traffic bound from replication.pick_tier, lifted per-request:
+        an engine whose link has degraded below it is skipped while any
+        adequately-linked tier remains -- heavy tiers over starved
+        links lose to light tiers nearby."""
         self.max_unattested_sensitivity = max_unattested_sensitivity
         self.load_weight = load_weight
+        self.bandwidth_floor = bandwidth_floor
 
     def eligible(self, sensitivity: str, handle) -> bool:
         return (handle.healthy
@@ -48,8 +66,11 @@ class Router:
     def score(self, handle, cfg: ModelConfig, *, prefill_tokens: int,
               decode_tokens: int, loaded: bool = True) -> float:
         """Estimated seconds to finish this request here: roofline time
-        for the remaining work, inflated by current occupancy
-        (``loaded=False`` gives the raw latency-optimal estimate)."""
+        for the remaining work on the handle's OWN model config (a
+        small-model tier is genuinely cheaper per token), inflated by
+        current occupancy (``loaded=False`` gives the raw
+        latency-optimal estimate)."""
+        cfg = getattr(handle.engine, "cfg", None) or cfg
         t = PrivacyAwareDaemon.step_time(cfg, handle.profile,
                                          prefill_tokens=prefill_tokens,
                                          decode_tokens=decode_tokens)
@@ -57,45 +78,163 @@ class Router:
             return t
         return t * (1.0 + self.load_weight * handle.load)
 
+    @staticmethod
+    def _tier_of(handle):
+        tier = getattr(handle, "tier", None)
+        if tier is None:
+            from repro.core.replication import FULL_TIER
+            return FULL_TIER
+        return tier
+
+    def _starved(self, handle) -> bool:
+        cond = getattr(handle, "cond", None)
+        return (self.bandwidth_floor > 0.0 and cond is not None
+                and cond.bandwidth_bps < self.bandwidth_floor)
+
     def route(self, handles, cfg: ModelConfig, *, sensitivity: str,
               prefill_tokens: int, decode_tokens: int,
               exclude: frozenset[str] = frozenset(),
-              deadline_slack: float | None = None) -> RouteDecision:
-        """Pick an engine.  ``deadline_slack`` (seconds until the
-        request's deadline) feeds the cost model: when the normal
-        load-balanced pick would miss the deadline, routing turns
-        latency-optimal -- the load-inflation term is dropped and the
-        raw-fastest eligible engine wins even if it is busy."""
+              deadline_slack: float | None = None,
+              quality_floor: float = 0.0,
+              src_tier: str | None = None,
+              reprefill_tokens: int = 0) -> RouteDecision:
+        """Pick an engine.
+
+        Tier preference is lexicographically ahead of cost: among
+        acceptable tiers (quality >= ``quality_floor``, links up) the
+        highest-quality tier with capacity that can meet the deadline
+        wins, and cost/load only break ties *within* that tier.  A pick
+        below the best acceptable tier is a *degradation* and the
+        decision records why (``cause``: saturated / deadline / link)
+        so the fleet can audit every downshift as a ``QualityEvent``.
+
+        ``deadline_slack`` (seconds until the request's deadline) feeds
+        the cost model: when the load-balanced pick in a tier would
+        miss the deadline, routing first turns latency-optimal within
+        the tier, then degrades to a cheaper tier that makes it; when
+        nothing does, the raw-fastest acceptable engine wins (least-bad
+        -- identical to the pre-tier behavior for one-tier fleets).
+
+        Re-placements of existing state pass ``src_tier`` +
+        ``reprefill_tokens``: a target on a DIFFERENT tier cannot
+        inject the donor's cache rows and must re-prefill the committed
+        stream, so its score is charged those prefill tokens -- the
+        deadline gate then certifies the move that will actually
+        happen, not the bit-exact one that won't."""
         gated = [h for h in handles
                  if h.name not in exclude and self.eligible(sensitivity, h)]
         if not gated:
             return RouteDecision(None, f"no attested-eligible engine for "
                                        f"{sensitivity} data")
-        # capacity: a free slot whose context budget holds the request
-        # (fleets mix max_len tiers; prefill+decode is a lower bound on
-        # the rows the request will occupy)
-        ready = [h for h in gated if h.engine.free_slots
-                 and h.engine.max_len >= prefill_tokens + decode_tokens]
-        if not ready:
-            return RouteDecision(None, "all eligible engines full "
-                                       "(slots or context budget)",
-                                 saturated=True)
-        scores = {h.name: self.score(h, cfg,
-                                     prefill_tokens=prefill_tokens,
-                                     decode_tokens=decode_tokens)
-                  for h in ready}
-        best = min(ready, key=lambda h: scores[h.name])
-        if deadline_slack is not None and scores[best.name] > deadline_slack:
+        floored = [h for h in gated
+                   if self._tier_of(h).quality >= quality_floor - 1e-12]
+        if not floored:
+            return RouteDecision(
+                None, f"no eligible tier at/above quality floor "
+                      f"{quality_floor:.2f}", cause="floor")
+        # the best tier the request could have had, link health aside:
+        # picks below it are degradations (a downed link on the best
+        # tier makes a lower-tier pick a downshift, not a free choice)
+        preferred_q = max(self._tier_of(h).quality for h in floored)
+        preferred = next(self._tier_of(h).name for h in floored
+                         if self._tier_of(h).quality == preferred_q)
+        acceptable = [h for h in floored
+                      if getattr(h, "reachable", True)]
+        if not acceptable:
+            return RouteDecision(None, "all eligible engines unreachable "
+                                       "(links down)", cause="link",
+                                 preferred=preferred)
+        # starved links: skip while an adequately-linked engine exists
+        # anywhere (availability beats the bandwidth preference)
+        well_linked = [h for h in acceptable if not self._starved(h)]
+        usable = well_linked or acceptable
+
+        # why was each better tier passed over?  (quality, kind) pairs;
+        # a degraded pick's cause is the kind of the best tier above it
+        skips: list[tuple[float, str]] = []
+        for h in floored:
+            if not getattr(h, "reachable", True) or \
+                    (well_linked and self._starved(h)):
+                skips.append((self._tier_of(h).quality, "link"))
+
+        by_quality: dict[float, list] = {}
+        for h in usable:
+            by_quality.setdefault(self._tier_of(h).quality, []).append(h)
+
+        def pick(best, scores, note, default_cause=""):
+            tier = self._tier_of(best)
+            degraded = tier.quality < preferred_q - 1e-12
+            cause = default_cause
+            above = [(q, kind) for q, kind in skips
+                     if q > tier.quality + 1e-12]
+            if above:
+                cause = max(above)[1]
+            return RouteDecision(
+                best.name, note, scores, tier=tier.name,
+                quality=tier.quality, preferred=preferred,
+                degraded=degraded, cause=cause if degraded else "")
+
+        # per-handle prefill cost: cross-tier targets pay the lossy
+        # re-prefill of the committed stream on top of any fresh prefill
+        def pf(h):
+            if src_tier and self._tier_of(h).name != src_tier:
+                return prefill_tokens + reprefill_tokens
+            return prefill_tokens
+
+        all_ready: list = []
+        causes: list[str] = []
+        for q in sorted(by_quality, reverse=True):
+            group = by_quality[q]
+            tname = self._tier_of(group[0]).name
+            # capacity: a free slot whose context budget holds the
+            # request (fleets mix max_len tiers; prefill+decode is a
+            # lower bound on the rows the request will occupy)
+            ready = [h for h in group if h.engine.free_slots
+                     and h.engine.max_len >= prefill_tokens + decode_tokens]
+            if not ready:
+                causes.append(f"{tname} saturated")
+                skips.append((q, "saturated"))
+                continue
+            all_ready.extend(ready)
+            scores = {h.name: self.score(h, cfg,
+                                         prefill_tokens=pf(h),
+                                         decode_tokens=decode_tokens)
+                      for h in ready}
+            best = min(ready, key=lambda h: scores[h.name])
+            if deadline_slack is None or scores[best.name] <= deadline_slack:
+                return pick(best, scores,
+                            f"min roofline+load cost "
+                            f"{scores[best.name]:.2e}s"
+                            + (f" on tier {tname}" if skips else ""))
             raw = {h.name: self.score(h, cfg,
-                                      prefill_tokens=prefill_tokens,
+                                      prefill_tokens=pf(h),
                                       decode_tokens=decode_tokens,
                                       loaded=False)
                    for h in ready}
-            best = min(ready, key=lambda h: raw[h.name])
-            return RouteDecision(best.name,
-                                 f"deadline-urgent: raw roofline "
-                                 f"{raw[best.name]:.2e}s (load-blind)",
-                                 raw)
-        return RouteDecision(best.name,
-                             f"min roofline+load cost "
-                             f"{scores[best.name]:.2e}s", scores)
+            fast = min(ready, key=lambda h: raw[h.name])
+            if raw[fast.name] <= deadline_slack:
+                return pick(fast, raw,
+                            f"deadline-urgent: raw roofline "
+                            f"{raw[fast.name]:.2e}s (load-blind)")
+            causes.append(f"{tname} misses deadline "
+                          f"(raw {raw[fast.name]:.2e}s > "
+                          f"{deadline_slack:.2e}s slack)")
+            skips.append((q, "deadline"))
+        if all_ready:
+            # no tier makes the deadline: least-bad, the raw-fastest
+            # acceptable engine of any tier
+            raw = {h.name: self.score(h, cfg,
+                                      prefill_tokens=pf(h),
+                                      decode_tokens=decode_tokens,
+                                      loaded=False)
+                   for h in all_ready}
+            fast = min(all_ready, key=lambda h: raw[h.name])
+            return pick(fast, raw,
+                        f"deadline-urgent: raw roofline "
+                        f"{raw[fast.name]:.2e}s (load-blind)",
+                        default_cause="deadline")
+        return RouteDecision(None, "all eligible engines full "
+                                   "(slots or context budget)",
+                             saturated=True,
+                             preferred=preferred,
+                             cause="; ".join(causes))

@@ -36,30 +36,49 @@ Verify modes
   * ``stepwise`` (default): teacher-forces the verify engine's own
     jitted decode program, so committed output is bit-exactly what a
     pure run on the verify engine would produce -- the acceptance-
-    equivalence contract the tests assert.
+    equivalence contract the tests assert.  Token equality assumes the
+    draft runs the SAME weights as the target.
   * ``wide``: scores the whole tail in ONE multi-query forward pass
     (``Engine.verify_slots``) -- the paper's one-wide-matmul fast path.
     Its matmul shapes compile differently from one-token decode, so
     greedy choices on knife-edge bf16 logits can deviate from a pure
     decode run (production speculative-decoding stacks share this
     numerics property).
+  * ``distribution``: the cross-model-tier mode.  A draft tier with
+    *distinct weights* (an int8 or small-model quality tier) can never
+    match the target token-for-token on purpose; instead the drafter
+    ships each proposal's full sampling distribution q alongside the
+    token ids (``Engine.step_probs``) and the verify engine runs the
+    standard speculative-sampling accept/reject (Leviathan et al.)
+    against its own distributions p: accept with probability
+    min(1, p/q), resample the cut position from max(p - q, 0).  The
+    committed stream is then distributed exactly as a pure run of the
+    verify engine -- for greedy requests (one-hot p, q) this reduces
+    to argmax agreement with the target correction spliced in.
+    Non-greedy requests may speculate in this mode (the rule is
+    temperature-correct); q rows dominate the round message bytes --
+    the bandwidth price of distribution-level acceptance.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
+import jax
 import jax.numpy as jnp
 import msgpack
+import numpy as np
 
+from repro import compression
 from repro.core.channel import AttestedSession
 from repro.core.validation import ValidationFramework
 from repro.fleet.balancer import wire_slot
 from repro.fleet.lifecycle import RequestState
 from repro.fleet.router import Router
 from repro.fleet.telemetry import MigrationRecord
+from repro.serving.engine import request_from_dict, request_to_dict
 
 
 @dataclass
@@ -104,6 +123,10 @@ class _SpecReq:
     req: object                      # the draft engine's Request object
     replica_slot: int                # slot on the verify engine
     committed: int = 0               # committed tokens (prefix of output)
+    # distribution mode: the drafter's sampling distribution for each
+    # uncommitted tail token (rows of (padded_vocab,) float32) -- the q
+    # of the accept/reject rule; cleared every verify round
+    qrows: list = field(default_factory=list)
 
 
 class SpeculativeTierController:
@@ -121,10 +144,18 @@ class SpeculativeTierController:
                  fleet=None, clock=None,
                  gamma: int = 4, drafter_temperature: float = 0.0,
                  drafter_top_k: int = 0, verify_mode: str = "stepwise",
-                 validators=None, compression_level: int = 3):
-        assert verify_mode in ("stepwise", "wide"), verify_mode
+                 validators=None, compression_level: int = 3,
+                 accept_seed: int = 0):
+        assert verify_mode in ("stepwise", "wide", "distribution"), \
+            verify_mode
         assert gamma >= 1, gamma
         assert draft.name != verify.name
+        if verify_mode == "distribution":
+            # q and p must live over one (padded) vocabulary: tiers may
+            # differ in depth/width but must share the tokenizer
+            assert draft.engine.cfg.padded_vocab \
+                == verify.engine.cfg.padded_vocab, \
+                "distribution verify needs a shared (padded) vocab"
         if verify_mode == "wide":
             eng = verify.engine
             rings_ok = all(
@@ -159,6 +190,10 @@ class SpeculativeTierController:
         self._spec: dict[str, _SpecReq] = {}     # rid -> speculative state
         self._local: set[str] = set()            # local-fallback rids
         self._dissolved = False
+        # acceptance/resample randomness for distribution verify: its
+        # own seeded stream (slot rngs drive the engines' sampling; the
+        # accept/reject coin must not perturb them)
+        self._accept_rng = jax.random.key(accept_seed)
 
     # -- wire helpers --------------------------------------------------------
     def _send(self, payload: bytes) -> bytes:
@@ -172,7 +207,9 @@ class SpeculativeTierController:
         """None when the request may speculate; else the fallback reason."""
         if self._dissolved or not self.verify.healthy:
             return "verify tier gone"
-        if req.temperature != 0.0:
+        if req.temperature != 0.0 and self.verify_mode != "distribution":
+            # token-equality acceptance cannot re-weight sampled drafts;
+            # the distribution mode's accept/reject rule can
             return "non-greedy request (drafts cannot be re-weighted)"
         if not self.router.eligible(req.sensitivity, self.verify):
             return (f"policy: {req.sensitivity} data not placeable on "
@@ -182,6 +219,8 @@ class SpeculativeTierController:
         need = len(req.prompt) + req.max_new_tokens
         if self.verify_mode == "wide":
             need += self.gamma
+        elif self.verify_mode == "distribution":
+            need += self.gamma + 1   # scoring advances one bonus row
         if need > self.verify.engine.max_len:
             return (f"request needs {need} rows > verify max_len "
                     f"{self.verify.engine.max_len}")
@@ -199,22 +238,42 @@ class SpeculativeTierController:
             return "local"
         # hand-off BEFORE the drafter policy override: the replica must
         # keep the request's own (greedy) sampling state
-        snap = self.draft.engine.extract_slot(req.slot, keep=True)
+        lossy = self.verify_mode == "distribution"
         clock0 = self.link.clock()
-        snap2, wire_bytes = wire_slot(
-            snap, self.verify.engine, link=self.link,
-            session=self.session, aad=self.measurement.encode(),
-            compression_level=self.compression_level)
+        if lossy:
+            # distinct weights: the draft engine's cache rows are
+            # untranslatable on the verify tier, so only the request
+            # (prompt + committed stream, empty at attach) travels and
+            # the verify engine re-prefills with its OWN weights -- the
+            # same lossy hand-off rule every cross-tier move obeys
+            wire = compression.compress(
+                msgpack.packb(request_to_dict(req)),
+                level=self.compression_level)
+            received = self._send(wire)
+            meta = msgpack.unpackb(compression.decompress(received))
+            replica = request_from_dict(meta)
+            replica.done, replica.slot = False, -1
+            placed = self.verify.engine.add_request(
+                replica, committed=list(req.output))
+            assert placed, "eligible() guaranteed a free replica slot"
+            wire_bytes, step = len(wire), 0
+        else:
+            snap = self.draft.engine.extract_slot(req.slot, keep=True)
+            snap2, wire_bytes = wire_slot(
+                snap, self.verify.engine, link=self.link,
+                session=self.session, aad=self.measurement.encode(),
+                compression_level=self.compression_level)
+            replica = self.verify.engine.inject_slot(snap2)
+            step = snap.step
         self.stats.handoff_wire_s += self.link.clock() - clock0
-        replica = self.verify.engine.inject_slot(snap2)
         self.stats.handoffs += 1
         self.stats.handoff_bytes += wire_bytes
         self.stats.requests += 1
         if self.telemetry is not None:
             self.telemetry.record_migration(MigrationRecord(
                 rid=req.rid, src=self.draft.name, dst=self.verify.name,
-                reason="speculative", step=snap.step,
-                wire_bytes=wire_bytes))
+                reason="speculative", step=step,
+                wire_bytes=wire_bytes, lossy=lossy))
         self._set_policy(self.draft.engine, req.slot,
                          self.drafter_temperature, self.drafter_top_k)
         self._spec[req.rid] = _SpecReq(req=req, replica_slot=replica.slot)
@@ -237,7 +296,17 @@ class SpeculativeTierController:
         if not self.draft.healthy or not self.draft.engine.requests:
             return emitted
         t0 = self._clock()
-        out = self.draft.engine.step(auto_retire=False)
+        if self.verify_mode == "distribution":
+            # the drafter must remember the law each proposal was drawn
+            # from: q rows ride to the verifier with the token ids
+            out, probs = self.draft.engine.step_probs(auto_retire=False)
+            for st in self._spec.values():
+                pending = len(st.req.output) - st.committed
+                if st.req.rid in out and len(st.qrows) < pending:
+                    st.qrows.append(
+                        np.asarray(probs[st.req.slot], np.float32))
+        else:
+            out = self.draft.engine.step(auto_retire=False)
         dt = self._clock() - t0
         # every non-speculative slot decodes plainly here: local
         # fallbacks, and requests the balancer re-placed onto the draft
@@ -274,8 +343,18 @@ class SpeculativeTierController:
                  for slot, rid in due.items()}
         # the tails travel to the verify tier as token ids (the caches
         # never move again after the hand-off)...
-        msg = msgpack.packb({"slots": [[s, list(map(int, t))]
-                                       for s, t in sorted(tails.items())]})
+        payload = {"slots": [[s, list(map(int, t))]
+                             for s, t in sorted(tails.items())]}
+        qstacks = None
+        if self.verify_mode == "distribution":
+            # ...with the drafter's proposal distributions riding along:
+            # the verifier's accept/reject rule needs q, and the wire
+            # honestly pays for it (float32 rows dominate the message)
+            qstacks = {slot: np.stack(self._spec[rid].qrows)
+                       for slot, rid in due.items()}
+            payload["q"] = {str(s): q.tobytes()
+                            for s, q in sorted(qstacks.items())}
+        msg = msgpack.packb(payload)
         self._send(msg)
         for rid in due.values():
             self._ticket(rid, RequestState.VERIFYING,
@@ -285,6 +364,10 @@ class SpeculativeTierController:
         if self.verify_mode == "wide":
             results = self.verify.engine.verify_slots(tails,
                                                       width=self.gamma)
+        elif self.verify_mode == "distribution":
+            self._accept_rng, round_key = jax.random.split(self._accept_rng)
+            results = self.verify.engine.verify_slots_distribution(
+                tails, qstacks, rng=round_key)
         else:
             results = self.verify.engine.verify_slots_stepwise(tails)
         dt = self._clock() - t0
@@ -311,6 +394,7 @@ class SpeculativeTierController:
                                                 n_acc, correction)
             req.output[:] = req.output[:st.committed] + commit
             st.committed += len(commit)
+            st.qrows = []            # next round drafts a fresh tail
             n_committed += len(commit)
             if commit:
                 emitted[rid] = commit[-1]
@@ -384,10 +468,33 @@ class SpeculativeTierController:
         if pending > 0 and req.slot in self.draft.engine.requests:
             self.draft.engine.rollback_slot(req.slot, pending, 0, None)
         req.output[:] = req.output[:st.committed]
+        st.qrows = []
         self._set_policy(self.draft.engine, req.slot,
                          req.temperature, req.top_k)
         self._local.add(rid)
         self.stats.local_fallbacks += 1
+
+    def release_for_park(self, rid: str) -> bool:
+        """Detach one speculative request so preemption can park its
+        slot (the ROADMAP lifecycle gap): roll the uncommitted draft
+        tail back to the committed prefix, restore the request's own
+        sampling policy, and dissolve the replica slot on the verify
+        engine.  The slot then packs like any plain victim -- only
+        committed tokens survive the park.  Returns False for requests
+        this pair never attached."""
+        st = self._spec.pop(rid, None)
+        if st is None:
+            return False
+        req = st.req
+        pending = len(req.output) - st.committed
+        if pending > 0 and req.slot in self.draft.engine.requests:
+            self.draft.engine.rollback_slot(req.slot, pending, 0, None)
+        req.output[:] = req.output[:st.committed]
+        self._set_policy(self.draft.engine, req.slot,
+                         req.temperature, req.top_k)
+        if st.replica_slot in self.verify.engine.requests:
+            self.verify.engine.retire(st.replica_slot)
+        return True
 
     def dissolve(self):
         """Planned pair dissolution (drain/rebalance of a tier-paired

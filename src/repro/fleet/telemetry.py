@@ -5,8 +5,11 @@ engine and aggregate, request-completion latency percentiles
 (p50/p95/p99), admission rejections (backpressure), queue-wait and
 preemption-park latencies, a full audit log of per-request live
 migrations (who moved, from where, to where, why), and the unified
-lifecycle event log (every typed ``RequestTicket`` transition, recorded
-by cluster, balancer and speculative controller alike).
+event log: every typed ``RequestTicket`` transition (recorded by
+cluster, balancer and speculative controller alike), every
+``ScaleEvent`` membership change, and every ``QualityEvent`` tier
+down-/upshift -- one chronological read explains a request's whole
+fidelity and placement history.
 
 All timing reads go through an injectable clock (any zero-arg float
 callable; ``channel.SimClock`` qualifies) so latency accounting and
@@ -46,6 +49,25 @@ class MigrationRecord:
     reason: str                      # "failover" | "drain" | "rebalance"
     step: int                        # donor step_count at extraction
     wire_bytes: int = 0
+    lossy: bool = False              # cross-tier re-prefill (no cache rows)
+
+
+@dataclass
+class QualityEvent:
+    """One quality-tier change of one request on the unified audit log:
+    a *downshift* (routed/migrated to a lower tier because the preferred
+    tier was saturated, would miss the deadline, or its link was down)
+    or an *upshift* (migrated back up once the better tier had room).
+    Interleaved with ``LifecycleEvent``/``ScaleEvent`` entries, so one
+    chronological read shows why a request's fidelity changed."""
+    rid: str
+    src_tier: str                    # tier left (or preferred-but-denied)
+    dst_tier: str
+    direction: str                   # "down" | "up"
+    reason: str
+    quality: float                   # dst tier quality in [0,1]
+    engine: str = ""                 # engine serving the request now
+    t: float = 0.0                   # fleet clock at the change
 
 
 def percentile(xs: list[float], q: float) -> float:
@@ -81,6 +103,8 @@ class FleetTelemetry:
         self.expired = 0
         self.scale_ups = 0
         self.scale_downs = 0
+        self.downshifts = 0
+        self.upshifts = 0
         self._t0 = self._clock()
 
     def bind_clock(self, clock):
@@ -139,6 +163,19 @@ class FleetTelemetry:
     def scale_events(self) -> list:
         return [ev for ev in self.events if hasattr(ev, "action")]
 
+    def record_quality(self, ev: QualityEvent):
+        """A quality-tier change -- same unified audit log, so
+        downshifts read in sequence with the lifecycle transitions and
+        scale events that caused them."""
+        self.events.append(ev)
+        if ev.direction == "down":
+            self.downshifts += 1
+        else:
+            self.upshifts += 1
+
+    def quality_events(self) -> list:
+        return [ev for ev in self.events if hasattr(ev, "direction")]
+
     def record_queue_wait(self, wait_s: float):
         self.queue_wait_s.append(wait_s)
 
@@ -196,6 +233,8 @@ class FleetTelemetry:
                 "expired": self.expired,
                 "scale_ups": self.scale_ups,
                 "scale_downs": self.scale_downs,
+                "downshifts": self.downshifts,
+                "upshifts": self.upshifts,
                 "queue_wait_p50": round(percentile(self.queue_wait_s, 50),
                                         4),
                 "preempt_wait_p50": round(

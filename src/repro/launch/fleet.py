@@ -4,6 +4,19 @@
         --arch llama-1.5b --tiny --requests 12 --max-new 16 \
         --engines edge:edge,cloud:cloud,mcu:mcu --fail cloud@5
 
+Quality tiers (cross-model fleet with graceful degradation): a full
+bf16 tier next to an int8 tier; saturate the full tier or cut its link
+and watch requests downshift (typed QualityEvents), never below their
+quality floor:
+
+    PYTHONPATH=src python -m repro.launch.fleet --tiny --requests 8 \
+        --tiers full:1.0:bf16,lite:0.6:int8 \
+        --engines big:cloud:128:full,small:edge:128:lite \
+        --slots 2 --quality-floor 0,0.8
+
+(add --link-down big@4 to cut the full tier's client link mid-run:
+floor-0 traffic downshifts to the lite tier, floored work waits)
+
 Speculative tier hand-off (draft on edge, verify on cloud):
 
     PYTHONPATH=src python -m repro.launch.fleet --tiny --requests 8 \
@@ -29,12 +42,26 @@ slot migrating or parking via the migration path -- once idle:
 Flags
   --arch NAME            model config (default llama-1.5b)
   --tiny                 shrink the config (CPU-friendly smoke scale)
-  --engines SPEC         comma list of name:profile[:max_len] replicas,
-                         where profile is edge | cloud | mcu (mcu is the
-                         unattested endpoint -- the router will keep
-                         personal/confidential work off it); max_len
-                         overrides --max-len per engine (heterogeneous
-                         context budgets migrate via repack_slot)
+  --engines SPEC         comma list of name:profile[:max_len][:tier]
+                         replicas, where profile is edge | cloud | mcu
+                         (mcu is the unattested endpoint -- the router
+                         will keep personal/confidential work off it);
+                         max_len overrides --max-len per engine
+                         (heterogeneous context budgets migrate via
+                         repack_slot); tier names a --tiers entry
+  --tiers SPEC           comma list of name:quality[:kind] quality
+                         tiers (kind: bf16 = fleet weights, int8 =
+                         quantize/dequantize the fleet weights, small =
+                         a narrower model with fresh weights).  Engines
+                         of different tiers run distinct weights, so
+                         cross-tier moves re-prefill the committed
+                         stream (lossy) instead of shipping cache rows
+  --quality-floor LIST   comma list of floors in [0,1] cycled across
+                         the synthetic requests: a request is never
+                         served below its floor (it queues instead)
+  --link-down NAME@STEP  cut engine NAME's client link at fleet step
+                         STEP: the router degrades its traffic to
+                         reachable tiers (QualityEvents on the log)
   --slots N              request slots per engine (default 4)
   --max-len N            per-slot context budget (default 128)
   --requests N           synthetic mixed-sensitivity request count
@@ -84,7 +111,10 @@ Flags
                          output stays the target's greedy choice)
   --drafter-top-k N      draft-tier top-k (default 0 = full vocab)
   --verify-mode MODE     stepwise (bit-exact, default) | wide (one
-                         multi-query pass; see fleet.speculative docs)
+                         multi-query pass) | distribution (standard
+                         speculative-sampling accept/reject: required
+                         when draft and verify engines are different
+                         quality tiers; see fleet.speculative docs)
   --seed N               rng seed for prompts and engines
 """
 
@@ -114,12 +144,55 @@ def parse_tiers(spec: str | None) -> dict[str, str]:
     return pairs
 
 
+def parse_quality_tiers(spec: str | None):
+    """--tiers full:1.0:bf16,lite:0.6:int8 -> {name: QualityTier}."""
+    from repro.core.replication import QualityTier
+    tiers = {}
+    for item in (spec or "").split(","):
+        if not item:
+            continue
+        parts = item.split(":")
+        name = parts[0]
+        quality = float(parts[1]) if len(parts) > 1 else 1.0
+        kind = parts[2] if len(parts) > 2 else "bf16"
+        assert kind in ("bf16", "int8", "small"), kind
+        tiers[name] = QualityTier(name, quality, kind)
+    return tiers
+
+
+def tier_model(cfg, params, tier, seed: int):
+    """The (cfg, params) a tier's engines run: the fleet weights
+    (bf16), an int8 round-trip of them, or a narrower model with its
+    own fresh weights (same tokenizer)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.init import init_params
+    from repro.optim.compression import dequantize_int8, quantize_int8
+    if tier.kind == "int8":
+        def f(w):
+            if hasattr(w, "dtype") and jnp.issubdtype(w.dtype,
+                                                      jnp.floating):
+                q, s = quantize_int8(w)
+                return dequantize_int8(q, s).astype(w.dtype)
+            return w
+        return cfg, jax.tree.map(f, params)
+    if tier.kind == "small":
+        small = cfg.replace(name=cfg.name + f"-{tier.name}",
+                            blocks=cfg.blocks[:max(len(cfg.blocks) // 2,
+                                                   1)])
+        return small, init_params(small, jax.random.key(seed))
+    return cfg, params
+
+
 def main():
     ap = argparse.ArgumentParser(
         description="serve a request stream over a heterogeneous fleet")
     ap.add_argument("--arch", default="llama-1.5b")
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--engines", default="edge:edge,cloud:cloud,mcu:mcu")
+    ap.add_argument("--tiers", default=None, metavar="NAME:Q[:KIND]")
+    ap.add_argument("--quality-floor", default="0", metavar="LIST")
+    ap.add_argument("--link-down", default=None, metavar="NAME@STEP")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=12)
@@ -144,7 +217,7 @@ def main():
     ap.add_argument("--drafter-temperature", type=float, default=0.0)
     ap.add_argument("--drafter-top-k", type=int, default=0)
     ap.add_argument("--verify-mode", default="stepwise",
-                    choices=["stepwise", "wide"])
+                    choices=["stepwise", "wide", "distribution"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -166,6 +239,12 @@ def main():
         cfg = make_tiny(cfg)
     params = init_params(cfg, jax.random.key(args.seed))
 
+    quality_tiers = parse_quality_tiers(args.tiers)
+    tier_models = {}                  # tier name -> (cfg, params)
+    for i, (tname, qt) in enumerate(quality_tiers.items()):
+        tier_models[tname] = tier_model(cfg, params, qt,
+                                        args.seed + 1000 + i)
+
     handles = []
     for i, spec in enumerate(args.engines.split(",")):
         parts = spec.split(":")
@@ -174,10 +253,19 @@ def main():
             ap.error(f"unknown profile {prof!r} in --engines {spec!r} "
                      f"(choose from {sorted(PROFILES)})")
         profile = getattr(daemon, PROFILES[prof])
-        max_len = int(parts[2]) if len(parts) > 2 else args.max_len
-        eng = Engine(cfg, params, slots=args.slots, max_len=max_len,
+        max_len = int(parts[2]) if len(parts) > 2 and parts[2] \
+            else args.max_len
+        kw = {}
+        ecfg, eparams = cfg, params
+        if len(parts) > 3:
+            if parts[3] not in quality_tiers:
+                ap.error(f"--engines {spec!r} names tier {parts[3]!r} "
+                         f"missing from --tiers")
+            kw["tier"] = quality_tiers[parts[3]]
+            ecfg, eparams = tier_models[parts[3]]
+        eng = Engine(ecfg, eparams, slots=args.slots, max_len=max_len,
                      seed=args.seed + i)
-        handles.append(EngineHandle(name, eng, profile))
+        handles.append(EngineHandle(name, eng, profile, **kw))
     spec_tiers = parse_tiers(args.spec_tiers)
     for dname, vname in spec_tiers.items():
         if dname not in {h.name for h in handles} or \
@@ -213,17 +301,20 @@ def main():
     rng = np.random.default_rng(args.seed)
     sens = ["public", "personal", "confidential"]
     prios = [int(p) for p in args.priorities.split(",")]
+    floors = [float(f) for f in args.quality_floor.split(",")]
     pending = [RequestSpec(rid=f"r{i}",
                            prompt=rng.integers(5, cfg.vocab_size, 8),
                            max_new_tokens=args.max_new,
                            temperature=args.temperature if i % 2 else 0.0,
                            top_k=16 if i % 2 else 0,
                            sensitivity=sens[i % 3],
-                           priority=prios[i % len(prios)])
+                           priority=prios[i % len(prios)],
+                           quality_floor=floors[i % len(floors)])
                for i in range(args.requests)]
 
     fail = parse_event(args.fail)
     drain = parse_event(args.drain)
+    link_down = parse_event(args.link_down)
     tickets = {}
     step = 0
     while pending or fleet.queue or fleet.orphans or fleet.inflight:
@@ -246,6 +337,10 @@ def main():
         if drain and step == drain[1]:
             print(f"-- draining {drain[0]} at step {step} --")
             fleet.drain(drain[0])
+        if link_down and step == link_down[1]:
+            from repro.core.channel import NetworkCondition
+            print(f"-- link to {link_down[0]} down at step {step} --")
+            fleet.set_link(link_down[0], NetworkCondition(up=False))
         qlen, orph = len(fleet.queue), len(fleet.orphans)
         fleet.step()
         step += 1
@@ -259,7 +354,8 @@ def main():
                     list(fleet.handles.values()), cfg,
                     sensitivity=req.sensitivity,
                     prefill_tokens=len(req.prompt),
-                    decode_tokens=req.max_new_tokens)
+                    decode_tokens=req.max_new_tokens,
+                    quality_floor=req.quality_floor)
                 print(f"STALLED {req.rid}[{req.sensitivity}]: {dec.reason}")
             from repro.fleet import peek_slot_meta
             for src, blob in fleet.orphans:
@@ -289,6 +385,10 @@ def main():
     for ev in fleet.telemetry.scale_events():
         print(f"scale {ev.action} {ev.engine} at t={ev.t:.3f} "
               f"(pool {ev.engines}): {ev.reason}")
+    for ev in fleet.telemetry.quality_events():
+        print(f"quality {ev.direction}shift {ev.rid} "
+              f"{ev.src_tier}->{ev.dst_tier} (q={ev.quality:.2f}): "
+              f"{ev.reason}")
     print(json.dumps(fleet.telemetry.summary(), indent=1))
     for dname, spec in fleet.spec_controllers.items():
         print(f"speculative tier {dname}->{spec.verify.name}: "

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.model import forward, make_cache, vocab_mask_logits
-from repro.serving.sampling import sample
+from repro.serving.sampling import policy_probs, sample
 
 
 @jax.tree_util.register_dataclass
@@ -55,6 +55,7 @@ class Request:
     sensitivity: str = "public"      # public | personal | confidential
     priority: int = 0                # higher dispatches first / preempts
     deadline: Optional[float] = None  # absolute fleet-clock expiry
+    quality_floor: float = 0.0       # min tier quality this request accepts
     done: bool = False
     output: list = field(default_factory=list)
     slot: int = -1
@@ -67,7 +68,8 @@ def request_to_dict(req: Request) -> dict:
         "max_new_tokens": req.max_new_tokens,
         "temperature": req.temperature, "top_k": req.top_k,
         "sensitivity": req.sensitivity, "priority": req.priority,
-        "deadline": req.deadline, "output": list(req.output),
+        "deadline": req.deadline, "quality_floor": req.quality_floor,
+        "output": list(req.output),
         "slot": req.slot, "done": req.done,
     }
 
@@ -78,7 +80,8 @@ def request_from_dict(d: dict) -> Request:
                   temperature=d["temperature"], top_k=d["top_k"],
                   sensitivity=d["sensitivity"],
                   priority=d.get("priority", 0),
-                  deadline=d.get("deadline"))
+                  deadline=d.get("deadline"),
+                  quality_floor=d.get("quality_floor", 0.0))
     req.output = list(d["output"])
     req.slot = d["slot"]
     req.done = d["done"]
@@ -141,6 +144,7 @@ class Engine:
                                    static_argnames=("slot", "plen"))
         self._verify_fn = jax.jit(partial(_verify_window, cfg=cfg,
                                           mesh=mesh, rules=rules))
+        self._probs_fn = None        # compiled lazily (distribution verify)
 
     # -- state ------------------------------------------------------------
     def _fresh_state(self, seed: int) -> EngineState:
@@ -163,20 +167,35 @@ class Engine:
     def free_slots(self) -> list[int]:
         return [i for i in range(self.slots) if i not in self.requests]
 
-    def add_request(self, req: Request) -> bool:
+    def add_request(self, req: Request, *,
+                    committed: list[int] | None = None) -> bool:
+        """Attach a request to a free slot and prefill it.
+
+        ``committed`` is the lossy cross-tier restore path: a request
+        migrating between tiers with *distinct weights* cannot carry its
+        cache rows (they were computed by a different model), so the
+        destination re-prefills prompt + the committed token stream and
+        decode continues from there -- token history preserved, device
+        state rebuilt.  The committed tokens become the request's output
+        prefix."""
         free = self.free_slots
         if not free:
             return False
         slot = free[0]
         req.slot = slot
         self.requests[slot] = req
-        plen = len(req.prompt)
-        assert plen + req.max_new_tokens <= self.max_len
+        prefix = np.asarray(req.prompt, np.int32)
+        if committed:
+            req.output[:] = list(committed)
+            prefix = np.concatenate(
+                [prefix, np.asarray(committed, np.int32)])
+        plen = len(prefix)
+        assert len(req.prompt) + req.max_new_tokens <= self.max_len
         self.state = dataclasses.replace(
             self.state,
             temperature=self.state.temperature.at[slot].set(req.temperature),
             top_k=self.state.top_k.at[slot].set(req.top_k))
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        prompt = jnp.asarray(prefix, jnp.int32)[None]
         self.state = self._prefill_fn(self.params, self.state, prompt,
                                       slot=slot, plen=plen)
         return True
@@ -203,6 +222,47 @@ class Engine:
                 req.done = True
                 self.retire(slot)
         return emitted
+
+    def step_probs(self, *, auto_retire: bool = True) \
+            -> tuple[dict[str, int], Optional[np.ndarray]]:
+        """One batched decode step that also returns, per slot, the full
+        sampling distribution the emitted token was drawn from
+        (``(B, padded_vocab)`` float32; one-hot argmax for greedy
+        slots).
+
+        This is the draft side of distribution-level speculative
+        acceptance: a draft tier with *distinct weights* must ship its
+        proposal distributions q so the verifier can run the standard
+        accept/reject rule against the target's p -- token equality is
+        meaningless across weights.  The probs program shares the decode
+        program's structure but compiles separately, so its knife-edge
+        greedy picks may differ from ``step()``'s (the usual
+        one-geometry-one-program reproducibility rule applies *within*
+        either program, not across them)."""
+        if not self.requests:
+            return {}, None
+        self.state, toks, probs = self._decode_probs(self.params,
+                                                     self.state)
+        toks = np.asarray(toks)
+        emitted = {}
+        for slot, req in list(self.requests.items()):
+            if req.done:
+                continue
+            t = int(toks[slot])
+            req.output.append(t)
+            emitted[req.rid] = t
+            if auto_retire and len(req.output) >= req.max_new_tokens:
+                req.done = True
+                self.retire(slot)
+        return emitted, np.asarray(probs)
+
+    @property
+    def _decode_probs(self):
+        if self._probs_fn is None:
+            self._probs_fn = jax.jit(partial(
+                _decode_step_probs, cfg=self.cfg, mesh=self.mesh,
+                rules=self.rules))
+        return self._probs_fn
 
     def retire(self, slot: int):
         self.requests.pop(slot, None)
@@ -382,6 +442,99 @@ class Engine:
         self.state = dataclasses.replace(self.state, active=saved_active)
         return results
 
+    def verify_slots_distribution(self, drafts: dict[int, list[int]],
+                                  draft_probs: dict[int, np.ndarray], *,
+                                  rng) -> dict[int, tuple[int, int]]:
+        """Distribution-level verification: standard speculative-sampling
+        accept/reject (Leviathan et al.) of drafted tails against this
+        engine's own next-token distributions.
+
+        The token-equality modes (``verify_slots`` / ``_stepwise``)
+        assume draft and target share weights, so an accepted token IS
+        the target's token.  A draft tier with *distinct* weights (an
+        int8 or small-model quality tier) can never win that test on
+        purpose; the correct contract is distributional: accept draft
+        token ``d_i`` with probability ``min(1, p(d_i)/q(d_i))`` and
+        resample the cut position from ``max(p - q, 0)`` -- the
+        committed stream is then distributed exactly as a pure run of
+        THIS engine, whatever the drafter proposed (greedy requests
+        reduce to argmax agreement: one-hot p and q).
+
+        ``draft_probs[slot]`` is the ``(len(tail), padded_vocab)`` stack
+        of proposal distributions captured by the drafter's
+        ``step_probs``; ``rng`` drives acceptance + resampling (split
+        per slot).  Scoring teacher-forces the drafted tokens through
+        the engine's probs program (each step's sampled token is
+        overwritten by the draft token before it is consumed), then the
+        slot rewinds to its committed prefix exactly like the other
+        verify modes.  A fully-accepted window commits only the drafts
+        -- the bonus token is refused for the same KV-gap reason as
+        ``_verify_window``.  Returns {slot: (n_accepted,
+        commit_token | None)}."""
+        from repro.kernels import ops as kops
+        assert drafts, "nothing to verify"
+        saved_active = self.state.active
+        burst = np.zeros((self.slots,), bool)
+        for slot, toks in drafts.items():
+            assert slot in self.requests, f"slot {slot} not in use"
+            assert toks, f"empty draft tail for slot {slot}"
+            assert len(draft_probs[slot]) == len(toks), slot
+            assert int(self.state.positions[slot]) + len(toks) + 1 \
+                <= self.max_len, \
+                f"scoring window overruns max_len at slot {slot}"
+            burst[slot] = True
+        self.state = dataclasses.replace(
+            self.state, active=jnp.asarray(burst) & saved_active)
+        p_rows: dict[int, list] = {slot: [] for slot in drafts}
+        live = dict(drafts)
+        step = 0
+        while live:
+            self.state, _, probs = self._decode_probs(self.params,
+                                                      self.state)
+            probs = np.asarray(probs)
+            for slot in list(live):
+                p_rows[slot].append(probs[slot])
+                if step < len(live[slot]):
+                    # teacher-force: the NEXT step must consume the
+                    # draft token, not the engine's own sample
+                    self._force_slot_token(slot, live[slot][step])
+                else:                 # bonus row collected: done
+                    del live[slot]
+                    self.state = dataclasses.replace(
+                        self.state,
+                        active=self.state.active.at[slot].set(False))
+            step += 1
+        self.state = dataclasses.replace(self.state, active=saved_active)
+
+        results: dict[int, tuple[int, int | None]] = {}
+        for slot in sorted(drafts):
+            tail = drafts[slot]
+            q = jnp.asarray(np.asarray(draft_probs[slot], np.float32))
+            p = jnp.asarray(np.stack(p_rows[slot]).astype(np.float32))
+            n_acc, nxt = kops.spec_verify(
+                jnp.asarray(tail, jnp.int32), q, p,
+                jax.random.fold_in(rng, slot))
+            n_acc = int(n_acc)
+            if n_acc >= len(tail):
+                # fully accepted: rewind past the scored bonus row only
+                # (no bonus token -- see _verify_window's KV-gap note)
+                self.rollback_slot(slot, 1, 0, None)
+                results[slot] = (len(tail), None)
+            else:
+                self.rollback_slot(slot, len(tail) + 1, n_acc, int(nxt))
+                results[slot] = (n_acc, int(nxt))
+        return results
+
+    def _force_slot_token(self, slot: int, token: int):
+        """Overwrite the token a decode step just emitted for ``slot``
+        (teacher-forcing: the next step consumes ``token`` instead)."""
+        s = self.state
+        t = jnp.int32(token)
+        self.state = dataclasses.replace(
+            s,
+            tokens=s.tokens.at[slot, s.positions[slot] - 1].set(t),
+            last_token=s.last_token.at[slot].set(t))
+
     def rollback_slot(self, slot: int, drafted: int, accepted: int,
                       commit_token: int | None = None):
         """Rewind a slot's speculative tail to the verified prefix.
@@ -483,6 +636,42 @@ def _decode_step(params, state: EngineState, *, cfg, mesh, rules):
         rng=rng,
         step_count=state.step_count + 1,
     ), toks
+
+
+def _decode_step_probs(params, state: EngineState, *, cfg, mesh, rules):
+    """``_decode_step`` that additionally returns each slot's full
+    sampling distribution (B, padded_vocab) -- the law the emitted token
+    was drawn from (one-hot argmax for greedy slots).  The speculative
+    distribution-acceptance path needs these: the drafter ships its
+    proposal distributions q, the verifier scores target distributions
+    p, and the accept/reject rule runs on the p/q ratio."""
+    pos = state.positions[:, None]
+    logits, caches, _ = forward(
+        params, {"tokens": state.last_token[:, None]}, cfg=cfg,
+        mode="decode", caches=state.caches, positions=pos,
+        mesh=mesh, rules=rules)
+    probs = policy_probs(logits[:, 0], cfg, temperature=state.temperature,
+                         top_k=state.top_k)
+    toks, rng = sample(logits[:, 0], state.rng, cfg,
+                       temperature=state.temperature, top_k=state.top_k)
+    toks = jnp.where(state.active, toks, 0)
+    caches = jax.tree.map(
+        lambda new, old: jnp.where(
+            _bcast(state.active, new.ndim, new.shape), new, old),
+        caches, state.caches)
+    tokens = jax.vmap(
+        lambda row, t, p: jax.lax.dynamic_update_index_in_dim(row, t, p, 0)
+    )(state.tokens, toks, state.positions)
+    return dataclasses.replace(
+        state,
+        caches=caches,
+        tokens=jnp.where(state.active[:, None], tokens, state.tokens),
+        positions=jnp.where(state.active, state.positions + 1,
+                            state.positions),
+        last_token=jnp.where(state.active, toks, state.last_token),
+        rng=rng,
+        step_count=state.step_count + 1,
+    ), toks, probs
 
 
 def _verify_window(params, state: EngineState, drafts, counts, verify,

@@ -60,6 +60,32 @@ def sample(logits, rng, cfg: ModelConfig, *, temperature=0.0, top_k=0):
     return jax.vmap(one)(logits, rng, temp, karr)
 
 
+def policy_probs(logits, cfg: ModelConfig, *, temperature, top_k):
+    """The full sampling distribution ``sample`` draws from, per slot:
+    (B, V_pad) float32.  Greedy slots (temperature 0) get a one-hot at
+    the argmax -- the temperature->0 limit -- so distribution-level
+    speculative acceptance (min(1, p/q) on one-hot p and q) reduces
+    exactly to argmax agreement for greedy requests.  Mirrors the
+    per-slot path of ``sample``: temperature scaling, then dynamic
+    top-k masking, then softmax."""
+    logits = vocab_mask_logits(logits, cfg).astype(jnp.float32)
+    B = logits.shape[0]
+    temp = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (B,))
+    karr = jnp.broadcast_to(jnp.asarray(top_k, jnp.int32), (B,))
+
+    def one(lg, t, k):
+        greedy = jax.nn.one_hot(jnp.argmax(lg, -1), lg.shape[-1],
+                                dtype=jnp.float32)
+        l = lg / jnp.maximum(t, 1e-6)
+        ordered = jnp.sort(l)[::-1]
+        kth = ordered[jnp.clip(k - 1, 0, l.shape[-1] - 1)]
+        l = jnp.where((k > 0) & (l < kth), -1e30, l)
+        p = jax.nn.softmax(l, -1)
+        return jnp.where(t > 0.0, p, greedy)
+
+    return jax.vmap(one)(logits, temp, karr)
+
+
 def token_logprobs(logits, tokens, cfg: ModelConfig):
     """Log-prob of given tokens under (masked) logits.  (B,V),(B,)->(B,)."""
     logits = vocab_mask_logits(logits, cfg).astype(jnp.float32)
