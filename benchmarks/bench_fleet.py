@@ -1,13 +1,16 @@
 """Fleet orchestration overheads: scaling vs a single engine, the cost
 of shadow checkpoints, per-slot live-migration latency, the lifecycle
 API under a mixed-priority workload (preemption-park latency and
-completion percentiles by priority class), and elastic autoscaling
+completion percentiles by priority class), elastic autoscaling
 (scale-up reaction latency, post-scale queue-wait percentiles, and
-per-priority completion with autoscaling on vs off).
+per-priority completion with autoscaling on vs off), and the cost of
+distributed tracing (tokens/s with the tracer on vs off, plus the
+exported Chrome trace artifact).
 
     PYTHONPATH=src python benchmarks/bench_fleet.py
 """
 
+import os
 import time
 
 import numpy as np
@@ -87,6 +90,7 @@ def main():
     bench_priority_workload(cfg, params)
     bench_autoscale(cfg, params)
     bench_quality(cfg, params)
+    bench_tracing_overhead(cfg, params)
     write_bench_json("fleet")
 
 
@@ -281,6 +285,50 @@ def bench_quality(cfg, params):
          f"% completed across a {outage_steps}-step link outage at "
          f"step {cut_at} (lossy migrations: "
          f"{sum(1 for m in tel.migrations if m.lossy)})")
+
+
+def bench_tracing_overhead(cfg, params):
+    """The tracer's tax on serving throughput: the identical two-engine
+    workload (shadow sync on, so the step loop is busy) runs with
+    tracing off then on, timing only the second, warm batch of each
+    fleet so jit compiles don't pollute the comparison.  The traced
+    fleet also exports ``TRACE_fleet.json`` next to the bench artifact
+    -- CI uploads both, so every smoke run leaves an openable
+    per-request timeline behind."""
+    from repro.serving.engine import Request
+
+    def run(traced: bool):
+        rng = np.random.default_rng(0)
+        fleet = mk_fleet(cfg, params, 2, sync_every=1)
+        if not traced:
+            fleet.tracer = None
+            fleet.telemetry.tracer = None
+
+        def batch(tag):
+            return [Request(f"{tag}{i}",
+                            rng.integers(5, cfg.vocab_size, 6),
+                            max_new_tokens=MAX_NEW)
+                    for i in range(REQS)]
+
+        fleet.run(batch("warm"))     # compiles + warms both engines
+        t0 = time.perf_counter()
+        fleet.run(batch("hot"))
+        dt = time.perf_counter() - t0
+        return fleet, REQS * MAX_NEW / dt
+
+    _, tps_off = run(False)
+    fleet, tps_on = run(True)
+    overhead_pct = 100.0 * (1.0 - tps_on / tps_off)
+    emit("fleet/tracing_off_tokens_per_s", tps_off)
+    emit("fleet/tracing_on_tokens_per_s", tps_on)
+    emit("fleet/tracing_overhead_pct", overhead_pct,
+         f"{len(fleet.tracer.spans)} spans recorded")
+
+    fleet.tracer.close_open(reason="bench complete")
+    out = os.path.join(os.environ.get("BENCH_OUT_DIR", os.getcwd()),
+                       "TRACE_fleet.json")
+    fleet.tracer.export_chrome(out)
+    print(f"wrote {out}")
 
 
 if __name__ == "__main__":

@@ -191,11 +191,16 @@ def pack_slot(snap: SlotSnapshot) -> bytes:
     ``_pack_workspace``: the fixed-size array tree first, variable-length
     request metadata after it, so paged deltas of successive shadow
     checkpoints stay small."""
+    meta = {"request": snap.request,
+            "config_name": snap.config_name,
+            "step": snap.step}
+    if snap.trace is not None:
+        # tracer wire context: the donor-opened migrate-hop span travels
+        # with the state so the destination closes that exact span
+        meta["trace"] = snap.trace
     return msgpack.packb({
         "arrays": serialize_tree(snap.arrays),
-        "meta": {"request": snap.request,
-                 "config_name": snap.config_name,
-                 "step": snap.step},
+        "meta": meta,
     })
 
 
@@ -272,7 +277,8 @@ def repack_slot(snap: SlotSnapshot, target_max_len: int) -> SlotSnapshot:
         top_k=a.top_k,
     )
     return SlotSnapshot(arrays=arrays, request=snap.request,
-                        config_name=snap.config_name, step=snap.step)
+                        config_name=snap.config_name, step=snap.step,
+                        trace=snap.trace)
 
 
 def unpack_slot(blob: bytes, like_arrays) -> SlotSnapshot:
@@ -285,7 +291,8 @@ def unpack_slot(blob: bytes, like_arrays) -> SlotSnapshot:
     meta = obj["meta"]
     arrays = place_tree(deserialize_tree(obj["arrays"], like_arrays))
     return SlotSnapshot(arrays=arrays, request=meta["request"],
-                        config_name=meta["config_name"], step=meta["step"])
+                        config_name=meta["config_name"], step=meta["step"],
+                        trace=meta.get("trace"))
 
 
 def _unpack_workspace(blob: bytes, like_state) -> AgentWorkspace:

@@ -13,8 +13,15 @@ router      -- sensitivity/attestation gates composed with roofline cost,
 balancer    -- shadow checkpoints, failure-driven re-placement, planned
                live migration of individual in-flight slots
 telemetry   -- per-engine + fleet tokens/s, latency percentiles,
-               queue-wait/preemption latencies, migration audit log, and
-               the unified lifecycle event log
+               queue-wait/preemption latencies, migration audit log,
+               per-tier SLO roll-ups, and the unified lifecycle event
+               log (stored in the tracing metrics registry)
+tracing     -- distributed tracing + metrics: per-request span trees
+               derived from the audit log (trace context rides the
+               pack_slot wire format across migration hops), jit
+               compile profiling attributed to spawn spans, Chrome
+               trace-event and Prometheus text exporters, and the
+               bounded windowed-histogram MetricsRegistry
 speculative -- draft/verify tier pairs: draft on an edge engine, slot
                hand-off over the attested wire (heterogeneous max_len
                via migration.repack_slot), teacher-forced verification
@@ -53,15 +60,18 @@ from repro.fleet.speculative import SpecTierStats, SpeculativeTierController
 from repro.fleet.telemetry import (EngineStats, FleetTelemetry,
                                    MigrationRecord, QualityEvent,
                                    percentile)
+from repro.fleet.tracing import (Counter, Gauge, MetricsRegistry, Span,
+                                 Tracer, WindowedHistogram)
 
 __all__ = [
-    "Autoscaler", "DeadlineExpired", "EngineHandle", "EngineStats",
-    "EngineTemplate", "FULL_TIER", "FleetController", "FleetTelemetry",
-    "LifecycleError", "LifecycleEvent", "MigrationRecord",
-    "QualityEvent", "QualityTier", "Rebalancer", "RequestCancelled",
-    "RequestFailed", "RequestSpec", "RequestState", "RequestTicket",
-    "RouteDecision", "Router", "ScaleEvent", "ScalePolicy",
-    "ScaleSignals", "SpecTierStats", "SpeculativeTierController",
-    "TERMINAL_STATES", "WorkItem", "WorkQueue", "effective_priority",
+    "Autoscaler", "Counter", "DeadlineExpired", "EngineHandle",
+    "EngineStats", "EngineTemplate", "FULL_TIER", "FleetController",
+    "FleetTelemetry", "Gauge", "LifecycleError", "LifecycleEvent",
+    "MetricsRegistry", "MigrationRecord", "QualityEvent", "QualityTier",
+    "Rebalancer", "RequestCancelled", "RequestFailed", "RequestSpec",
+    "RequestState", "RequestTicket", "RouteDecision", "Router",
+    "ScaleEvent", "ScalePolicy", "ScaleSignals", "Span", "SpecTierStats",
+    "SpeculativeTierController", "TERMINAL_STATES", "Tracer",
+    "WindowedHistogram", "WorkItem", "WorkQueue", "effective_priority",
     "peek_slot_meta", "percentile", "work_order",
 ]

@@ -30,8 +30,9 @@ displaced.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any, ClassVar, Optional
 
 from repro.core.daemon import DeviceProfile
 from repro.core.replication import FULL_TIER, QualityTier
@@ -121,15 +122,16 @@ class ScaleSignals:
 
 @dataclass
 class ScaleEvent:
-    """One fleet membership change on the unified audit log."""
+    """One fleet membership change on the unified audit log.  The
+    ``kind`` discriminator is how the mixed log is filtered -- no more
+    dummy ``rid`` field to survive per-request scans."""
+    kind: ClassVar[str] = "scale"    # audit-log discriminator
     action: str                      # "spawn" | "retire"
     engine: str
     reason: str
     t: float                         # fleet clock at the decision
     engines: int = 0                 # routable pool size AFTER the event
     signals: Optional[ScaleSignals] = None
-    rid: str = ""                    # keeps per-rid filters on the mixed
-    #                                  event log trivially correct
 
 
 class Autoscaler:
@@ -271,14 +273,24 @@ class Autoscaler:
         while f"{template.name}{self._n_spawned}" in fleet.handles:
             self._n_spawned += 1
         name = f"{template.name}{self._n_spawned}"
+        t_build = time.perf_counter()
         eng = Engine(cfg, params, slots=template.slots,
                      max_len=template.max_len,
                      seed=template.seed + self._n_spawned)
+        build_s = time.perf_counter() - t_build
         self._n_spawned += 1
         fleet.add_engine(EngineHandle(name, eng, template.profile,
                                       tier=template.tier))
         self.spawned.append(name)
-        return self._record(fleet, "spawn", name, reason, signals)
+        ev = self._record(fleet, "spawn", name, reason, signals)
+        # the spawn span (opened by the ScaleEvent above, closed by the
+        # engine's first productive step = time-to-useful) carries the
+        # host-side construction cost; jit program builds attach as
+        # child spans via the engine's profile hook
+        if fleet.telemetry.tracer is not None:
+            fleet.telemetry.tracer.annotate_spawn(
+                name, construct_s=round(build_s, 6))
+        return ev
 
     def scale_down(self, fleet, *, reason: str = "manual",
                    signals: Optional[ScaleSignals] = None) \

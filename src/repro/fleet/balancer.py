@@ -179,6 +179,10 @@ class Rebalancer:
                                    lossy=True)
         snap = unpack_slot(blob, target.engine.slot_like())
         snap = repack_slot(snap, target.engine.max_len)
+        if fleet.tracer is not None:
+            # the blob carried the donor-opened hop span: close that
+            # exact span here (the arrival transition below ends it)
+            fleet.tracer.bind_hop(snap.trace, dst=target.name)
         req = target.engine.inject_slot(snap)
         fleet.reassign(req, target.name)
         fleet.ticket_transition(req.rid, RequestState.DECODING,
@@ -271,6 +275,9 @@ class Rebalancer:
         assert self.same_tier(src, dst), \
             "cross-tier moves must use lossy_migrate (distinct weights)"
         snap = src.engine.extract_slot(slot)
+        if fleet.tracer is not None:
+            # hop span opens on the donor and rides the wire format
+            snap.trace = fleet.tracer.wire_context(snap.rid, src=src.name)
         self.shadow.get(src.name, {}).pop(snap.rid, None)
         fleet.ticket_transition(snap.rid, RequestState.MIGRATING,
                                 reason=reason, engine=src.name)
@@ -283,6 +290,8 @@ class Rebalancer:
             snap, dst.engine, link=link, session=session,
             aad=fleet.measurement.encode(),
             compression_level=self.compression_level)
+        if fleet.tracer is not None:
+            fleet.tracer.bind_hop(snap2.trace, dst=dst.name)
         req = dst.engine.inject_slot(snap2)
         fleet.reassign(req, dst.name)
         fleet.ticket_transition(req.rid, RequestState.DECODING,

@@ -41,6 +41,7 @@ from repro.fleet.lifecycle import (RequestSpec, RequestState, RequestTicket,
 from repro.fleet.router import Router
 from repro.fleet.speculative import SpeculativeTierController
 from repro.fleet.telemetry import FleetTelemetry, QualityEvent
+from repro.fleet.tracing import Tracer
 from repro.serving.engine import Engine, Request
 
 
@@ -82,7 +83,8 @@ class FleetController:
                  spec_options: dict | None = None,
                  clock=None,
                  autoscaler=None,
-                 aging_rate: float = 0.0):
+                 aging_rate: float = 0.0,
+                 tracer: "Tracer | bool | None" = True):
         assert handles, "a fleet needs at least one engine"
         self.handles: dict[str, EngineHandle] = {h.name: h for h in handles}
         self.cfg = handles[0].engine.cfg
@@ -98,6 +100,14 @@ class FleetController:
         elif clock is not None:
             telemetry.bind_clock(self.clock)  # one time base everywhere
         self.telemetry = telemetry
+        # distributed tracing: on by default (span derivation rides the
+        # audit log the telemetry already records; overhead is benched
+        # in bench_fleet.py).  Pass tracer=False to disable, or hand in
+        # a configured Tracer.
+        if tracer is True:
+            tracer = Tracer(clock=self.clock)
+        self.tracer = tracer or None
+        self.telemetry.attach_tracer(self.tracer)
         self.fabric = fabric or Fabric()
         self.queue_limit = queue_limit
         self.rebalance_every = rebalance_every
@@ -115,6 +125,8 @@ class FleetController:
                  f"!= {self.cfg.vocab_size}")
             self.tiers.setdefault(h.tier.name, h.tier)
             self.whitelist.add(measure_config(h.engine.cfg))
+            self.telemetry.note_tier(h.name, h.tier.name)
+            self._wire_profile(h)
         self.authority = authority   # kept: late-joining engines attest too
         if authority is not None:
             for h in handles:
@@ -401,6 +413,10 @@ class FleetController:
             # a park
             spec.release_for_park(req.rid)
         snap = handle.engine.extract_slot(slot)
+        if self.tracer is not None:
+            # open the migrate-hop span BEFORE packing so its identity
+            # rides the blob; whoever re-places the park closes it
+            snap.trace = self.tracer.wire_context(req.rid, src=handle.name)
         blob = pack_slot(snap)
         self.balancer.shadow.get(handle.name, {}).pop(req.rid, None)
         self.inflight.pop(req.rid, None)
@@ -443,6 +459,9 @@ class FleetController:
                 engine=handle.name, t=now))
         self.ticket_transition(req.rid, RequestState.PREFILLING,
                                engine=handle.name, reason=dec.reason)
+        if self.tracer is not None:
+            # the routing decision's facts land on the prefill span
+            self.tracer.annotate(req.rid, **dec.to_attrs())
         spec = self.spec_controllers.get(handle.name)
         if spec is not None and spec.attach(req) == "spec":
             # the replica slot lives on the verify engine: audit it
@@ -597,7 +616,20 @@ class FleetController:
                                        capabilities(handle.engine.cfg))
         self.handles[handle.name] = handle
         self.telemetry.stats(handle.name)     # appears in summaries now
+        self.telemetry.note_tier(handle.name, handle.tier.name)
+        self._wire_profile(handle)
         return handle
+
+    def _wire_profile(self, handle: EngineHandle):
+        """Point the engine's jit profile hook at the tracer (first
+        invocation per program = the compile), unless the caller already
+        installed one."""
+        if self.tracer is None:
+            return
+        if getattr(handle.engine, "profile_hook", None) is None:
+            tracer, name = self.tracer, handle.name
+            handle.engine.profile_hook = \
+                lambda key, wall_s: tracer.record_jit(name, key, wall_s)
 
     def set_link(self, name: str, cond: NetworkCondition | None):
         """Inject (or clear) link conditions for one engine: the fleet-
@@ -627,6 +659,8 @@ class FleetController:
         parked = 0
         for slot in sorted(handle.engine.requests):
             snap = handle.engine.extract_slot(slot)
+            if self.tracer is not None:
+                snap.trace = self.tracer.wire_context(snap.rid, src=name)
             blob = pack_slot(snap)
             self.balancer.shadow.get(name, {}).pop(snap.rid, None)
             self.inflight.pop(snap.rid, None)

@@ -37,7 +37,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from enum import Enum
-from typing import Optional
+from typing import ClassVar, Optional
 
 import numpy as np
 
@@ -105,6 +105,7 @@ class RequestFailed(LifecycleError):
 @dataclass
 class LifecycleEvent:
     """One typed transition on the fleet-wide audit log."""
+    kind: ClassVar[str] = "lifecycle"  # audit-log discriminator
     rid: str
     src: str                         # RequestState value ("" at submit)
     dst: str
@@ -214,6 +215,14 @@ class RequestTicket:
         out = self.output
         new, self._stream_pos = out[self._stream_pos:], len(out)
         return new
+
+    def timeline(self) -> list:
+        """This request's span tree so far (chronological ``Span`` list
+        from the fleet tracer); empty when tracing is disabled."""
+        tracer = getattr(self._fleet.telemetry, "tracer", None)
+        if tracer is None:
+            return []
+        return tracer.trace_of(self.rid)
 
     # -- control --------------------------------------------------------------
     def cancel(self, *, reason: str = "caller cancelled") -> bool:

@@ -44,6 +44,20 @@ class RouteDecision:
     degraded: bool = False           # chosen tier < preferred tier
     cause: str = ""                  # "saturated" | "deadline" | "link"
 
+    def to_attrs(self) -> dict:
+        """The decision's facts as span attributes (attached to the
+        request's prefill span at dispatch) -- only what explains the
+        placement, not the full score table."""
+        attrs = {"route_reason": self.reason}
+        if self.tier:
+            attrs["route_tier"] = self.tier
+        if self.degraded:
+            attrs["route_degraded"] = True
+            attrs["route_cause"] = self.cause or self.reason
+            if self.preferred:
+                attrs["route_preferred"] = self.preferred
+        return attrs
+
 
 class Router:
     def __init__(self, *, max_unattested_sensitivity: str = "public",

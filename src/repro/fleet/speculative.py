@@ -274,6 +274,13 @@ class SpeculativeTierController:
                 rid=req.rid, src=self.draft.name, dst=self.verify.name,
                 reason="speculative", step=step,
                 wire_bytes=wire_bytes, lossy=lossy))
+            if self.telemetry.tracer is not None:
+                # the replica hand-off is a copy, not a move: it lands
+                # as an instantaneous hop (record_migration above); the
+                # pair facts annotate the request's open span
+                self.telemetry.tracer.annotate(
+                    req.rid, verify_mode=self.verify_mode,
+                    spec_pair=f"{self.draft.name}->{self.verify.name}")
         self._set_policy(self.draft.engine, req.slot,
                          self.drafter_temperature, self.drafter_top_k)
         self._spec[req.rid] = _SpecReq(req=req, replica_slot=replica.slot)

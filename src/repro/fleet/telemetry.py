@@ -11,6 +11,14 @@ cluster, balancer and speculative controller alike), every
 down-/upshift -- one chronological read explains a request's whole
 fidelity and placement history.
 
+Storage is the ``tracing.MetricsRegistry``: the latency series are
+bounded ``WindowedHistogram`` windows (list-compatible, so existing
+slicing/percentile call sites keep working) instead of unbounded
+Python lists, and ``prometheus_text()`` renders the whole registry as
+a text exposition.  When a ``Tracer`` is attached every recorded fact
+is forwarded to it, so per-request span trees are derived from this
+audit log rather than from duplicate call sites.
+
 All timing reads go through an injectable clock (any zero-arg float
 callable; ``channel.SimClock`` qualifies) so latency accounting and
 deadline expiry are deterministic under test.
@@ -18,9 +26,14 @@ deadline expiry are deterministic under test.
 
 from __future__ import annotations
 
-import math
 import time
 from dataclasses import dataclass
+from typing import ClassVar, Optional
+
+from .tracing import MetricsRegistry, Tracer, percentile
+
+__all__ = ["EngineStats", "MigrationRecord", "QualityEvent",
+           "FleetTelemetry", "percentile"]
 
 
 @dataclass
@@ -60,6 +73,7 @@ class QualityEvent:
     or an *upshift* (migrated back up once the better tier had room).
     Interleaved with ``LifecycleEvent``/``ScaleEvent`` entries, so one
     chronological read shows why a request's fidelity changed."""
+    kind: ClassVar[str] = "quality"  # audit-log discriminator
     rid: str
     src_tier: str                    # tier left (or preferred-but-denied)
     dst_tier: str
@@ -70,20 +84,8 @@ class QualityEvent:
     t: float = 0.0                   # fleet clock at the change
 
 
-def percentile(xs: list[float], q: float) -> float:
-    """Nearest-rank percentile, rank = ceil(q/100 * N); 0.0 on empty.
-
-    The product is ordered ``q * N / 100`` and nudged before the ceil:
-    ``q/100 * N`` picks up float dust for common percentiles (e.g.
-    0.95 * 20 == 19.000000000000004, whose ceil lands the p95 of 20
-    samples on the *maximum*, one rank off)."""
-    if not xs:
-        return 0.0
-    q = min(max(q, 0.0), 100.0)
-    ordered = sorted(xs)
-    n = len(ordered)
-    rank = math.ceil(q * n / 100.0 - 1e-9)
-    return ordered[max(0, min(n - 1, rank - 1))]
+_TERMINAL = frozenset({"done", "failed", "cancelled", "expired", "halted"})
+_SERVING = frozenset({"prefilling", "decoding", "drafting", "verifying"})
 
 
 class FleetTelemetry:
@@ -91,11 +93,23 @@ class FleetTelemetry:
         self._clock = clock or time.perf_counter
         self.engines: dict[str, EngineStats] = {}
         self.migrations: list[MigrationRecord] = []
-        self.events: list = []           # LifecycleEvent audit log
-        self.request_latency_s: list[float] = []
-        self.step_latency_s: list[float] = []
-        self.queue_wait_s: list[float] = []
-        self.preempt_wait_s: list[float] = []   # park -> resume latency
+        self.events: list = []           # unified audit log
+        self._by_rid: dict[str, list] = {}   # rid -> its audit entries
+        self.tiers: dict[str, str] = {}      # engine name -> tier name
+        self.tracer: Optional[Tracer] = None
+        self.metrics = MetricsRegistry(clock=self._clock)
+        self.request_latency_s = self.metrics.histogram(
+            "fleet_request_latency_seconds",
+            "Completion latency per finished request")
+        self.step_latency_s = self.metrics.histogram(
+            "fleet_step_latency_seconds",
+            "Wall time per fleet decode step", maxlen=4096)
+        self.queue_wait_s = self.metrics.histogram(
+            "fleet_queue_wait_seconds",
+            "Admission queue wait per dispatched request")
+        self.preempt_wait_s = self.metrics.histogram(
+            "fleet_preempt_wait_seconds",
+            "Park -> resume latency per preempted request")
         self.rejected = 0
         self.failovers = 0
         self.preemptions = 0
@@ -112,6 +126,24 @@ class FleetTelemetry:
         one time base; re-anchors the tokens/s window."""
         self._clock = clock
         self._t0 = clock()
+        self.metrics.bind_clock(clock)
+        if self.tracer is not None:
+            self.tracer.bind_clock(clock)
+
+    def attach_tracer(self, tracer: Optional[Tracer]):
+        """Forward every subsequently recorded fact to ``tracer`` so it
+        can derive span trees from the audit log."""
+        self.tracer = tracer
+        if tracer is not None:
+            for eng, tier in self.tiers.items():
+                tracer.note_tier(eng, tier)
+
+    def note_tier(self, engine: str, tier: str):
+        """Engine -> quality-tier binding (for SLO attribution and span
+        tier attributes)."""
+        self.tiers[engine] = tier
+        if self.tracer is not None:
+            self.tracer.note_tier(engine, tier)
 
     def stats(self, name: str) -> EngineStats:
         if name not in self.engines:
@@ -124,7 +156,9 @@ class FleetTelemetry:
         s.steps += 1
         s.tokens += tokens
         s.busy_s += dt
-        self.step_latency_s.append(dt)
+        self.step_latency_s.observe(dt)
+        if self.tracer is not None:
+            self.tracer.on_engine_step(name, tokens)
 
     def record_admit(self, name: str):
         self.stats(name).admitted += 1
@@ -134,56 +168,72 @@ class FleetTelemetry:
 
     def record_complete(self, name: str, latency_s: float):
         self.stats(name).completed += 1
-        self.request_latency_s.append(latency_s)
+        self.request_latency_s.observe(latency_s)
 
     def record_migration(self, rec: MigrationRecord):
         self.migrations.append(rec)
         self.stats(rec.src).migrations_out += 1
         self.stats(rec.dst).migrations_in += 1
+        if self.tracer is not None:
+            self.tracer.on_migration(rec)
 
     def record_failure(self, name: str):
         self.stats(name).failed = True
         self.failovers += 1
 
+    def _log(self, ev):
+        self.events.append(ev)
+        rid = getattr(ev, "rid", "")
+        if rid:
+            self._by_rid.setdefault(rid, []).append(ev)
+
     def record_event(self, ev):
         """A typed lifecycle transition (LifecycleEvent)."""
-        self.events.append(ev)
+        self._log(ev)
+        if self.tracer is not None:
+            self.tracer.on_lifecycle(ev)
 
     def record_scale(self, ev):
         """A fleet membership change (ScaleEvent) -- rides the same
         unified audit log as lifecycle transitions, so one chronological
         read shows WHY a request moved (the retire event precedes its
         slots' MIGRATING transitions)."""
-        self.events.append(ev)
+        self._log(ev)
         if ev.action == "spawn":
             self.scale_ups += 1
         else:
             self.scale_downs += 1
+        if self.tracer is not None:
+            self.tracer.on_scale(ev)
 
     def scale_events(self) -> list:
-        return [ev for ev in self.events if hasattr(ev, "action")]
+        return [ev for ev in self.events
+                if getattr(ev, "kind", "") == "scale"]
 
     def record_quality(self, ev: QualityEvent):
         """A quality-tier change -- same unified audit log, so
         downshifts read in sequence with the lifecycle transitions and
         scale events that caused them."""
-        self.events.append(ev)
+        self._log(ev)
         if ev.direction == "down":
             self.downshifts += 1
         else:
             self.upshifts += 1
+        if self.tracer is not None:
+            self.tracer.on_quality(ev)
 
     def quality_events(self) -> list:
-        return [ev for ev in self.events if hasattr(ev, "direction")]
+        return [ev for ev in self.events
+                if getattr(ev, "kind", "") == "quality"]
 
     def record_queue_wait(self, wait_s: float):
-        self.queue_wait_s.append(wait_s)
+        self.queue_wait_s.observe(wait_s)
 
     def record_preemption(self):
         self.preemptions += 1
 
     def record_resume(self, wait_s: float):
-        self.preempt_wait_s.append(wait_s)
+        self.preempt_wait_s.observe(wait_s)
 
     def record_cancelled(self):
         self.cancelled += 1
@@ -192,7 +242,9 @@ class FleetTelemetry:
         self.expired += 1
 
     def events_of(self, rid: str) -> list:
-        return [ev for ev in self.events if ev.rid == rid]
+        """This request's audit entries, chronological -- served from
+        the per-rid index, not a scan of the whole log."""
+        return list(self._by_rid.get(rid, ()))
 
     # -- reading ------------------------------------------------------------
     def fleet_tokens(self) -> int:
@@ -206,6 +258,138 @@ class FleetTelemetry:
         xs = self.request_latency_s
         return {"p50": percentile(xs, 50), "p95": percentile(xs, 95),
                 "p99": percentile(xs, 99)}
+
+    def slo_summary(self) -> dict:
+        """Per-tier SLO roll-up derived from the audit log.
+
+        Each request's serving time is split into time-at-tier segments:
+        a segment opens when the request enters a serving state on an
+        engine (tier looked up via ``note_tier``) and the tier changes
+        thereafter only at ``QualityEvent`` boundaries; the segment
+        closes at the next change or the terminal transition.  A
+        request that never reached a serving engine (rejected at the
+        queue, expired while queued) touches no tier and is excluded.
+
+        Per tier: requests that spent time there, total time-at-tier,
+        completions/terminal dispositions *attributed to the tier the
+        request finished on*, availability = done / (done + failed +
+        expired + halted) -- cancellations are operator-initiated and
+        excluded -- and completion-latency percentiles (submit ->
+        terminal) over the requests that finished on that tier."""
+        per_tier: dict[str, dict] = {}
+
+        def tier_bucket(tier: str) -> dict:
+            if tier not in per_tier:
+                per_tier[tier] = {"requests": 0, "time_at_tier_s": 0.0,
+                                  "done": 0, "failed": 0, "expired": 0,
+                                  "halted": 0, "cancelled": 0,
+                                  "latencies": []}
+            return per_tier[tier]
+
+        now = self._clock()
+        for rid, evs in self._by_rid.items():
+            t_submit = evs[0].t
+            tier = None              # tier currently serving this rid
+            t_enter = 0.0
+            touched: set[str] = set()
+            terminal = None
+            t_term = None
+            for ev in evs:
+                kind = getattr(ev, "kind", "")
+                if kind == "quality":
+                    if tier is not None and ev.src_tier == tier:
+                        tier_bucket(tier)["time_at_tier_s"] += \
+                            max(ev.t - t_enter, 0.0)
+                    tier, t_enter = ev.dst_tier, ev.t
+                    touched.add(tier)
+                    continue
+                if kind != "lifecycle":
+                    continue
+                if ev.dst in _SERVING:
+                    here = self.tiers.get(ev.engine or "", "")
+                    if here and here != tier:
+                        if tier is not None:
+                            tier_bucket(tier)["time_at_tier_s"] += \
+                                max(ev.t - t_enter, 0.0)
+                        tier, t_enter = here, ev.t
+                    elif tier is None and here:
+                        tier, t_enter = here, ev.t
+                    if tier:
+                        touched.add(tier)
+                elif ev.dst in _TERMINAL:
+                    terminal, t_term = ev.dst, ev.t
+                    if tier is not None:
+                        tier_bucket(tier)["time_at_tier_s"] += \
+                            max(ev.t - t_enter, 0.0)
+                    break
+            if tier is not None and terminal is None:
+                # still in flight: charge time served so far
+                tier_bucket(tier)["time_at_tier_s"] += \
+                    max(now - t_enter, 0.0)
+            for name in touched:
+                tier_bucket(name)["requests"] += 1
+            if terminal is not None and tier:
+                b = tier_bucket(tier)
+                b[terminal] += 1
+                if terminal == "done":
+                    b["latencies"].append(max(t_term - t_submit, 0.0))
+
+        out = {}
+        for name in sorted(per_tier):
+            b = per_tier[name]
+            answered = b["done"] + b["failed"] + b["expired"] + b["halted"]
+            lat = b["latencies"]
+            out[name] = {
+                "requests": b["requests"],
+                "time_at_tier_s": round(b["time_at_tier_s"], 4),
+                "completed": b["done"],
+                "failed": b["failed"], "expired": b["expired"],
+                "halted": b["halted"], "cancelled": b["cancelled"],
+                "availability": round(b["done"] / answered, 4)
+                if answered else 1.0,
+                "latency_p50": round(percentile(lat, 50), 4),
+                "latency_p95": round(percentile(lat, 95), 4),
+                "latency_p99": round(percentile(lat, 99), 4),
+            }
+        return out
+
+    def prometheus_text(self) -> str:
+        """Text exposition of the registry; scalar counters and
+        per-engine stats (whose source of truth are the dataclasses
+        above) are synced into counter/gauge instruments first."""
+        m = self.metrics
+        m.counter("fleet_rejected_total",
+                  "Admissions rejected").set(self.rejected)
+        m.counter("fleet_failovers_total",
+                  "Engine failures absorbed").set(self.failovers)
+        m.counter("fleet_preemptions_total",
+                  "Requests parked by preemption").set(self.preemptions)
+        m.counter("fleet_cancelled_total",
+                  "Requests cancelled").set(self.cancelled)
+        m.counter("fleet_expired_total",
+                  "Requests past deadline").set(self.expired)
+        m.counter("fleet_migrations_total",
+                  "Live migrations").set(len(self.migrations))
+        m.counter("fleet_scale_events_total", "Membership changes") \
+            .set(self.scale_ups, action="spawn")
+        m.counter("fleet_scale_events_total", "") \
+            .set(self.scale_downs, action="retire")
+        m.counter("fleet_tier_shifts_total", "Quality-tier shifts") \
+            .set(self.downshifts, direction="down")
+        m.counter("fleet_tier_shifts_total", "") \
+            .set(self.upshifts, direction="up")
+        tok = m.counter("engine_tokens_total", "Tokens emitted per engine")
+        tps = m.gauge("engine_tokens_per_second",
+                      "Per-engine busy-time throughput")
+        up = m.gauge("engine_up", "1 while serving, 0 failed/retired")
+        for name, s in sorted(self.engines.items()):
+            labels = {"engine": name}
+            if self.tiers.get(name):
+                labels["tier"] = self.tiers[name]
+            tok.set(s.tokens, **labels)
+            tps.set(round(s.tokens_per_s, 3), **labels)
+            up.set(0 if (s.failed or s.retired) else 1, **labels)
+        return m.render()
 
     def summary(self) -> dict:
         return {
@@ -240,4 +424,5 @@ class FleetTelemetry:
                 "preempt_wait_p50": round(
                     percentile(self.preempt_wait_s, 50), 4),
             },
+            "slo": self.slo_summary(),
         }

@@ -219,6 +219,12 @@ def main():
     ap.add_argument("--verify-mode", default="stepwise",
                     choices=["stepwise", "wide", "distribution"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the run's Chrome trace-event JSON here "
+                         "(open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text exposition of the "
+                         "fleet metrics registry here")
     args = ap.parse_args()
 
     import jax
@@ -395,6 +401,15 @@ def main():
               f"{json.dumps(spec.stats.summary())}")
     print(f"simulated wire time: {fleet.fabric.clock():.3f}s "
           f"({len(fleet.telemetry.migrations)} live migrations)")
+    if args.trace_out and fleet.tracer is not None:
+        fleet.tracer.close_open(reason="run complete")
+        fleet.tracer.export_chrome(args.trace_out)
+        print(f"trace: {args.trace_out} ({len(fleet.tracer.spans)} spans"
+              f" -- open in Perfetto / chrome://tracing)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(fleet.telemetry.prometheus_text())
+        print(f"metrics: {args.metrics_out}")
 
 
 if __name__ == "__main__":

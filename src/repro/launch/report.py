@@ -1,6 +1,11 @@
-"""Render §Dry-run / §Roofline markdown tables from results/dryrun JSONs.
+"""Render §Dry-run / §Roofline markdown tables from results/dryrun JSONs,
+per-request timelines from an exported Chrome trace, and per-tier SLO
+tables from a fleet summary.
 
     PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun]
+    PYTHONPATH=src python -m repro.launch.report --trace TRACE_fleet.json
+    PYTHONPATH=src python -m repro.launch.report --trace T.json --rid r3
+    PYTHONPATH=src python -m repro.launch.report --slo summary.json
 """
 
 import argparse
@@ -63,12 +68,87 @@ def dryrun_table(rows):
     return "\n".join(out)
 
 
+def trace_timelines(trace: dict, rid: str | None = None) -> str:
+    """ASCII per-request timelines from an exported Chrome trace.
+
+    Spans are grouped by ``args.trace_id`` (the request id; engine
+    tracks are ``engine:<name>``), children indented under parents by
+    ``args.parent_id``, and each line shows start/duration (ms) plus the
+    engine and the facts that explain the segment (reason, wire bytes,
+    lossy)."""
+    by_trace: dict[str, list[dict]] = {}
+    for ev in trace.get("traceEvents", []):
+        if ev.get("ph") != "X":
+            continue
+        a = ev.get("args", {})
+        tid = a.get("trace_id")
+        if tid is None or (rid is not None and tid != rid):
+            continue
+        by_trace.setdefault(tid, []).append(ev)
+    lines = []
+    for tid in sorted(by_trace):
+        evs = sorted(by_trace[tid], key=lambda e: (e["ts"],
+                                                   e["args"]["span_id"]))
+        children: dict = {}
+        for ev in evs:
+            children.setdefault(ev["args"].get("parent_id"),
+                                []).append(ev)
+        lines.append(f"== {tid} ==")
+
+        def emit(parent, depth):
+            for ev in children.get(parent, ()):
+                a = ev["args"]
+                extras = [a.get("engine") or ev.get("engine") or ""]
+                for k in ("reason", "route_tier", "outcome", "state",
+                          "wire_bytes", "lossy", "dst",
+                          "time_to_useful_s", "wall_s"):
+                    if a.get(k) not in (None, "", False):
+                        extras.append(f"{k}={a[k]}")
+                lines.append(
+                    f"  {'  ' * depth}{ev['name']:<12s} "
+                    f"{ev['ts'] / 1e3:9.3f}ms +{ev['dur'] / 1e3:8.3f}ms"
+                    f"  {' '.join(x for x in extras if x)}")
+                emit(a["span_id"], depth + 1)
+
+        emit(None, 0)
+    return "\n".join(lines)
+
+
+def slo_table(slo: dict) -> str:
+    out = ["| tier | requests | time at tier s | completed | "
+           "availability | p50 | p95 | p99 |",
+           "|---|---|---|---|---|---|---|---|"]
+    for name, row in sorted(slo.items()):
+        out.append(
+            f"| {name or '(untiered)'} | {row['requests']} | "
+            f"{row['time_at_tier_s']:.4f} | {row['completed']} | "
+            f"{row['availability']:.4f} | {row['latency_p50']:.4f} | "
+            f"{row['latency_p95']:.4f} | {row['latency_p99']:.4f} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--section", choices=["roofline", "dryrun", "both"],
                     default="both")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="render per-request timelines from an exported "
+                         "Chrome trace JSON instead of the tables")
+    ap.add_argument("--rid", default=None,
+                    help="with --trace: only this request's timeline")
+    ap.add_argument("--slo", default=None, metavar="PATH",
+                    help="render the per-tier SLO table from a fleet "
+                         "summary JSON (or a bare summary()['slo'] dump)")
     args = ap.parse_args()
+    if args.trace:
+        print(trace_timelines(json.load(open(args.trace)), args.rid))
+        return
+    if args.slo:
+        doc = json.load(open(args.slo))
+        print("### Per-tier SLO\n")
+        print(slo_table(doc.get("slo", doc)))
+        return
     rows = load(args.dir)
     if args.section in ("roofline", "both"):
         print("### Roofline (single pod 16x16, per-device terms)\n")

@@ -17,6 +17,7 @@ bit-identically anywhere.
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Optional
@@ -110,6 +111,10 @@ class SlotSnapshot:
     request: dict                    # request_to_dict form
     config_name: str
     step: int                        # donor step_count at extraction
+    trace: Optional[dict] = None     # tracer wire context: the migrate
+    #                                  hop span opened on the donor rides
+    #                                  the blob so the destination closes
+    #                                  that exact span (pack_slot meta)
 
     @property
     def rid(self) -> str:
@@ -128,7 +133,8 @@ class Engine:
     """Single-replica serving engine for one model on one mesh."""
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 256, mesh=None, rules=None, seed: int = 0):
+                 max_len: int = 256, mesh=None, rules=None, seed: int = 0,
+                 profile_hook=None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -145,6 +151,29 @@ class Engine:
         self._verify_fn = jax.jit(partial(_verify_window, cfg=cfg,
                                           mesh=mesh, rules=rules))
         self._probs_fn = None        # compiled lazily (distribution verify)
+        # jit programs compile on first invocation per program key; the
+        # hook (``profile_hook(key, wall_s)``) receives the wall time of
+        # exactly that first call -- compile-dominated -- so the fleet
+        # tracer can attribute program builds to spawn spans
+        self.profile_hook = profile_hook
+        self._compiled: set[str] = set()
+
+    def _profiled(self, key: str, fn):
+        """Run ``fn``; if this is the first invocation of program ``key``
+        on this engine, time it to completion (``block_until_ready``)
+        and report to ``profile_hook``.  Warm keys run untouched, and a
+        key is marked warm even with no hook attached so a hook wired in
+        later never reports an already-compiled program as a build."""
+        if key in self._compiled:
+            return fn()
+        self._compiled.add(key)
+        if self.profile_hook is None:
+            return fn()
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        self.profile_hook(key, time.perf_counter() - t0)
+        return out
 
     # -- state ------------------------------------------------------------
     def _fresh_state(self, seed: int) -> EngineState:
@@ -196,8 +225,10 @@ class Engine:
             temperature=self.state.temperature.at[slot].set(req.temperature),
             top_k=self.state.top_k.at[slot].set(req.top_k))
         prompt = jnp.asarray(prefix, jnp.int32)[None]
-        self.state = self._prefill_fn(self.params, self.state, prompt,
-                                      slot=slot, plen=plen)
+        self.state = self._profiled(
+            f"prefill[plen={plen}]",
+            lambda: self._prefill_fn(self.params, self.state, prompt,
+                                     slot=slot, plen=plen))
         return True
 
     def step(self, *, auto_retire: bool = True) -> dict[str, int]:
@@ -209,7 +240,8 @@ class Engine:
         verifier rules on them."""
         if not self.requests:
             return {}
-        self.state, toks = self._decode_fn(self.params, self.state)
+        self.state, toks = self._profiled(
+            "decode", lambda: self._decode_fn(self.params, self.state))
         toks = np.asarray(toks)
         emitted = {}
         for slot, req in list(self.requests.items()):
@@ -241,8 +273,9 @@ class Engine:
         either program, not across them)."""
         if not self.requests:
             return {}, None
-        self.state, toks, probs = self._decode_probs(self.params,
-                                                     self.state)
+        self.state, toks, probs = self._profiled(
+            "decode_probs",
+            lambda: self._decode_probs(self.params, self.state))
         toks = np.asarray(toks)
         emitted = {}
         for slot, req in list(self.requests.items()):
@@ -385,9 +418,11 @@ class Engine:
             arr[slot, :len(toks)] = toks
             cnt[slot] = len(toks)
             mask[slot] = True
-        self.state, n_acc, commit = self._verify_fn(
-            self.params, self.state, jnp.asarray(arr), jnp.asarray(cnt),
-            jnp.asarray(mask))
+        self.state, n_acc, commit = self._profiled(
+            "verify_wide",
+            lambda: self._verify_fn(self.params, self.state,
+                                    jnp.asarray(arr), jnp.asarray(cnt),
+                                    jnp.asarray(mask)))
         n_acc, commit = np.asarray(n_acc), np.asarray(commit)
         return {slot: (int(n_acc[slot]),
                        None if commit[slot] < 0 else int(commit[slot]))
