@@ -28,6 +28,17 @@ def mk_requests(cfg):
                     max_new_tokens=MAX_NEW) for i in range(REQS)]
 
 
+def drain_engine(eng, reqs):
+    pending, outs = list(reqs), {}
+    while pending or eng.requests:
+        while pending and eng.add_request(pending[0]):
+            outs[pending[0].rid] = pending[0].output
+            pending.pop(0)
+        if eng.requests:
+            eng.step()
+    return outs
+
+
 def mk_fleet(cfg, params, n_engines, *, sync_every=1):
     from repro.core.attestation import TrustAuthority
     from repro.core.daemon import CLOUD, EDGE, DeviceProfile
@@ -51,10 +62,11 @@ def main():
     cfg = tiny_cfg()
     params = init_params(cfg, jax.random.key(0))
 
-    # single engine baseline
+    # single engine baseline (explicit add/step loop -- Engine.run() is
+    # a deprecated shim over exactly this)
     eng = tiny_engine(cfg, slots=4, max_len=64, params=params)
     t0 = time.perf_counter()
-    eng.run(mk_requests(cfg))
+    drain_engine(eng, mk_requests(cfg))
     dt1 = time.perf_counter() - t0
     emit("fleet/single_engine_serve", dt1 * 1e6,
          f"{REQS * MAX_NEW / dt1:.0f} tok/s")
@@ -87,11 +99,69 @@ def main():
 
     emit("fleet/unpack_inject_slot", timeit(inject) * 1e6)
 
+    bench_paged(cfg, params)
     bench_priority_workload(cfg, params)
     bench_autoscale(cfg, params)
     bench_quality(cfg, params)
     bench_tracing_overhead(cfg, params)
     write_bench_json("fleet")
+
+
+def bench_paged(cfg, params):
+    """Dense vs paged KV at the SAME cache memory (128 token-slots:
+    dense 2 rows x 64 vs paged 16 pages x 8): how many concurrent
+    requests each admits, the hand-off payload per slot for a short
+    request (paged ships only live pages; dense ships the whole
+    max_len row), and decode throughput draining the same batch."""
+    from repro.core.migration import pack_slot
+    from repro.serving.engine import Engine, Request
+    from repro.serving.paged import PagedEngine
+
+    def batch(tag, n=REQS):
+        rng = np.random.default_rng(0)
+        return [Request(f"{tag}{i}", rng.integers(5, cfg.vocab_size, 6),
+                        max_new_tokens=MAX_NEW) for i in range(n)]
+
+    dense = Engine(cfg, params, slots=2, max_len=64, seed=0)
+    paged = PagedEngine(cfg, params, page_size=8, pages=16, rows=10,
+                        max_len=64, seed=0)
+    assert dense.slots * dense.max_len \
+        == paged.pages * paged.page_size == 128
+
+    need = 6 + MAX_NEW                   # prompt + decode budget
+    admits = {}
+    for tag, eng in [("dense", dense), ("paged", paged)]:
+        reqs, n = batch(tag), 0
+        while (n < len(reqs) and eng.can_admit(need)
+               and eng.add_request(reqs[n])):
+            n += 1
+        admits[tag] = n
+        emit(f"fleet/paged_admits_{tag}", float(n),
+             f"concurrent {need}-token requests in 128 token-slots")
+    assert admits["paged"] > admits["dense"]
+
+    # hand-off bytes for a short in-flight request (6-token prompt,
+    # 2 generated): the migration unit the fleet actually ships
+    for tag, eng in [("dense", dense), ("paged", paged)]:
+        for row in list(eng.requests):
+            eng.retire(row)
+        eng.add_request(Request(f"{tag}-mv", np.arange(2, 8),
+                                max_new_tokens=MAX_NEW))
+        eng.step()
+        eng.step()
+        blob = pack_slot(eng.extract_slot(
+            next(iter(eng.requests)), keep=False))
+        emit(f"fleet/paged_handoff_bytes_{tag}", float(len(blob)),
+             "pack_slot payload, short request")
+
+    # decode throughput draining the same batch at equal memory
+    for tag, eng in [("dense", dense), ("paged", paged)]:
+        drain_engine(eng, batch(f"{tag}-warm", 2))   # compile + warm
+        t0 = time.perf_counter()
+        drain_engine(eng, batch(f"{tag}-hot"))
+        dt = time.perf_counter() - t0
+        emit(f"fleet/paged_tokens_per_s_{tag}", REQS * MAX_NEW / dt,
+             f"{REQS} reqs x {MAX_NEW} new tokens")
 
 
 def bench_priority_workload(cfg, params):

@@ -30,7 +30,7 @@ from repro.fleet import (Autoscaler, EngineHandle, EngineTemplate,
                          RequestState, ScalePolicy)
 from repro.models.init import init_params
 from repro.optim.compression import dequantize_int8, quantize_int8
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
 
 
 def main():
@@ -45,11 +45,10 @@ def main():
 
     rng = np.random.default_rng(7)
     sens = ["public", "personal", "confidential"]
-    reqs = [Request(f"chat{i}", rng.integers(5, cfg.vocab_size, 6),
-                    max_new_tokens=14, sensitivity=sens[i % 3])
-            for i in range(8)]
-    for r in reqs:
-        fleet.submit(r)
+    tickets = [fleet.submit(RequestSpec(
+        rid=f"chat{i}", prompt=rng.integers(5, cfg.vocab_size, 6),
+        max_new_tokens=14, sensitivity=sens[i % 3]))
+        for i in range(8)]
 
     # everyone is mid-conversation...
     for _ in range(6):
@@ -61,17 +60,17 @@ def main():
     # ...when the cloud node disappears
     print("\n-- cloud node lost --")
     fleet.fail("cloud")
-    outs = fleet.run()
-    print(f"all {len(outs)} conversations finished on the survivors")
+    while not all(t.done for t in tickets):
+        fleet.step()
+    print(f"all {len(tickets)} conversations finished on the survivors")
 
-    for rid in sorted(fleet.done):
-        req = fleet.done[rid]
-        print(f"  {rid}[{req.sensitivity:12s}] "
-              f"via {'->'.join(fleet.placements[rid])}")
+    for t in sorted(tickets, key=lambda t: t.rid):
+        print(f"  {t.rid}[{t.spec.sensitivity:12s}] "
+              f"via {'->'.join(fleet.placements[t.rid])}")
     tel = fleet.telemetry.summary()
     print("\nfleet telemetry:", tel["fleet"])
-    assert all("phone" not in fleet.placements[r.rid]
-               for r in reqs if r.sensitivity != "public")
+    assert all("phone" not in fleet.placements[t.rid]
+               for t in tickets if t.spec.sensitivity != "public")
     print("policy held: nothing sensitive ever touched the phone")
 
     lifecycle_act(cfg, params)

@@ -26,11 +26,23 @@ from repro.configs.tiny import make_tiny
 from repro.core.attestation import TrustAuthority
 from repro.core.daemon import CLOUD, EDGE, DeviceProfile
 from repro.core.validation import MarkerValidator
-from repro.fleet import EngineHandle, FleetController
+from repro.fleet import EngineHandle, FleetController, RequestSpec
 from repro.models.init import init_params
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
 
 EDGE_LEN, CLOUD_LEN = 96, 256
+
+
+def drain(engine, reqs):
+    """Engine-level batch serve via the non-deprecated add/step loop."""
+    pending, outs = list(reqs), {}
+    while pending or engine.requests:
+        while pending and engine.add_request(pending[0]):
+            outs[pending[0].rid] = pending[0].output
+            pending.pop(0)
+        if engine.requests:
+            engine.step()
+    return outs
 
 
 def main():
@@ -56,7 +68,7 @@ def main():
             spec_tiers={"edge": "cloud"},
             spec_options={"gamma": 4, "drafter_temperature": temp,
                           "drafter_top_k": 16})
-        reqs = [Request(f"r{i}", p, max_new_tokens=16)
+        reqs = [RequestSpec(rid=f"r{i}", prompt=p, max_new_tokens=16)
                 for i, p in enumerate(prompts)]
         outs = fleet.run(reqs)
         st = fleet.spec_controllers["edge"].stats
@@ -69,9 +81,10 @@ def main():
             baseline = outs
 
     # committed output is the cloud's own greedy output, bit-exactly:
+    from repro.serving.engine import Request
     cloud = Engine(cfg, params, slots=4, max_len=CLOUD_LEN, seed=7)
-    refs = cloud.run([Request(f"r{i}", p, max_new_tokens=16)
-                      for i, p in enumerate(prompts)])
+    refs = drain(cloud, [Request(f"r{i}", p, max_new_tokens=16)
+                         for i, p in enumerate(prompts)])
     assert all(baseline[r] == refs[r] for r in refs)
     print("  spec output == pure cloud-engine output: True "
           f"(edge max_len {EDGE_LEN} != cloud max_len {CLOUD_LEN})")
@@ -84,9 +97,9 @@ def main():
     hs[1] = EngineHandle("cloud", hs[1].engine, unattested_cloud)
     fleet = FleetController(hs, authority=TrustAuthority(),
                             spec_tiers={"edge": "cloud"})
-    conf = Request("conf", prompts[0], max_new_tokens=12,
-                   sensitivity="confidential")
-    pub = Request("pub", prompts[1], max_new_tokens=12)
+    conf = RequestSpec(rid="conf", prompt=prompts[0], max_new_tokens=12,
+                       sensitivity="confidential")
+    pub = RequestSpec(rid="pub", prompt=prompts[1], max_new_tokens=12)
     outs = fleet.run([conf, pub])
     st = fleet.spec_controllers["edge"].stats
     print(f"  confidential request stayed local "
@@ -102,8 +115,9 @@ def main():
         spec_options={"validators": [
             MarkerValidator("harmful_content", "harmful", range(10, 20))]})
     # a prompt soaked in harmful-marker ids makes the model emit them
-    bad = Request("bad", np.asarray([12, 14, 16, 18, 12, 14, 16, 18]),
-                  max_new_tokens=16)
+    bad = RequestSpec(rid="bad",
+                      prompt=np.asarray([12, 14, 16, 18, 12, 14, 16, 18]),
+                      max_new_tokens=16)
     outs = fleet.run([bad])
     st = fleet.spec_controllers["edge"].stats
     print(f"  interventions={st.interventions}, "

@@ -193,7 +193,10 @@ def pack_slot(snap: SlotSnapshot) -> bytes:
     checkpoints stay small."""
     meta = {"request": snap.request,
             "config_name": snap.config_name,
-            "step": snap.step}
+            "step": snap.step,
+            "version": snap.version}
+    if snap.version == 2:
+        meta["page_size"] = snap.page_size
     if snap.trace is not None:
         # tracer wire context: the donor-opened migrate-hop span travels
         # with the state so the destination closes that exact span
@@ -241,6 +244,21 @@ def repack_slot(snap: SlotSnapshot, target_max_len: int) -> SlotSnapshot:
     re-layout and fails the geometry assert at ``inject_slot``.
     """
     a = snap.arrays
+    if snap.version == 2:
+        # v2 (live pages) is geometry-free up to the page size: pages
+        # are position-addressed and the destination pads the token
+        # prefix out to its own max_len at inject, so no re-layout is
+        # ever needed -- only the budget check survives.  (The version
+        # check must come first: a v2 token axis is n_live * page_size,
+        # which can collide with a v1 src_len.)
+        need = int(a.position) + max(snap.remaining_tokens, 0)
+        if need > target_max_len:
+            raise ValueError(
+                f"cannot repack slot {snap.rid!r} into max_len="
+                f"{target_max_len}: position {int(a.position)} + "
+                f"{snap.remaining_tokens} remaining tokens need {need} "
+                "rows (tail truncation would drop live state)")
+        return snap
     src_len = int(a.tokens.shape[-1])
     if src_len == target_max_len:
         return snap
@@ -281,18 +299,31 @@ def repack_slot(snap: SlotSnapshot, target_max_len: int) -> SlotSnapshot:
                         trace=snap.trace)
 
 
+KNOWN_WIRE_VERSIONS = (1, 2)
+
+
 def unpack_slot(blob: bytes, like_arrays) -> SlotSnapshot:
     """Wire blob -> SlotSnapshot placed on the local backend.
 
-    ``like_arrays`` supplies the shapes/dtypes of the *target* engine's
-    slot (``Engine.slot_like()``); mismatched geometries fail loudly in
-    deserialize rather than corrupting a cache row."""
+    ``like_arrays`` supplies the pytree structure of the *target*
+    engine's slot (``Engine.slot_like()``).  For v1 blobs the leaf
+    shapes must match the target's geometry exactly (mismatches fail
+    loudly in deserialize); v2 (live pages) blobs carry a variable
+    page axis, which deserialize takes from the blob itself.  Blobs
+    from a future wire version are rejected rather than misread."""
     obj = msgpack.unpackb(blob)
     meta = obj["meta"]
+    version = meta.get("version", 1)
+    if version not in KNOWN_WIRE_VERSIONS:
+        raise ValueError(
+            f"unknown pack_slot wire version {version!r} (this build "
+            f"understands {KNOWN_WIRE_VERSIONS}); refusing to guess at "
+            "the payload layout")
     arrays = place_tree(deserialize_tree(obj["arrays"], like_arrays))
     return SlotSnapshot(arrays=arrays, request=meta["request"],
                         config_name=meta["config_name"], step=meta["step"],
-                        trace=meta.get("trace"))
+                        trace=meta.get("trace"), version=version,
+                        page_size=meta.get("page_size", 0))
 
 
 def _unpack_workspace(blob: bytes, like_state) -> AgentWorkspace:

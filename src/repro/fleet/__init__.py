@@ -47,31 +47,41 @@ draft tier still commits target-distributed output.
 from repro.core.replication import FULL_TIER, QualityTier
 from repro.fleet.autoscaler import (Autoscaler, EngineTemplate,
                                     ScaleEvent, ScalePolicy, ScaleSignals)
-from repro.fleet.balancer import Rebalancer, peek_slot_meta
+from repro.fleet.balancer import Rebalancer
 from repro.fleet.cluster import EngineHandle, FleetController
 from repro.fleet.lifecycle import (DeadlineExpired, LifecycleError,
                                    LifecycleEvent, RequestCancelled,
                                    RequestFailed, RequestSpec,
                                    RequestState, RequestTicket,
-                                   TERMINAL_STATES, WorkItem, WorkQueue,
-                                   effective_priority, work_order)
+                                   TERMINAL_STATES)
 from repro.fleet.router import RouteDecision, Router
 from repro.fleet.speculative import SpecTierStats, SpeculativeTierController
-from repro.fleet.telemetry import (EngineStats, FleetTelemetry,
-                                   MigrationRecord, QualityEvent,
-                                   percentile)
-from repro.fleet.tracing import (Counter, Gauge, MetricsRegistry, Span,
-                                 Tracer, WindowedHistogram)
+from repro.fleet.telemetry import (FleetTelemetry, MigrationRecord,
+                                   QualityEvent)
+from repro.fleet.tracing import Tracer
 
+# internal plumbing kept importable at the package root for existing
+# callers; not part of the blessed __all__ surface
+from repro.fleet.balancer import peek_slot_meta  # noqa: F401
+from repro.fleet.lifecycle import (WorkItem, WorkQueue,  # noqa: F401
+                                   effective_priority, work_order)
+from repro.fleet.telemetry import EngineStats, percentile  # noqa: F401
+from repro.fleet.tracing import (Counter, Gauge,  # noqa: F401
+                                 MetricsRegistry, Span, WindowedHistogram)
+
+# The blessed public surface: build a fleet (handles + controller +
+# elasticity), submit RequestSpecs, follow RequestTickets and the typed
+# event/telemetry objects they emit.  Internal plumbing (work-queue
+# items, blob peek helpers, metric primitives) stays importable from
+# its defining module but is no longer re-exported here -- the legacy
+# bool-returning submit(Request)/Engine.run() path is deprecated and
+# warns.
 __all__ = [
-    "Autoscaler", "Counter", "DeadlineExpired", "EngineHandle",
-    "EngineStats", "EngineTemplate", "FULL_TIER", "FleetController",
-    "FleetTelemetry", "Gauge", "LifecycleError", "LifecycleEvent",
-    "MetricsRegistry", "MigrationRecord", "QualityEvent", "QualityTier",
+    "Autoscaler", "DeadlineExpired", "EngineHandle", "EngineTemplate",
+    "FULL_TIER", "FleetController", "FleetTelemetry", "LifecycleError",
+    "LifecycleEvent", "MigrationRecord", "QualityEvent", "QualityTier",
     "Rebalancer", "RequestCancelled", "RequestFailed", "RequestSpec",
     "RequestState", "RequestTicket", "RouteDecision", "Router",
-    "ScaleEvent", "ScalePolicy", "ScaleSignals", "Span", "SpecTierStats",
+    "ScaleEvent", "ScalePolicy", "ScaleSignals", "SpecTierStats",
     "SpeculativeTierController", "TERMINAL_STATES", "Tracer",
-    "WindowedHistogram", "WorkItem", "WorkQueue", "effective_priority",
-    "peek_slot_meta", "percentile", "work_order",
 ]

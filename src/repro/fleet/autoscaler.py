@@ -39,6 +39,7 @@ from repro.core.replication import FULL_TIER, QualityTier
 from repro.fleet.cluster import EngineHandle
 from repro.fleet.telemetry import percentile
 from repro.serving.engine import Engine
+from repro.serving.paged import PagedEngine
 
 
 @dataclass(frozen=True)
@@ -65,6 +66,12 @@ class EngineTemplate:
     tier: QualityTier = FULL_TIER
     cfg: Any = field(default=None, repr=False, compare=False)
     params: Any = field(default=None, repr=False, compare=False)
+    # paged-KV templates: page_size > 0 spawns a PagedEngine whose
+    # admission is the free-page budget (``pages``; 0 = one full
+    # max_len reservation per decode row) rather than a slot count --
+    # ``slots`` then sizes the decode batch (rows)
+    page_size: int = 0
+    pages: int = 0
 
 
 @dataclass(frozen=True)
@@ -274,9 +281,16 @@ class Autoscaler:
             self._n_spawned += 1
         name = f"{template.name}{self._n_spawned}"
         t_build = time.perf_counter()
-        eng = Engine(cfg, params, slots=template.slots,
-                     max_len=template.max_len,
-                     seed=template.seed + self._n_spawned)
+        if template.page_size:
+            eng = PagedEngine(cfg, params, page_size=template.page_size,
+                              pages=template.pages or None,
+                              rows=template.slots,
+                              max_len=template.max_len,
+                              seed=template.seed + self._n_spawned)
+        else:
+            eng = Engine(cfg, params, slots=template.slots,
+                         max_len=template.max_len,
+                         seed=template.seed + self._n_spawned)
         build_s = time.perf_counter() - t_build
         self._n_spawned += 1
         fleet.add_engine(EngineHandle(name, eng, template.profile,

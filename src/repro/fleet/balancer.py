@@ -45,6 +45,13 @@ def peek_slot_meta(blob: bytes) -> dict:
     return msgpack.unpackb(blob)["meta"]["request"]
 
 
+def peek_slot_header(blob: bytes) -> dict:
+    """Full pack_slot meta (request + wire version + page_size + trace)
+    without deserializing arrays -- placement needs the wire version to
+    decide exact-inject vs lossy re-prefill before touching payload."""
+    return msgpack.unpackb(blob)["meta"]
+
+
 def wire_slot(snap, dst_engine, *, link, session=None, aad=b"",
               compression_level=3):
     """The one slot wire hop every mover shares: pack -> compress ->
@@ -143,11 +150,12 @@ class Rebalancer:
         committed token stream instead -- the lossy hand-off.  The
         request's ``quality_floor`` bounds how far down the re-placement
         may degrade."""
-        meta = peek_slot_meta(blob)
+        hdr = peek_slot_header(blob)
+        meta = hdr["request"]
         remaining = meta["max_new_tokens"] - len(meta["output"])
         need = len(meta["prompt"]) + meta["max_new_tokens"]
         dec = fleet.router.route(
-            [h for h in handles if need <= h.engine.max_len], fleet.cfg,
+            [h for h in handles if h.engine.admissible(need)], fleet.cfg,
             sensitivity=meta["sensitivity"],
             prefill_tokens=0, decode_tokens=remaining,
             deadline_slack=deadline_slack,
@@ -157,22 +165,34 @@ class Rebalancer:
         if dec.target is None:
             return None
         target = fleet.handles[dec.target]
-        if src_tier and getattr(target, "tier", None) is not None \
-                and target.tier.name != src_tier:
+        tier_change = src_tier and getattr(target, "tier", None) is not None \
+            and target.tier.name != src_tier
+        # a blob can only inject exactly where its wire format lands:
+        # v1 (dense rows) on a dense engine, v2 (live pages) on a paged
+        # engine with the same page size -- anything else re-prefills
+        # the committed stream (lossy), like a cross-tier move
+        version = hdr.get("version", 1)
+        wire_ok = (version == 1
+                   and not getattr(target.engine, "paged", False)) \
+            or (version == 2 and getattr(target.engine, "paged", False)
+                and target.engine.page_size == hdr.get("page_size", 0))
+        if tier_change or not wire_ok:
             req = request_from_dict(meta)
             req.done, req.slot = False, -1
             placed = target.engine.add_request(req,
                                                committed=meta["output"])
             assert placed, f"router sent {req.rid} to a full engine"
             fleet.reassign(req, target.name)
-            fleet.record_tier_change(req.rid, src_tier, target.tier.name,
-                                     reason=f"{reason}: "
-                                            f"{dec.cause or 'tier change'}",
-                                     engine=target.name)
-            fleet.ticket_transition(
-                req.rid, RequestState.DECODING,
-                reason=f"{reason} (lossy re-prefill on {target.tier.name})",
-                engine=target.name)
+            if tier_change:
+                fleet.record_tier_change(
+                    req.rid, src_tier, target.tier.name,
+                    reason=f"{reason}: {dec.cause or 'tier change'}",
+                    engine=target.name)
+                why = f"{reason} (lossy re-prefill on {target.tier.name})"
+            else:
+                why = f"{reason} (lossy re-prefill: kv geometry)"
+            fleet.ticket_transition(req.rid, RequestState.DECODING,
+                                    reason=why, engine=target.name)
             return MigrationRecord(rid=req.rid, src=src, dst=target.name,
                                    reason=reason, step=0,
                                    wire_bytes=len(msgpack.packb(meta)),
@@ -194,10 +214,22 @@ class Rebalancer:
     # -- planned live migration ----------------------------------------------
     @staticmethod
     def fits(req, handle) -> bool:
-        """Will this request's full decode fit the handle's per-slot
-        context budget?  (position + remaining == prompt + max_new.)"""
-        return len(req.prompt) + req.max_new_tokens \
-            <= handle.engine.max_len
+        """Could this request's full decode ever fit the handle's
+        context/page budget?  (position + remaining == prompt +
+        max_new; occupancy is the router's concern, not fit.)"""
+        return handle.engine.admissible(
+            len(req.prompt) + req.max_new_tokens)
+
+    @staticmethod
+    def same_wire(a, b) -> bool:
+        """Can a slot snapshot extracted from ``a`` inject on ``b``?
+        Dense rows (v1) travel dense->dense; live pages (v2) travel
+        paged->paged at one page size.  Everything else re-prefills."""
+        ea, eb = a.engine, b.engine
+        if getattr(ea, "paged", False) != getattr(eb, "paged", False):
+            return False
+        return not getattr(ea, "paged", False) \
+            or ea.page_size == eb.page_size
 
     @staticmethod
     def same_tier(a, b) -> bool:
@@ -211,14 +243,22 @@ class Rebalancer:
     def migrate(self, src, dst, slot: int, fleet, *,
                 reason: str = "rebalance") -> MigrationRecord:
         """Move one in-flight slot src->dst, picking the right wire:
-        bit-exact ``live_migrate`` within a tier, ``lossy_migrate``
-        (re-prefill of the committed stream) across tiers."""
-        if self.same_tier(src, dst):
-            return self.live_migrate(src, dst, slot, fleet, reason=reason)
-        return self.lossy_migrate(src, dst, slot, fleet, reason=reason)
+        bit-exact ``live_migrate`` within a tier and wire geometry,
+        ``lossy_migrate`` (re-prefill of the committed stream) across
+        tiers or across KV layouts (dense<->paged, page-size change)."""
+        if not self.same_tier(src, dst):
+            return self.lossy_migrate(src, dst, slot, fleet, reason=reason)
+        if not self.same_wire(src, dst):
+            # same weights, but the cache state has no common layout:
+            # lossy by geometry, not by quality -- no tier change lands
+            return self.lossy_migrate(src, dst, slot, fleet,
+                                      reason=f"{reason} (kv geometry)",
+                                      tier_change=False)
+        return self.live_migrate(src, dst, slot, fleet, reason=reason)
 
     def lossy_migrate(self, src, dst, slot: int, fleet, *,
-                      reason: str = "rebalance") -> MigrationRecord:
+                      reason: str = "rebalance",
+                      tier_change: bool = True) -> MigrationRecord:
         """Cross-tier hand-off: the destination runs *distinct weights*,
         so the donor's cache rows are untranslatable and bit-exactness
         cannot be claimed.  Only the request metadata + committed token
@@ -254,10 +294,12 @@ class Rebalancer:
         placed = dst.engine.add_request(req2, committed=committed)
         assert placed, "lossy_migrate needs a free destination slot"
         fleet.reassign(req2, dst.name)
-        fleet.record_tier_change(
-            req2.rid, getattr(src, "tier", None) and src.tier.name or "",
-            getattr(dst, "tier", None) and dst.tier.name or "",
-            reason=reason, engine=dst.name)
+        if tier_change:
+            fleet.record_tier_change(
+                req2.rid,
+                getattr(src, "tier", None) and src.tier.name or "",
+                getattr(dst, "tier", None) and dst.tier.name or "",
+                reason=reason, engine=dst.name)
         fleet.ticket_transition(
             req2.rid, RequestState.DECODING,
             reason=f"{reason} (lossy re-prefill)", engine=dst.name)
@@ -274,6 +316,8 @@ class Rebalancer:
             "slot does not fit the target's context budget"
         assert self.same_tier(src, dst), \
             "cross-tier moves must use lossy_migrate (distinct weights)"
+        assert self.same_wire(src, dst), \
+            "dense<->paged / page-size moves must use lossy_migrate"
         snap = src.engine.extract_slot(slot)
         if fleet.tracer is not None:
             # hop span opens on the donor and rides the wire format
@@ -355,7 +399,8 @@ class Rebalancer:
                             key=lambda kv: kv[1].max_new_tokens
                             - len(kv[1].output))
             if fleet.router.eligible(req.sensitivity, idlest) \
-                    and self.fits(req, idlest):
+                    and idlest.engine.can_admit(
+                        len(req.prompt) + req.max_new_tokens):
                 return [self.migrate(busiest, idlest, slot, fleet)]
             return []
         return self.upshift(fleet, healthy)
@@ -380,10 +425,10 @@ class Rebalancer:
                     continue
                 targets = [
                     t for t in healthy
-                    if t is not h and t.engine.free_slots
-                    and getattr(t, "reachable", True)
+                    if t is not h and getattr(t, "reachable", True)
                     and self._tier_quality(t) > self._tier_quality(h)
-                    and self.fits(req, t)
+                    and t.engine.can_admit(
+                        len(req.prompt) + req.max_new_tokens)
                     and fleet.router.eligible(req.sensitivity, t)]
                 if not targets:
                     continue

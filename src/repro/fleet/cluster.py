@@ -27,6 +27,7 @@ complete.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
@@ -177,13 +178,27 @@ class FleetController:
 
     # -- admission control ----------------------------------------------------
     def submit(self, req: Request | RequestSpec):
-        """Admit work.
+        """Admit work: a ``RequestSpec`` returns a ``RequestTicket``
+        (None when the queue is full -- backpressure, the caller must
+        back off).
 
-        A ``RequestSpec`` returns a ``RequestTicket`` (None when the
-        queue is full -- backpressure, the caller must back off).  A
-        legacy mutable ``Request`` returns bool, the pre-lifecycle
-        contract; a ticket is still created internally so priorities,
-        deadlines and the event log stay uniform."""
+        Submitting a legacy mutable ``Request`` is deprecated: build a
+        ``RequestSpec`` (``spec_of_request`` converts) and track the
+        returned ticket instead.  The shim warns and delegates, keeping
+        the old bool contract."""
+        if isinstance(req, Request):
+            warnings.warn(
+                "FleetController.submit(Request) is deprecated; submit "
+                "a RequestSpec and use the returned RequestTicket "
+                "(spec_of_request converts an existing Request)",
+                DeprecationWarning, stacklevel=2)
+        return self._admit(req)
+
+    def _admit(self, req: Request | RequestSpec):
+        """Admission body shared by ``submit`` and ``run``: a legacy
+        ``Request`` returns bool, a ``RequestSpec`` a ticket; either way
+        a ticket is created internally so priorities, deadlines and the
+        event log stay uniform."""
         legacy = isinstance(req, Request)
         if legacy:
             engine_req = req
@@ -381,7 +396,8 @@ class FleetController:
         best = None
         now = self.clock()
         for h in handles:
-            if not h.healthy or h.engine.max_len < item.rows_needed \
+            if not h.healthy \
+                    or not h.engine.admissible(item.rows_needed) \
                     or not self.router.eligible(item.sensitivity, h):
                 continue
             est_resume = now + self.router.score(
@@ -564,7 +580,7 @@ class FleetController:
             # only offer work when the queue has room: the caller's
             # backlog is not an admission rejection
             while pending and len(self.queue) < self.queue_limit \
-                    and self.submit(pending[0]):
+                    and self._admit(pending[0]):
                 pending.pop(0)
             if not (pending or self.queue or self.inflight):
                 break

@@ -200,11 +200,13 @@ class Router:
         for q in sorted(by_quality, reverse=True):
             group = by_quality[q]
             tname = self._tier_of(group[0]).name
-            # capacity: a free slot whose context budget holds the
-            # request (fleets mix max_len tiers; prefill+decode is a
-            # lower bound on the rows the request will occupy)
-            ready = [h for h in group if h.engine.free_slots
-                     and h.engine.max_len >= prefill_tokens + decode_tokens]
+            # capacity: token-budget admission -- the engine decides
+            # whether prefill+decode tokens fit right now (dense: a free
+            # slot whose max_len holds them; paged: a free decode row
+            # AND enough free pages), so fleets mix dense and paged
+            # engines behind one gate
+            ready = [h for h in group
+                     if h.engine.can_admit(prefill_tokens + decode_tokens)]
             if not ready:
                 causes.append(f"{tname} saturated")
                 skips.append((q, "saturated"))

@@ -73,6 +73,7 @@ import numpy as np
 
 from repro import compression
 from repro.core.channel import AttestedSession
+from repro.core.migration import pack_slot
 from repro.core.validation import ValidationFramework
 from repro.fleet.balancer import wire_slot
 from repro.fleet.lifecycle import RequestState
@@ -189,6 +190,12 @@ class SpeculativeTierController:
         self.stats = SpecTierStats()
         self._spec: dict[str, _SpecReq] = {}     # rid -> speculative state
         self._local: set[str] = set()            # local-fallback rids
+        # rid -> packed committed-prefix snapshot, refreshed after every
+        # verify round (the fleet balancer's shadow sync skips tier-
+        # paired engines because a draft slot's output holds uncommitted
+        # tokens mid-round; right after a round it is exactly the
+        # committed stream, so the controller shadows it here instead)
+        self._shadow: dict[str, bytes] = {}
         self._dissolved = False
         # acceptance/resample randomness for distribution verify: its
         # own seeded stream (slot rngs drive the engines' sampling; the
@@ -412,9 +419,29 @@ class SpeculativeTierController:
                 continue             # retire loop transitions it DONE
             self._ticket(rid, RequestState.DRAFTING,
                          reason=f"{n_acc}/{len(tail)} accepted")
+            self._checkpoint(st)
         if self.telemetry is not None:
             self.telemetry.record_step(self.verify.name, n_committed, dt)
         return emitted
+
+    def _checkpoint(self, st: _SpecReq):
+        """Shadow the committed prefix.  Right after a verify round the
+        draft slot holds exactly the committed stream (any rejected
+        suffix was rolled back), so this snapshot can resume the request
+        from its last committed token if the draft engine fail-stops --
+        previously a draft death restarted every speculative request
+        from its prompt.  The drafter's sampling override is swapped for
+        the request's own policy so a failover resume decodes as the
+        request asked, not as the drafter was tuned."""
+        req = st.req
+        if req.slot not in self.draft.engine.requests:
+            return
+        snap = self.draft.engine.extract_slot(req.slot, keep=True)
+        snap.arrays = dataclasses.replace(
+            snap.arrays,
+            temperature=jnp.float32(req.temperature),
+            top_k=jnp.int32(req.top_k))
+        self._shadow[req.rid] = pack_slot(snap)
 
     def _ticket(self, rid: str, state, *, reason: str = ""):
         """Lifecycle transition on the shared audit log (no-op when the
@@ -443,6 +470,7 @@ class SpeculativeTierController:
 
     def _finish(self, rid: str, *, retired_done: bool = False):
         st = self._spec.pop(rid)
+        self._shadow.pop(rid, None)
         if not retired_done:
             st.req.done = True
         if st.req.slot in self.draft.engine.requests:
@@ -457,6 +485,7 @@ class SpeculativeTierController:
         discarded.  Returns False for requests this pair never attached
         (local fallbacks keep their plain slot for the caller to free)."""
         self._local.discard(rid)
+        self._shadow.pop(rid, None)
         st = self._spec.pop(rid, None)
         if st is None:
             return False
@@ -490,6 +519,7 @@ class SpeculativeTierController:
         committed tokens survive the park.  Returns False for requests
         this pair never attached."""
         st = self._spec.pop(rid, None)
+        self._shadow.pop(rid, None)
         if st is None:
             return False
         req = st.req
@@ -517,13 +547,17 @@ class SpeculativeTierController:
             if st.replica_slot in self.verify.engine.requests:
                 self.verify.engine.retire(st.replica_slot)
         self._spec.clear()
+        self._shadow.clear()     # live again on a balancer-shadowed engine
 
     # -- membership events ---------------------------------------------------
     def on_engine_failure(self, name: str):
         """A pair member fail-stopped.  Verify died: speculative slots
         drop their uncommitted tails and continue local-only on the
-        draft engine.  Draft died: replica slots are freed; the fleet's
-        failover path restarts the requests from their prompts."""
+        draft engine.  Draft died: replica slots are freed and the
+        per-round shadow checkpoints are handed to the balancer, so the
+        fleet's failover path resumes each covered request from its last
+        committed token -- only requests that never survived a verify
+        round restart from their prompts."""
         if self._dissolved:
             return
         self._dissolved = True
@@ -534,5 +568,14 @@ class SpeculativeTierController:
             for st in self._spec.values():
                 if st.replica_slot in self.verify.engine.requests:
                     self.verify.engine.retire(st.replica_slot)
-            self._local.clear()     # failover restarts them from prompt
+            if self.fleet is not None and self._shadow:
+                # seed the balancer's shadow store (it skips tier-paired
+                # engines during regular sync): ``Rebalancer.on_failure``
+                # re-places these exactly like any dense failover
+                store = self.fleet.balancer.shadow.setdefault(
+                    self.draft.name, {})
+                for rid, blob in self._shadow.items():
+                    store.setdefault(rid, blob)
+            self._local.clear()     # uncovered rids restart from prompt
         self._spec.clear()
+        self._shadow.clear()

@@ -102,6 +102,24 @@ def decode_attention(q, k_cache, v_cache, abs_pos, positions, *,
                                   window=window, softcap=softcap)
 
 
+def paged_decode_attention(q, k_pool, v_pool, page_table, positions, *,
+                           page_size, window=0, softcap=0.0):
+    """One-token attention over a paged KV pool (see decode_attention.py).
+
+    q: (B,1,H,D); pools: (P, page_size, KV, D); page_table: (B, NP)
+    int32, -1 = unmapped; positions: (B,).
+    """
+    if _pallas_ok():
+        from repro.kernels import decode_attention as da
+        return da.paged_decode_attention(q, k_pool, v_pool, page_table,
+                                         positions, window=window,
+                                         softcap=softcap,
+                                         interpret=_interpret())
+    return attn_ref.paged_decode_attend(q, k_pool, v_pool, page_table,
+                                        positions, page_size=page_size,
+                                        window=window, softcap=softcap)
+
+
 # --------------------------------------------------------------------------
 # speculative verification
 # --------------------------------------------------------------------------

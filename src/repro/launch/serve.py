@@ -59,7 +59,16 @@ def main():
                           decode_tokens=r.max_new_tokens,
                           workspace_bytes=10 ** 7)
         print(f"{r.rid}[{r.sensitivity}] -> {d.target} ({d.reason})")
-    outs = engine.run(reqs)
+    # drive the engine directly: admit while slots free, then batch-step
+    # (Engine.run() is deprecated in favor of exactly this loop)
+    pending = list(reqs)
+    outs: dict[str, list[int]] = {}
+    while pending or engine.requests:
+        while pending and engine.add_request(pending[0]):
+            outs[pending[0].rid] = pending[0].output
+            pending.pop(0)
+        if engine.requests:
+            engine.step()
     dt = time.time() - t0
     total_toks = sum(len(v) for v in outs.values())
     for rid, toks in sorted(outs.items()):

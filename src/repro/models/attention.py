@@ -259,3 +259,37 @@ def decode_attend(q, k_cache, v_cache, abs_pos, positions, *,
     p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
     o = _gqa_out(p, v_cache)
     return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def paged_decode_attend(q, k_pool, v_pool, page_table, positions, *,
+                        page_size, window=0, softcap=0.0):
+    """Cached attention over a paged KV pool (reference path).
+
+    q: (B, 1, H, D); k_pool/v_pool: (P, page_size, KV, D) shared page
+    pools; page_table: (B, NP) int32 page ids, -1 = unmapped (dead rows
+    use an all -1 table); positions: (B,) absolute decode position per
+    batch row.  Logical slot i of row b lives at offset i % page_size of
+    page page_table[b, i // page_size]; unmapped pages contribute
+    nothing.  Delegates to `decode_attend` after a gather, which keeps
+    the numerics (f32 softmax, window, softcap) identical to the dense
+    path.
+    """
+    B = q.shape[0]
+    NP = page_table.shape[1]
+    ps = page_size
+    safe = jnp.maximum(page_table, 0)                 # (B, NP)
+    k_cache = k_pool[safe].reshape(B, NP * ps, *k_pool.shape[2:])
+    v_cache = v_pool[safe].reshape(B, NP * ps, *v_pool.shape[2:])
+    idx = jnp.arange(NP * ps, dtype=jnp.int32)[None]  # (1, NP*ps)
+    mapped = jnp.repeat(page_table >= 0, ps, axis=1)  # (B, NP*ps)
+    abs_pos = jnp.where(mapped, idx, -1)
+    o = decode_attend(q, k_cache, v_cache, abs_pos, positions,
+                      window=window, softcap=softcap)
+    # fully-dead rows (no mapped page) are exactly zero, matching the
+    # Pallas kernel's skipped-block semantics instead of an all-masked
+    # uniform softmax
+    live = jnp.logical_and(
+        page_table >= 0,
+        jnp.arange(NP, dtype=jnp.int32)[None] * ps <= positions[:, None],
+    ).any(axis=1)
+    return jnp.where(live[:, None, None, None], o, 0)

@@ -86,6 +86,50 @@ def _write_cache(cache, lspec, k, v, positions):
     return new
 
 
+def make_paged_attn_cache(cfg: ModelConfig, pages: int, page_size: int,
+                          dtype=None) -> dict:
+    """Shared KV page pools for one attention layer.
+
+    Unlike the dense per-row cache there is no batch axis: every batch
+    row's pages live in one (pages, page_size, KV, Dh) pool and rows
+    address it through a (B, NP) page table woven in as
+    ``cache["page_table"]`` before the forward pass.  Local
+    (sliding-window) layers use the same full logical layout -- the
+    window is enforced by the attend mask, not by a ring buffer --
+    which keeps one write rule for every attn layer.
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k_pool": jnp.zeros((pages, page_size, KV, Dh), dtype),
+        "v_pool": jnp.zeros((pages, page_size, KV, Dh), dtype),
+    }
+
+
+def _write_pages(cache, k, v, positions):
+    """Scatter k/v (B,S,KV,Dh) at absolute ``positions`` (B,S) into the
+    shared page pools through ``cache["page_table"]`` (B,NP).
+
+    Rows whose page entry is -1 (dead/inactive) aim at the
+    out-of-bounds sentinel index P so the write drops -- never a
+    negative index, which would wrap instead of dropping.  Returns pools
+    only (no page_table): the master table lives in the engine state.
+    """
+    P, ps = cache["k_pool"].shape[0], cache["k_pool"].shape[1]
+    pt = cache["page_table"]
+    page = jnp.take_along_axis(pt, positions // ps, axis=1)   # (B, S)
+    page = jnp.where(page < 0, P, page)
+    off = positions % ps
+    kv_shape = k.shape[2:]
+    page2, off2 = page.reshape(-1), off.reshape(-1)
+    k2 = k.reshape((-1,) + kv_shape)
+    v2 = v.reshape((-1,) + kv_shape)
+    return {
+        "k_pool": cache["k_pool"].at[page2, off2].set(k2, mode="drop"),
+        "v_pool": cache["v_pool"].at[page2, off2].set(v2, mode="drop"),
+    }
+
+
 def attention_apply(p, x, *, cfg: ModelConfig, lspec: LayerSpec, mode: str,
                     positions, cache=None, mesh=None, rules=None,
                     kv_x=None, causal=True, cross=False):
@@ -128,13 +172,25 @@ def attention_apply(p, x, *, cfg: ModelConfig, lspec: LayerSpec, mode: str,
         v = shd.constrain(v, mesh, ("batch", None, "act_kv_heads", None), rules)
 
     if mode == "decode":
-        new_cache = _write_cache(cache, lspec, k, v, positions)
-        # positions ride through whole: one column is the classic single-
-        # token step; S>1 columns are a speculative verify window where
-        # every query carries its own causal horizon
-        o = attn_ref.decode_attend(q, new_cache["k"], new_cache["v"],
-                                   new_cache["abs_pos"], positions,
-                                   window=window, softcap=cfg.attn_softcap)
+        if "k_pool" in cache:
+            # paged path: single-token steps only (wide verify windows
+            # stay on the dense path)
+            from repro.kernels import ops as kops
+            new_cache = _write_pages(cache, k, v, positions)
+            o = kops.paged_decode_attention(
+                q, new_cache["k_pool"], new_cache["v_pool"],
+                cache["page_table"], positions[:, 0],
+                page_size=cache["k_pool"].shape[1],
+                window=window, softcap=cfg.attn_softcap)
+        else:
+            new_cache = _write_cache(cache, lspec, k, v, positions)
+            # positions ride through whole: one column is the classic
+            # single-token step; S>1 columns are a speculative verify
+            # window where every query carries its own causal horizon
+            o = attn_ref.decode_attend(q, new_cache["k"], new_cache["v"],
+                                       new_cache["abs_pos"], positions,
+                                       window=window,
+                                       softcap=cfg.attn_softcap)
     else:
         from repro.kernels import ops as kops
         if cross:
@@ -153,6 +209,8 @@ def attention_apply(p, x, *, cfg: ModelConfig, lspec: LayerSpec, mode: str,
                 pos = jnp.broadcast_to(jnp.arange(k.shape[1])[None],
                                        (B, k.shape[1]))
                 new_cache = _write_cache(cache, lspec, k, v, pos)
+            elif "k_pool" in cache:
+                new_cache = _write_pages(cache, k, v, positions)
             else:
                 new_cache = _write_cache(cache, lspec, k, v, positions)
 

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Optional
@@ -115,6 +116,9 @@ class SlotSnapshot:
     #                                  hop span opened on the donor rides
     #                                  the blob so the destination closes
     #                                  that exact span (pack_slot meta)
+    version: int = 1                 # wire format: 1 = dense cache rows,
+    #                                  2 = live pages only (paged engine)
+    page_size: int = 0               # v2 only: tokens per KV page
 
     @property
     def rid(self) -> str:
@@ -131,6 +135,9 @@ class SlotSnapshot:
 
 class Engine:
     """Single-replica serving engine for one model on one mesh."""
+
+    paged = False                    # dense (slots, max_len) KV grid
+    page_size = 0                    # >0 only on paged engines
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, mesh=None, rules=None, seed: int = 0,
@@ -195,6 +202,27 @@ class Engine:
     @property
     def free_slots(self) -> list[int]:
         return [i for i in range(self.slots) if i not in self.requests]
+
+    # -- capacity (token-budget admission surface) -------------------------
+    # The fleet layer gates placement through these three instead of
+    # counting free slots, so dense and paged engines answer the same
+    # questions: can this request start *now*, could it *ever* fit here,
+    # and how many KV tokens of headroom remain.
+    def can_admit(self, need_tokens: int) -> bool:
+        """True if a request needing ``need_tokens`` KV slots (prompt +
+        max_new) can be admitted right now."""
+        return bool(self.free_slots) and need_tokens <= self.max_len
+
+    def admissible(self, need_tokens: int) -> bool:
+        """True if such a request could ever fit on this engine (ignoring
+        current occupancy)."""
+        return need_tokens <= self.max_len
+
+    @property
+    def free_token_budget(self) -> int:
+        """KV-token headroom: dense engines pin a full max_len row per
+        request regardless of its length."""
+        return len(self.free_slots) * self.max_len
 
     def add_request(self, req: Request, *,
                     committed: list[int] | None = None) -> bool:
@@ -600,7 +628,15 @@ class Engine:
             last_token=s.last_token.at[slot].set(last))
 
     def run(self, reqs: list[Request]) -> dict[str, list[int]]:
-        """Convenience: serve a request list to completion."""
+        """Deprecated: drive ``add_request``/``step`` directly (or submit
+        ``RequestSpec``s to a ``FleetController``)."""
+        warnings.warn(
+            "Engine.run() is deprecated; drive add_request()/step() "
+            "directly or submit RequestSpecs to a FleetController",
+            DeprecationWarning, stacklevel=2)
+        return self._run(reqs)
+
+    def _run(self, reqs: list[Request]) -> dict[str, list[int]]:
         pending = list(reqs)
         outputs = {}
         while pending or self.requests:

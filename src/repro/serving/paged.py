@@ -1,0 +1,535 @@
+"""Paged-KV serving engine: token-budget continuous batching.
+
+Where the dense ``Engine`` pins one ``max_len`` cache row per request,
+``PagedEngine`` carves its KV memory into fixed-size *pages* shared by
+every batch row: a ``PageAllocator`` hands out pages, each request holds
+a page table (logical position i lives at offset ``i % page_size`` of
+page ``page_table[i // page_size]``), and admission is gated by the free
+page budget rather than a free-slot count.  A short request reserves
+only ``ceil((prompt + max_new) / page_size)`` pages, so an engine admits
+and decodes far more concurrent requests than its dense slot count at
+equal KV memory -- the classic vLLM block-table design, here behind the
+Pallas ``paged_decode_attention`` kernel.
+
+Migration ships *live pages only*: ``extract_slot`` gathers the
+``ceil(position / page_size)`` pages a request has actually written
+(plus its trimmed token prefix) into a v2 ``SlotSnapshot``, and
+``inject_slot`` re-allocates a fresh reservation on the destination and
+scatters the payload in.  Because pages are position-addressed, the v2
+payload is geometry-free up to the page size: same page size + same
+kernel program => bit-exact resume (the page-level contract that
+replaces the dense path's slots=1 discipline -- see ROADMAP Contracts).
+
+The decode batch width is still fixed (``rows``: the compiled program's
+batch dimension), but rows are cheap -- they carry no KV memory of their
+own -- so ``rows`` is sized for step throughput while the page pool is
+sized for memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import make_paged_attn_cache
+from repro.models.model import forward
+from repro.serving.engine import (Request, SlotArrays, SlotSnapshot,
+                                  request_from_dict, request_to_dict)
+from repro.serving.sampling import sample
+
+
+class PageAllocator:
+    """LIFO free-list allocator over a fixed pool of KV pages.
+
+    Tracks ownership so conservation is checkable at any point:
+    ``len(free) + len(owners) == total`` always, no page is handed out
+    twice, and freeing a page that is not owned raises.
+    """
+
+    def __init__(self, total: int):
+        self.total = total
+        self._free: list[int] = list(range(total - 1, -1, -1))
+        self.owners: dict[int, str] = {}
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self.owners)
+
+    def alloc(self, n: int, owner: str) -> list[int] | None:
+        """Hand out ``n`` pages to ``owner`` or None (never partial)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self.owners[p] = owner
+        return pages
+
+    def free(self, pages: list[int]):
+        for p in pages:
+            if p not in self.owners:
+                raise ValueError(f"freeing unowned page {p}")
+            del self.owners[p]
+            self._free.append(p)
+
+    def check(self):
+        """Conservation invariant; raises AssertionError on violation."""
+        assert len(self._free) + len(self.owners) == self.total, \
+            (len(self._free), len(self.owners), self.total)
+        assert len(set(self._free)) == len(self._free), "free-list dup"
+        assert not (set(self._free) & set(self.owners)), \
+            "page both free and owned"
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class PagedEngineState:
+    """Decode-loop state: like ``EngineState`` but caches are shared
+    page pools and the per-row geometry lives in ``page_table``."""
+    caches: list                     # [group][layer] {"attn": {k/v_pool}}
+    page_table: jax.Array            # (B, NP) int32 page ids, -1 = unmapped
+    tokens: jax.Array                # (B, max_len)
+    positions: jax.Array             # (B,)
+    last_token: jax.Array            # (B,)
+    active: jax.Array                # (B,) bool
+    rng: jax.Array                   # (B,)
+    step_count: jax.Array            # ()
+    temperature: jax.Array           # (B,)
+    top_k: jax.Array                 # (B,)
+
+
+class PagedEngine:
+    """Drop-in engine with the dense ``Engine``'s duck-type surface
+    (add_request/step/retire/extract_slot/inject_slot/rollback_slot/...)
+    over a paged KV cache.  Attention-mixer models only (rwkv/mamba
+    state is not paged); wide verify stays on the dense path."""
+
+    paged = True
+
+    def __init__(self, cfg: ModelConfig, params, *, page_size: int = 16,
+                 pages: int | None = None, rows: int = 4,
+                 max_len: int = 256, mesh=None, rules=None, seed: int = 0,
+                 profile_hook=None):
+        assert all(ls.mixer in ("attn", "local")
+                   for b in cfg.blocks for ls in b.layers) \
+            and not cfg.cross_attention and not cfg.encoder_blocks, \
+            "PagedEngine requires an attention-only decoder model"
+        assert max_len % page_size == 0, (max_len, page_size)
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.np_pages = max_len // page_size     # page-table width NP
+        # default pool: every row could hold a full max_len request --
+        # same memory as the dense grid; smaller pools over-subscribe
+        # rows, larger pools are useless (rows cap concurrency)
+        self.pages = pages if pages is not None \
+            else rows * self.np_pages
+        self.rows = rows
+        self.slots = rows                        # duck-type: load metric
+        self.max_len = max_len
+        self.mesh = mesh
+        self.rules = rules
+        self.requests: dict[int, Request] = {}
+        self.allocator = PageAllocator(self.pages)
+        self.state = self._fresh_state(seed)
+        self._decode_fn = jax.jit(partial(_paged_decode_step, cfg=cfg,
+                                          mesh=mesh, rules=rules))
+        self._prefill_fn = jax.jit(partial(_paged_prefill, cfg=cfg,
+                                           mesh=mesh, rules=rules),
+                                   static_argnames=("slot", "plen"))
+        self.profile_hook = profile_hook
+        self._compiled: set[str] = set()
+
+    def _profiled(self, key: str, fn):
+        if key in self._compiled:
+            return fn()
+        self._compiled.add(key)
+        if self.profile_hook is None:
+            return fn()
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        self.profile_hook(key, time.perf_counter() - t0)
+        return out
+
+    # -- state ------------------------------------------------------------
+    def _fresh_state(self, seed: int) -> PagedEngineState:
+        B = self.rows
+        caches = []
+        for block in self.cfg.blocks:
+            layers = []
+            for _ in block.layers:
+                one = {"attn": make_paged_attn_cache(
+                    self.cfg, self.pages, self.page_size)}
+                layers.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (block.repeats,) + a.shape).copy(), one))
+            caches.append(layers)
+        return PagedEngineState(
+            caches=caches,
+            page_table=jnp.full((B, self.np_pages), -1, jnp.int32),
+            tokens=jnp.zeros((B, self.max_len), jnp.int32),
+            positions=jnp.zeros((B,), jnp.int32),
+            last_token=jnp.zeros((B,), jnp.int32),
+            active=jnp.zeros((B,), bool),
+            rng=jax.vmap(jax.random.key)(jnp.arange(seed, seed + B,
+                                                    dtype=jnp.uint32)),
+            step_count=jnp.zeros((), jnp.int32),
+            temperature=jnp.zeros((B,), jnp.float32),
+            top_k=jnp.zeros((B,), jnp.int32),
+        )
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def free_slots(self) -> list[int]:
+        return [i for i in range(self.rows) if i not in self.requests]
+
+    def _pages_for(self, need_tokens: int) -> int:
+        return -(-need_tokens // self.page_size)
+
+    def can_admit(self, need_tokens: int) -> bool:
+        return (bool(self.free_slots)
+                and need_tokens <= self.max_len
+                and self._pages_for(need_tokens) <= self.allocator.free_pages)
+
+    def admissible(self, need_tokens: int) -> bool:
+        return (need_tokens <= self.max_len
+                and self._pages_for(need_tokens) <= self.allocator.total)
+
+    @property
+    def free_token_budget(self) -> int:
+        if not self.free_slots:
+            return 0
+        return self.allocator.free_pages * self.page_size
+
+    # -- request lifecycle --------------------------------------------------
+    def _row_pages(self, row: int) -> list[int]:
+        pt = np.asarray(self.state.page_table[row])
+        return [int(p) for p in pt if p >= 0]
+
+    def add_request(self, req: Request, *,
+                    committed: list[int] | None = None) -> bool:
+        """Admit iff a decode row is free AND the full reservation
+        (``ceil((prompt + max_new) / page_size)`` pages) fits the free
+        page budget -- reserving up front means an admitted request can
+        never deadlock mid-decode waiting for pages."""
+        free = self.free_slots
+        if not free:
+            return False
+        need = len(req.prompt) + req.max_new_tokens
+        assert need <= self.max_len
+        pages = self.allocator.alloc(self._pages_for(need), req.rid)
+        if pages is None:
+            return False
+        row = free[0]
+        req.slot = row
+        self.requests[row] = req
+        prefix = np.asarray(req.prompt, np.int32)
+        if committed:
+            req.output[:] = list(committed)
+            prefix = np.concatenate(
+                [prefix, np.asarray(committed, np.int32)])
+        plen = len(prefix)
+        pt_row = np.full((self.np_pages,), -1, np.int32)
+        pt_row[:len(pages)] = pages
+        s = self.state
+        self.state = dataclasses.replace(
+            s,
+            page_table=s.page_table.at[row].set(jnp.asarray(pt_row)),
+            temperature=s.temperature.at[row].set(req.temperature),
+            top_k=s.top_k.at[row].set(req.top_k))
+        prompt = jnp.asarray(prefix, jnp.int32)[None]
+        self.state = self._profiled(
+            f"prefill[plen={plen}]",
+            lambda: self._prefill_fn(self.params, self.state, prompt,
+                                     slot=row, plen=plen))
+        return True
+
+    def step(self, *, auto_retire: bool = True) -> dict[str, int]:
+        if not self.requests:
+            return {}
+        self.state, toks = self._profiled(
+            "decode", lambda: self._decode_fn(self.params, self.state))
+        toks = np.asarray(toks)
+        emitted = {}
+        for row, req in list(self.requests.items()):
+            if req.done:
+                continue
+            t = int(toks[row])
+            req.output.append(t)
+            emitted[req.rid] = t
+            if auto_retire and len(req.output) >= req.max_new_tokens:
+                req.done = True
+                self.retire(row)
+        return emitted
+
+    def retire(self, row: int):
+        self.requests.pop(row, None)
+        pages = self._row_pages(row)
+        if pages:
+            self.allocator.free(pages)
+        s = self.state
+        self.state = dataclasses.replace(
+            s,
+            page_table=s.page_table.at[row].set(-1),
+            active=s.active.at[row].set(False))
+
+    # -- per-slot live migration (v2 wire: live pages only) -----------------
+    def extract_slot(self, slot: int, *, keep: bool = False) -> SlotSnapshot:
+        """Detach one request shipping only its live pages.
+
+        The payload's cache leaves are (R, n_live, page_size, KV, Dh)
+        where ``n_live = ceil(position / page_size)`` -- position-ordered
+        pages, free of this engine's pool indices -- plus the token
+        prefix trimmed to the live region.  Wire version 2.
+        """
+        req = self.requests[slot]
+        pos = int(self.state.positions[slot])
+        ps = self.page_size
+        n_live = max(1, -(-pos // ps))
+        live = jnp.asarray(
+            np.asarray(self._row_pages(slot)[:n_live], np.int32))
+
+        def gather(layer):
+            a = layer["attn"]
+            return {"attn": {"k": a["k_pool"][:, live],
+                             "v": a["v_pool"][:, live]}}
+
+        arrays = SlotArrays(
+            caches=[[gather(l) for l in grp]
+                    for grp in self.state.caches],
+            tokens=self.state.tokens[slot, :n_live * ps],
+            position=self.state.positions[slot],
+            last_token=self.state.last_token[slot],
+            rng=self.state.rng[slot],
+            temperature=self.state.temperature[slot],
+            top_k=self.state.top_k[slot],
+        )
+        snap = SlotSnapshot(
+            arrays=arrays,
+            request=request_to_dict(req),
+            config_name=self.cfg.name,
+            step=int(self.state.step_count),
+            version=2,
+            page_size=ps,
+        )
+        if not keep:
+            self.retire(slot)
+        return snap
+
+    def inject_slot(self, snap: SlotSnapshot,
+                    slot: int | None = None) -> Request:
+        """Resume a v2 snapshot: allocate a fresh full reservation here,
+        scatter the live pages into it, pad the token prefix out to this
+        engine's max_len.  Page ids are engine-local, so the donor's and
+        destination's pools never need to line up -- only the page size
+        and kernel program do (the page-level contract)."""
+        assert self.cfg.name == snap.config_name, \
+            f"config mismatch: {self.cfg.name} != {snap.config_name}"
+        if snap.version != 2:
+            raise ValueError(
+                f"PagedEngine.inject_slot needs a v2 (paged) snapshot, "
+                f"got v{snap.version}; route dense blobs through "
+                f"lossy re-prefill")
+        if snap.page_size != self.page_size:
+            raise ValueError(
+                f"page_size mismatch: blob {snap.page_size} != engine "
+                f"{self.page_size} (cross-geometry moves are lossy)")
+        a = snap.arrays
+        req = request_from_dict(snap.request)
+        need = len(req.prompt) + req.max_new_tokens
+        assert need <= self.max_len, (need, self.max_len)
+        n_live = a.caches[0][0]["attn"]["k"].shape[1]
+        pages = self.allocator.alloc(
+            max(self._pages_for(need), n_live), req.rid)
+        assert pages is not None, "no free page budget to inject into"
+        if slot is None:
+            free = self.free_slots
+            assert free, "no free row to inject into"
+            slot = free[0]
+        assert slot not in self.requests, f"row {slot} busy"
+        live = jnp.asarray(np.asarray(pages[:n_live], np.int32))
+
+        def scatter(pool_layer, pay_layer):
+            p, q = pool_layer["attn"], pay_layer["attn"]
+            return {"attn": {
+                "k_pool": p["k_pool"].at[:, live].set(
+                    q["k"].astype(p["k_pool"].dtype)),
+                "v_pool": p["v_pool"].at[:, live].set(
+                    q["v"].astype(p["v_pool"].dtype)),
+            }}
+
+        s = self.state
+        caches = [[scatter(l, pl_) for l, pl_ in zip(grp, pgrp)]
+                  for grp, pgrp in zip(s.caches, a.caches)]
+        pt_row = np.full((self.np_pages,), -1, np.int32)
+        pt_row[:len(pages)] = pages
+        tokens = jnp.zeros((self.max_len,), jnp.int32).at[
+            :a.tokens.shape[0]].set(a.tokens)
+        impl = str(jax.random.key_impl(s.rng))
+        rng = jax.random.wrap_key_data(
+            jax.random.key_data(s.rng).at[slot].set(
+                jax.random.key_data(a.rng)), impl=impl)
+        self.state = dataclasses.replace(
+            s,
+            caches=caches,
+            page_table=s.page_table.at[slot].set(jnp.asarray(pt_row)),
+            tokens=s.tokens.at[slot].set(tokens),
+            positions=s.positions.at[slot].set(a.position),
+            last_token=s.last_token.at[slot].set(a.last_token),
+            active=s.active.at[slot].set(True),
+            rng=rng,
+            temperature=s.temperature.at[slot].set(a.temperature),
+            top_k=s.top_k.at[slot].set(a.top_k))
+        req.slot = slot
+        self.requests[slot] = req
+        return req
+
+    def slot_like(self):
+        """Structure template for v2 wire deserialization.  Only the
+        pytree *structure* matters (deserialize_tree takes shapes and
+        dtypes from the blob -- the live-page axis varies per snapshot),
+        so leaves are placeholder ShapeDtypeStructs."""
+        ps, KV, Dh = (self.page_size, self.cfg.num_kv_heads,
+                      self.cfg.head_dim)
+        dt = jnp.dtype(self.cfg.dtype)
+
+        def layer(repeats):
+            sds = jax.ShapeDtypeStruct((repeats, 1, ps, KV, Dh), dt)
+            return {"attn": {"k": sds, "v": sds}}
+
+        return SlotArrays(
+            caches=[[layer(block.repeats) for _ in block.layers]
+                    for block in self.cfg.blocks],
+            tokens=jax.ShapeDtypeStruct((ps,), jnp.int32),
+            position=jax.ShapeDtypeStruct((), jnp.int32),
+            last_token=jax.ShapeDtypeStruct((), jnp.int32),
+            rng=jax.eval_shape(lambda: jax.random.key(0)),
+            temperature=jax.ShapeDtypeStruct((), jnp.float32),
+            top_k=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+
+    # -- speculative tier surface -------------------------------------------
+    @property
+    def supports_wide_verify(self) -> bool:
+        return False                 # single-token decode program only
+
+    def _force_slot_token(self, slot: int, token: int):
+        s = self.state
+        t = jnp.int32(token)
+        self.state = dataclasses.replace(
+            s,
+            tokens=s.tokens.at[slot, s.positions[slot] - 1].set(t),
+            last_token=s.last_token.at[slot].set(t))
+
+    def rollback_slot(self, slot: int, drafted: int, accepted: int,
+                      commit_token: int | None = None):
+        """Identical contract to the dense engine: stale page contents
+        past the rewound position stay behind but are invisible (the
+        attend mask cuts at ``position``) and are rewritten in place."""
+        s = self.state
+        p0 = int(s.positions[slot]) - drafted
+        assert p0 >= 0, (slot, drafted)
+        if commit_token is None:
+            new_pos = p0
+            last = s.tokens[slot, max(p0 - 1, 0)]
+            tokens = s.tokens
+        else:
+            assert 0 <= accepted <= drafted
+            new_pos = p0 + accepted + 1
+            last = jnp.int32(commit_token)
+            tokens = s.tokens.at[slot, new_pos - 1].set(commit_token)
+        self.state = dataclasses.replace(
+            s,
+            tokens=tokens,
+            positions=s.positions.at[slot].set(new_pos),
+            last_token=s.last_token.at[slot].set(last))
+
+
+# ---------------------------------------------------------------------------
+# jitted step functions
+# ---------------------------------------------------------------------------
+
+def _weave(caches, pt):
+    """Broadcast the master page table (B, NP) into every attn layer's
+    cache dict (stacked (R, B, NP)) so `attention_apply` can address the
+    shared pools per batch row."""
+    out = []
+    for grp in caches:
+        layers = []
+        for layer in grp:
+            a = dict(layer["attn"])
+            R = a["k_pool"].shape[0]
+            a["page_table"] = jnp.broadcast_to(pt[None], (R,) + pt.shape)
+            layers.append({"attn": a})
+        out.append(layers)
+    return out
+
+
+def _paged_prefill(params, state: PagedEngineState, prompt, *, slot: int,
+                   plen: int, cfg, mesh, rules):
+    """Prefill one row.  The pools are shared, so unlike the dense path
+    there is no per-slot cache slice/scatter-back: the batch=1 forward
+    writes straight into the row's reserved pages."""
+    pt_row = jax.lax.dynamic_slice_in_dim(state.page_table, slot, 1, 0)
+    caches = _weave(state.caches, pt_row)
+    _, caches, _ = forward(
+        params, {"tokens": prompt}, cfg=cfg, mode="prefill",
+        caches=caches, mesh=mesh, rules=rules)
+    tokens = jax.lax.dynamic_update_slice(
+        state.tokens, prompt, (jnp.int32(slot), jnp.int32(0)))
+    return dataclasses.replace(
+        state,
+        caches=caches,
+        tokens=tokens,
+        positions=state.positions.at[slot].set(plen),
+        last_token=state.last_token.at[slot].set(prompt[0, -1]),
+        active=state.active.at[slot].set(True),
+    )
+
+
+def _paged_decode_step(params, state: PagedEngineState, *, cfg, mesh,
+                       rules):
+    """One decode step for every active row.
+
+    Inactive rows decode on garbage like the dense path, but their
+    masking is structural rather than copy-on-write: their page-table
+    rows are swapped to -1, so their pool writes drop (out-of-bounds
+    sentinel) and their attends see only dead pages.  No cache
+    select/where is needed -- the pools only ever receive writes from
+    active rows."""
+    pt_eff = jnp.where(state.active[:, None], state.page_table, -1)
+    caches = _weave(state.caches, pt_eff)
+    pos = state.positions[:, None]
+    logits, caches, _ = forward(
+        params, {"tokens": state.last_token[:, None]}, cfg=cfg,
+        mode="decode", caches=caches, positions=pos,
+        mesh=mesh, rules=rules)
+    toks, rng = sample(logits[:, 0], state.rng, cfg,
+                       temperature=state.temperature, top_k=state.top_k)
+    toks = jnp.where(state.active, toks, 0)
+    tokens = jax.vmap(
+        lambda row, t, p: jax.lax.dynamic_update_index_in_dim(row, t, p, 0)
+    )(state.tokens, toks, state.positions)
+    return dataclasses.replace(
+        state,
+        caches=caches,
+        tokens=jnp.where(state.active[:, None], tokens, state.tokens),
+        positions=jnp.where(state.active, state.positions + 1,
+                            state.positions),
+        last_token=jnp.where(state.active, toks, state.last_token),
+        rng=rng,
+        step_count=state.step_count + 1,
+    ), toks

@@ -51,6 +51,50 @@ def synthetic_slot_snapshot(*, seed=0, repeats=1, max_len=16, kv_heads=1,
                         config_name="synthetic", step=out_len)
 
 
+def synthetic_paged_snapshot(*, seed=0, repeats=1, page_size=8,
+                             kv_heads=1, head_dim=4, plen=2, out_len=0,
+                             max_new=4):
+    """A v2 (paged-wire) SlotSnapshot with arbitrary geometry: cache
+    leaves are (repeats, n_live, page_size, kv, dh) live pages and the
+    token prefix is trimmed to the live region, exactly as
+    ``PagedEngine.extract_slot`` ships them."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.serving.engine import (Request, SlotArrays, SlotSnapshot,
+                                      request_to_dict)
+    rng = np.random.default_rng(seed)
+    pos = plen + out_len
+    n_live = max(1, -(-pos // page_size))
+    shape = (repeats, n_live, page_size, kv_heads, head_dim)
+    # slots at logical indices >= pos are unwritten (+0.0)
+    slot_idx = (np.arange(n_live * page_size)
+                .reshape(1, n_live, page_size, 1, 1))
+    live_mask = slot_idx < pos
+    k = jnp.asarray(np.where(live_mask, rng.normal(size=shape), 0.0),
+                    jnp.bfloat16)
+    v = jnp.asarray(np.where(live_mask, rng.normal(size=shape), 0.0),
+                    jnp.bfloat16)
+    tokens = jnp.asarray(
+        np.concatenate([rng.integers(1, 100, pos),
+                        np.zeros(n_live * page_size - pos)]), jnp.int32)
+    req = Request("syn-paged", np.asarray(rng.integers(1, 100, plen)),
+                  max_new_tokens=max_new)
+    req.output = list(map(int, rng.integers(1, 100, out_len)))
+    arrays = SlotArrays(
+        caches=[[{"attn": {"k": k, "v": v}}]],
+        tokens=tokens,
+        position=jnp.int32(pos),
+        last_token=jnp.int32(int(tokens[max(pos - 1, 0)])),
+        rng=jax.random.key(seed),
+        temperature=jnp.float32(0.0),
+        top_k=jnp.int32(0),
+    )
+    return SlotSnapshot(arrays=arrays, request=request_to_dict(req),
+                        config_name="synthetic", step=out_len,
+                        version=2, page_size=page_size)
+
+
 def assert_repack_roundtrip(snap, grow_to: int):
     """pack -> repack(grow) -> repack(shrink back) -> pack must be
     bit-exact on the wire; growing must never fail, shrinking below

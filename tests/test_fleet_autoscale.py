@@ -35,6 +35,7 @@ from repro.fleet import (Autoscaler, EngineHandle, EngineTemplate,
                          ScalePolicy, ScaleSignals, TERMINAL_STATES)
 from repro.models.init import init_params
 from repro.serving.engine import Engine, Request
+from repro.serving.paged import PagedEngine
 
 CFG = make_tiny(get("llama-1.5b"))
 PARAMS = None
@@ -98,6 +99,24 @@ def assert_conserved(fleet):
     for rid, (req, hname, _) in fleet.inflight.items():
         assert hname in fleet.handles, f"{rid} on deregistered {hname}"
         assert fleet.handles[hname].healthy, f"{rid} on dead {hname}"
+    # token-budget conservation: each engine's admission ledger must
+    # agree with an independent walk over its live rows
+    for name, handle in fleet.handles.items():
+        if not handle.healthy:
+            continue
+        eng = handle.engine
+        if getattr(eng, "paged", False):
+            eng.allocator.check()
+            held = sum(len(eng._row_pages(row)) for row in eng.requests)
+            assert eng.allocator.used_pages == held, \
+                (name, eng.allocator.used_pages, held)
+            want = (eng.allocator.free_pages * eng.page_size
+                    if eng.free_slots else 0)
+            assert eng.free_token_budget == want, (name,)
+        elif hasattr(eng, "free_token_budget"):
+            assert len(eng.free_slots) == eng.slots - len(eng.requests)
+            assert eng.free_token_budget \
+                == len(eng.free_slots) * eng.max_len, (name,)
 
 
 # -- policy decisions (pure, no engines) -------------------------------------
@@ -389,3 +408,70 @@ def test_chaos_soak_no_request_lost_or_duplicated():
         assert_conserved(fleet)
     healthy = [h for h in fleet.handles.values() if h.healthy]
     assert len(healthy) == 1
+
+
+def test_paged_pool_chaos_soak_conserves_token_budget():
+    """The soak again, on a paged-KV pool: the seed engine and every
+    autoscaler spawn are PagedEngines (page_size=8, pages=6 -- the page
+    budget, not the row count, is what admission spends), and the
+    per-step audit now extends conservation from requests to tokens:
+    on every engine, the pages the allocator has handed out equal the
+    pages held by live page-table rows, and the free-token budget is
+    exactly the unspent page budget.  After the churn drains, every
+    allocator must be empty -- a single leaked page here is a lost
+    token budget forever."""
+    clk = SimClock()
+
+    def paged_engine(seed):
+        return PagedEngine(CFG, _params(), page_size=8, pages=6,
+                           rows=4, max_len=MAX_LEN, seed=seed)
+
+    template = EngineTemplate(name="pauto", profile=EDGE, slots=4,
+                              max_len=MAX_LEN, seed=300,
+                              page_size=8, pages=6)
+    fleet = FleetController(
+        [EngineHandle("pbase", paged_engine(0), EDGE)],
+        authority=TrustAuthority(), clock=clk,
+        autoscaler=Autoscaler(template,
+                              ScalePolicy(min_engines=1, max_engines=3,
+                                          scale_up_queue_depth=2,
+                                          scale_down_util=0.3)))
+    rng = np.random.default_rng(7)
+    tickets = {}
+    for i in range(8):
+        rid = f"p{i}"
+        tickets[rid] = fleet.submit(greedy_spec(
+            rid, rng.integers(5, CFG.vocab_size, 6),
+            priority=(0, 5, 10)[i % 3]))
+    # each request reserves ceil((6+8)/8)=2 of 6 pages: three rows fit
+    # although four rows exist -- the page budget is the binding gate
+    assert fleet.handles["pbase"].engine.can_admit(14)
+    failed = False
+    for step in range(300):
+        clk.advance(0.05)
+        fleet.step()
+        assert_conserved(fleet)
+        if step >= 2 and not failed:
+            busy = [n for n in fleet.autoscaler.spawned
+                    if n in fleet.handles and fleet.handles[n].healthy
+                    and fleet.handles[n].engine.requests]
+            if busy:
+                fleet.fail(busy[0])
+                failed = True
+                assert_conserved(fleet)
+        if all(t.done for t in tickets.values()):
+            break
+    assert failed, "no spawned paged engine was ever busy"
+    assert all(t.state is RequestState.DONE for t in tickets.values()), \
+        {r: t.state.value for r, t in tickets.items() if not t.done}
+    for rid, t in tickets.items():
+        assert len(t.output) == 8, rid
+        terminals = [ev for ev in fleet.telemetry.events_of(rid)
+                     if ev.dst in {s.value for s in TERMINAL_STATES}]
+        assert len(terminals) == 1, (rid, terminals)
+    # idle pool: every page returned, every budget whole again
+    for handle in fleet.handles.values():
+        if handle.healthy:
+            eng = handle.engine
+            assert eng.allocator.used_pages == 0, handle.name
+            assert eng.free_token_budget == eng.pages * eng.page_size

@@ -108,6 +108,17 @@ class FakeEngine:
     def free_slots(self):
         return list(range(len(self.requests), self.slots))
 
+    # the token-budget capacity surface every engine speaks (dense form)
+    def can_admit(self, need_tokens):
+        return bool(self.free_slots) and need_tokens <= self.max_len
+
+    def admissible(self, need_tokens):
+        return need_tokens <= self.max_len
+
+    @property
+    def free_token_budget(self):
+        return len(self.free_slots) * self.max_len
+
 
 def fake_handle(name, tier, *, profile=None, cond=None, busy=0, slots=2):
     return EngineHandle(name, FakeEngine(busy=busy, slots=slots),

@@ -15,7 +15,8 @@ from repro.core.attestation import TrustAuthority
 from repro.core.daemon import CLOUD, EDGE, DeviceProfile
 from repro.core.migration import pack_slot, repack_slot
 from repro.core.validation import MarkerValidator
-from repro.fleet import EngineHandle, FleetController, percentile
+from repro.fleet import (EngineHandle, FleetController, RequestSpec,
+                         percentile)
 from repro.models.init import init_params
 from repro.serving.engine import Engine, Request
 
@@ -260,6 +261,44 @@ def test_wide_mode_refused_for_unsupported_mixers(monkeypatch):
     # stepwise is always legal
     SpeculativeTierController(draft, verify, fabric=Fabric(),
                               whitelist=set(), measurement="m")
+
+
+def test_draft_engine_failure_resumes_from_committed_prefix():
+    """The shadow-checkpoint satellite: the controller snapshots each
+    speculative slot's committed prefix after every verify round, so a
+    draft-engine crash no longer restarts covered requests from their
+    prompts -- failover resumes them from the last committed token on a
+    survivor, exactly like a dense shadow failover."""
+    fleet = mk_spec_fleet(gamma=4)
+    rng = np.random.default_rng(7)
+    tickets = [fleet.submit(RequestSpec(
+        rid=f"r{i}", prompt=rng.integers(5, CFG.vocab_size, 6),
+        max_new_tokens=12)) for i in range(3)]
+    ctl = fleet.spec_controllers["edge"]
+    for _ in range(60):
+        fleet.step()
+        if ctl._spec and all(st.committed >= 4
+                             for st in ctl._spec.values()):
+            break
+    committed = {rid: list(st.req.output[:st.committed])
+                 for rid, st in ctl._spec.items()}
+    assert len(committed) == 3
+    assert all(len(c) >= 4 for c in committed.values())
+    assert set(ctl._shadow) == set(committed)   # every round checkpointed
+
+    fleet.fail("edge")
+    while not all(t.done for t in tickets):
+        fleet.step()
+    for t in tickets:
+        out = t.output
+        assert len(out) == 12
+        # progress survived: the committed prefix is the resume point
+        assert out[:len(committed[t.rid])] == committed[t.rid], t.rid
+    # covered failovers are exact (v1 inject) resumes, not re-prefills
+    recs = [m for m in fleet.telemetry.migrations
+            if m.reason == "failover"]
+    assert {m.rid for m in recs} == set(committed)
+    assert all(not m.lossy for m in recs)
 
 
 def test_verify_engine_failure_degrades_to_local():
