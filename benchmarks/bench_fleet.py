@@ -100,6 +100,7 @@ def main():
     emit("fleet/unpack_inject_slot", timeit(inject) * 1e6)
 
     bench_paged(cfg, params)
+    bench_prefix(cfg, params)
     bench_priority_workload(cfg, params)
     bench_autoscale(cfg, params)
     bench_quality(cfg, params)
@@ -162,6 +163,97 @@ def bench_paged(cfg, params):
         dt = time.perf_counter() - t0
         emit(f"fleet/paged_tokens_per_s_{tag}", REQS * MAX_NEW / dt,
              f"{REQS} reqs x {MAX_NEW} new tokens")
+
+
+def bench_prefix(cfg, params):
+    """Prefix caching: time-to-first-token for a warm session vs a cold
+    one (a full-chain hit skips prefill entirely), the suffix-only v3
+    hand-off payload vs the full v2 one for the same warm slot, and the
+    hit rate of a two-tenant session workload through the router's
+    affinity scoring."""
+    from repro.core.attestation import TrustAuthority
+    from repro.core.daemon import EDGE
+    from repro.core.migration import pack_slot
+    from repro.fleet import EngineHandle, FleetController, RequestSpec
+    from repro.serving.engine import Request
+    from repro.serving.paged import PagedEngine
+
+    # TTFT at a long context, where prefill compute (not dispatch
+    # overhead) dominates: 504 prompt tokens in a 512-token row
+    eng = PagedEngine(cfg, params, page_size=8, rows=2, max_len=512,
+                      seed=0, prefix_cache=True)
+    rng = np.random.default_rng(0)
+    plen = 504
+    mk = lambda rid, toks: Request(rid, toks, max_new_tokens=4)
+
+    # compile cold prefill, decode, AND the warm-start path off the
+    # clock (same warmup prompt twice: cold then full-hit)
+    warmup = rng.integers(5, cfg.vocab_size, plen)
+    drain_engine(eng, [mk("jit-cold", warmup)])
+    drain_engine(eng, [mk("jit-warm", warmup)])
+
+    def ttft(rid, toks):
+        import jax
+        req = mk(rid, toks)
+        t0 = time.perf_counter()
+        assert eng.add_request(req)
+        eng.step()
+        jax.block_until_ready(eng.state.tokens)
+        dt = time.perf_counter() - t0
+        while eng.requests:
+            eng.step()
+        return dt, req
+
+    base = rng.integers(5, cfg.vocab_size, plen)
+    cold_s, cold = ttft("cold", base)    # unseen stream: full prefill
+    warm_s, warm = ttft("warm", base)    # donated chain: no forward
+    assert eng.last_prefix_hit == plen, eng.last_prefix_hit
+    assert warm.output == cold.output, "warm decode must be bit-exact"
+    assert warm_s < cold_s, (warm_s, cold_s)
+    emit("fleet/prefix_ttft_cold_us", cold_s * 1e6,
+         f"{plen}-token prefill")
+    emit("fleet/prefix_ttft_warm_us", warm_s * 1e6, "full-chain hit")
+    emit("fleet/prefix_ttft_speedup", cold_s / warm_s, "cold/warm")
+
+    # hand-off bytes: a warm in-flight slot ships only its private
+    # suffix pages under v3 when the destination holds the chain
+    again = mk("again", base)
+    assert eng.add_request(again)
+    eng.step()
+    slot = next(iter(eng.requests))
+    full = len(pack_slot(eng.extract_slot(slot, keep=True)))
+    suffix = len(pack_slot(eng.extract_slot(slot, keep=True,
+                                            suffix_only=True)))
+    emit("fleet/prefix_handoff_bytes_full_v2", float(full))
+    emit("fleet/prefix_handoff_bytes_suffix_v3", float(suffix),
+         f"{100 * (1 - suffix / full):.0f}% smaller")
+    assert suffix < full
+    while eng.requests:
+        eng.step()
+
+    # session workload: two tenants, four turns each, through the
+    # router -- affinity should keep each tenant on its warm engine
+    mk_paged = lambda s: PagedEngine(cfg, params, rows=4, page_size=8,
+                                     max_len=64, seed=s,
+                                     prefix_cache=True)
+    fleet = FleetController(
+        [EngineHandle("a", mk_paged(1), EDGE),
+         EngineHandle("b", mk_paged(2), EDGE)],
+        authority=TrustAuthority())
+    system = {t: rng.integers(5, cfg.vocab_size, 16) for t in ("t0", "t1")}
+    for turn in range(4):
+        tickets = [fleet.submit(RequestSpec(
+            rid=f"{t}-{turn}", tenant=t,
+            prompt=np.concatenate(
+                [system[t], rng.integers(5, cfg.vocab_size, 4)]),
+            max_new_tokens=4)) for t in system]
+        while not all(tk.done for tk in tickets):
+            fleet.step()
+    p = fleet.telemetry.summary()["prefix"]
+    emit("fleet/prefix_hit_rate", p["hit_rate"],
+         f"{p['hits']} hits / {p['misses']} misses, "
+         f"{p['bytes_saved']} KV bytes saved")
+    assert p["hit_rate"] >= 0.5, p
 
 
 def bench_priority_workload(cfg, params):

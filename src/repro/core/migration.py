@@ -195,8 +195,12 @@ def pack_slot(snap: SlotSnapshot) -> bytes:
             "config_name": snap.config_name,
             "step": snap.step,
             "version": snap.version}
-    if snap.version == 2:
+    if snap.version in (2, 3):
         meta["page_size"] = snap.page_size
+    if snap.version == 3:
+        # suffix-only wire: the shared prefix chain crosses as hashes,
+        # not pages -- the destination re-references its own copies
+        meta["prefix"] = snap.prefix
     if snap.trace is not None:
         # tracer wire context: the donor-opened migrate-hop span travels
         # with the state so the destination closes that exact span
@@ -244,13 +248,13 @@ def repack_slot(snap: SlotSnapshot, target_max_len: int) -> SlotSnapshot:
     re-layout and fails the geometry assert at ``inject_slot``.
     """
     a = snap.arrays
-    if snap.version == 2:
-        # v2 (live pages) is geometry-free up to the page size: pages
-        # are position-addressed and the destination pads the token
-        # prefix out to its own max_len at inject, so no re-layout is
-        # ever needed -- only the budget check survives.  (The version
-        # check must come first: a v2 token axis is n_live * page_size,
-        # which can collide with a v1 src_len.)
+    if snap.version in (2, 3):
+        # v2/v3 (live pages / suffix pages) are geometry-free up to the
+        # page size: pages are position-addressed and the destination
+        # pads the token prefix out to its own max_len at inject, so no
+        # re-layout is ever needed -- only the budget check survives.
+        # (The version check must come first: a v2 token axis is
+        # n_live * page_size, which can collide with a v1 src_len.)
         need = int(a.position) + max(snap.remaining_tokens, 0)
         if need > target_max_len:
             raise ValueError(
@@ -299,7 +303,7 @@ def repack_slot(snap: SlotSnapshot, target_max_len: int) -> SlotSnapshot:
                         trace=snap.trace)
 
 
-KNOWN_WIRE_VERSIONS = (1, 2)
+KNOWN_WIRE_VERSIONS = (1, 2, 3)
 
 
 def unpack_slot(blob: bytes, like_arrays) -> SlotSnapshot:
@@ -323,7 +327,8 @@ def unpack_slot(blob: bytes, like_arrays) -> SlotSnapshot:
     return SlotSnapshot(arrays=arrays, request=meta["request"],
                         config_name=meta["config_name"], step=meta["step"],
                         trace=meta.get("trace"), version=version,
-                        page_size=meta.get("page_size", 0))
+                        page_size=meta.get("page_size", 0),
+                        prefix=meta.get("prefix"))
 
 
 def _unpack_workspace(blob: bytes, like_state) -> AgentWorkspace:

@@ -72,6 +72,11 @@ class EngineTemplate:
     # ``slots`` then sizes the decode batch (rows)
     page_size: int = 0
     pages: int = 0
+    # prefix sharing: spawned paged engines come up with a (private)
+    # content-addressed prefix cache armed, so warm tenants hit shared
+    # pages on the new engine as soon as traffic lands there
+    prefix_cache: bool = False
+    shared_tenants: tuple = ()
 
 
 @dataclass(frozen=True)
@@ -286,7 +291,9 @@ class Autoscaler:
                               pages=template.pages or None,
                               rows=template.slots,
                               max_len=template.max_len,
-                              seed=template.seed + self._n_spawned)
+                              seed=template.seed + self._n_spawned,
+                              prefix_cache=template.prefix_cache,
+                              shared_tenants=template.shared_tenants)
         else:
             eng = Engine(cfg, params, slots=template.slots,
                          max_len=template.max_len,

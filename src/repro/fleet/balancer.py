@@ -172,10 +172,18 @@ class Rebalancer:
         # engine with the same page size -- anything else re-prefills
         # the committed stream (lossy), like a cross-tier move
         version = hdr.get("version", 1)
-        wire_ok = (version == 1
-                   and not getattr(target.engine, "paged", False)) \
-            or (version == 2 and getattr(target.engine, "paged", False)
-                and target.engine.page_size == hdr.get("page_size", 0))
+        paged_target = getattr(target.engine, "paged", False)
+        page_match = paged_target \
+            and target.engine.page_size == hdr.get("page_size", 0)
+        wire_ok = (version == 1 and not paged_target) \
+            or (version == 2 and page_match) \
+            or (version == 3 and page_match
+                # suffix-only blobs additionally need the target to
+                # hold the shared prefix chain it rides on
+                and getattr(target.engine, "prefix_cache", None)
+                is not None
+                and target.engine.prefix_cache.has_chain(
+                    hdr["prefix"]["chain"]))
         if tier_change or not wire_ok:
             req = request_from_dict(meta)
             req.done, req.slot = False, -1
@@ -318,7 +326,24 @@ class Rebalancer:
             "cross-tier moves must use lossy_migrate (distinct weights)"
         assert self.same_wire(src, dst), \
             "dense<->paged / page-size moves must use lossy_migrate"
-        snap = src.engine.extract_slot(slot)
+        # suffix-only wire (v3): if the donor row rides a shared prefix
+        # chain the destination also holds, ship only the private
+        # suffix pages -- the destination re-references its own copies.
+        # When the destination misses the chain, fall back to the full
+        # v2 payload *loudly*: the reason lands on the ticket's audit
+        # log and the migration record.
+        shared = getattr(src.engine, "_shared", {}).get(slot) or []
+        suffix_only, bytes_saved = False, 0
+        if shared:
+            chain = [n.key for n in shared]
+            dst_cache = getattr(dst.engine, "prefix_cache", None)
+            if dst_cache is not None and dst_cache.has_chain(chain):
+                suffix_only = True
+                bytes_saved = len(shared) * src.engine.page_bytes
+            else:
+                reason = f"{reason} (full v2: dst missed prefix chain)"
+        snap = (src.engine.extract_slot(slot, suffix_only=True)
+                if suffix_only else src.engine.extract_slot(slot))
         if fleet.tracer is not None:
             # hop span opens on the donor and rides the wire format
             snap.trace = fleet.tracer.wire_context(snap.rid, src=src.name)
@@ -342,7 +367,9 @@ class Rebalancer:
                                 reason=reason, engine=dst.name)
         return MigrationRecord(rid=req.rid, src=src.name, dst=dst.name,
                                reason=reason, step=snap2.step,
-                               wire_bytes=wire_bytes)
+                               wire_bytes=wire_bytes,
+                               suffix_only=suffix_only,
+                               bytes_saved=bytes_saved)
 
     def drain(self, src, fleet) -> list[MigrationRecord]:
         """Live-migrate every in-flight request off ``src`` (planned

@@ -167,6 +167,9 @@ class FleetController:
         self.stalled: list[str] = []         # rids stuck at last run()
         self._steps = 0
         self._auto_rid = 0
+        # prefix-cache accounting: last-seen per-engine stats snapshot,
+        # so each step harvests only the delta into fleet telemetry
+        self._prefix_seen: dict[str, dict] = {}
 
     # -- legacy view: parked slot snapshots -----------------------------------
     @property
@@ -450,7 +453,8 @@ class FleetController:
             handles, self.cfg, sensitivity=req.sensitivity,
             prefill_tokens=len(req.prompt),
             decode_tokens=req.max_new_tokens, deadline_slack=slack,
-            quality_floor=req.quality_floor)
+            quality_floor=req.quality_floor,
+            tokens=req.prompt, tenant=req.tenant)
         dec = route()
         if dec.target is None and dec.saturated \
                 and self._park_victim(item, handles):
@@ -476,8 +480,17 @@ class FleetController:
         self.ticket_transition(req.rid, RequestState.PREFILLING,
                                engine=handle.name, reason=dec.reason)
         if self.tracer is not None:
-            # the routing decision's facts land on the prefill span
-            self.tracer.annotate(req.rid, **dec.to_attrs())
+            # the routing decision's facts land on the prefill span;
+            # the ACTUAL hit the engine served (authoritative -- the
+            # router's estimate can lag a concurrent eviction) rides
+            # along with the KV bytes it did not recompute
+            attrs = dec.to_attrs()
+            hit = getattr(handle.engine, "last_prefix_hit", 0)
+            if hit:
+                attrs["prefix_hit_tokens"] = hit
+                attrs["prefix_bytes_saved"] = \
+                    hit * handle.engine.kv_token_bytes
+            self.tracer.annotate(req.rid, **attrs)
         spec = self.spec_controllers.get(handle.name)
         if spec is not None and spec.attach(req) == "spec":
             # the replica slot lives on the verify engine: audit it
@@ -562,8 +575,28 @@ class FleetController:
                 self._steps % self.rebalance_every == self.rebalance_every - 1:
             for rec in self.balancer.rebalance(self):
                 self.telemetry.record_migration(rec)
+        for handle in self.handles.values():
+            self._harvest_prefix(handle)
         self._steps += 1
         return emitted
+
+    def _harvest_prefix(self, handle: EngineHandle):
+        """Fold this engine's prefix-cache stats DELTA into fleet
+        telemetry.  The cache counts every mutation site locally
+        (admission hits, migration injects, pressure reclaims); the
+        fleet polls the monotone totals and accumulates only what is
+        new, so the counters survive the engine's retirement without
+        double counting."""
+        cache = getattr(handle.engine, "prefix_cache", None)
+        if cache is None:
+            return
+        cur = cache.stats.as_dict()
+        seen = self._prefix_seen.get(handle.name, {})
+        delta = {k: cur[k] - seen.get(k, 0)
+                 for k in ("hits", "misses", "evictions", "bytes_saved")}
+        if any(delta.values()):
+            self.telemetry.record_prefix(**delta)
+        self._prefix_seen[handle.name] = cur
 
     def run(self, reqs: list[Request] | None = None, *,
             max_steps: int = 10_000) -> dict[str, list[int]]:
@@ -691,7 +724,9 @@ class FleetController:
         self.balancer.shadow.pop(name, None)
         handle.healthy = False
         self.telemetry.stats(name).retired = True
+        self._harvest_prefix(handle)     # final delta before the handle goes
         del self.handles[name]
+        self._prefix_seen.pop(name, None)
         return len(recs) + parked
 
     def fail(self, name: str, *, reason: str = "crash"):
@@ -700,6 +735,7 @@ class FleetController:
         handle = self.handles[name]
         handle.healthy = False
         self.telemetry.record_failure(name)
+        self._harvest_prefix(handle)     # crash loses pages, not counters
         if handle.spec_role is not None:
             self._dissolve_pair(handle)
         for rec in self.balancer.on_failure(handle, self):

@@ -133,6 +133,9 @@ class RequestSpec:
     # this request to a cheaper model tier under saturation / deadline
     # pressure / link failure, but never below this floor (0 = any tier)
     quality_floor: float = 0.0
+    # prefix-cache namespace: requests of one tenant share cached KV
+    # pages with each other ("" = the anonymous default tenant)
+    tenant: str = ""
 
     def to_request(self, rid: str) -> Request:
         """Materialize the mutable engine-side carrier."""
@@ -141,7 +144,8 @@ class RequestSpec:
                        temperature=self.temperature, top_k=self.top_k,
                        sensitivity=self.sensitivity,
                        priority=self.priority, deadline=self.deadline,
-                       quality_floor=self.quality_floor)
+                       quality_floor=self.quality_floor,
+                       tenant=self.tenant)
 
 
 def spec_of_request(req: Request) -> RequestSpec:
@@ -151,7 +155,8 @@ def spec_of_request(req: Request) -> RequestSpec:
                        temperature=req.temperature, top_k=req.top_k,
                        sensitivity=req.sensitivity, priority=req.priority,
                        deadline=req.deadline,
-                       quality_floor=req.quality_floor)
+                       quality_floor=req.quality_floor,
+                       tenant=req.tenant)
 
 
 class RequestTicket:

@@ -43,6 +43,7 @@ class RouteDecision:
     preferred: str | None = None     # best acceptable tier in the fleet
     degraded: bool = False           # chosen tier < preferred tier
     cause: str = ""                  # "saturated" | "deadline" | "link"
+    prefix_hit: int = 0              # cached-prefix tokens at the target
 
     def to_attrs(self) -> dict:
         """The decision's facts as span attributes (attached to the
@@ -51,6 +52,8 @@ class RouteDecision:
         attrs = {"route_reason": self.reason}
         if self.tier:
             attrs["route_tier"] = self.tier
+        if self.prefix_hit:
+            attrs["route_prefix_hit"] = self.prefix_hit
         if self.degraded:
             attrs["route_degraded"] = True
             attrs["route_cause"] = self.cause or self.reason
@@ -111,7 +114,8 @@ class Router:
               deadline_slack: float | None = None,
               quality_floor: float = 0.0,
               src_tier: str | None = None,
-              reprefill_tokens: int = 0) -> RouteDecision:
+              reprefill_tokens: int = 0,
+              tokens=None, tenant: str = "") -> RouteDecision:
         """Pick an engine.
 
         Tier preference is lexicographically ahead of cost: among
@@ -134,7 +138,14 @@ class Router:
         inject the donor's cache rows and must re-prefill the committed
         stream, so its score is charged those prefill tokens -- the
         deadline gate then certifies the move that will actually
-        happen, not the bit-exact one that won't."""
+        happen, not the bit-exact one that won't.
+
+        Session affinity: when ``tokens`` (the stream the target would
+        prefill) and ``tenant`` are given, an engine holding a cached
+        prefix of them is credited that overlap -- its prefill charge
+        *and* its capacity check drop by the hit (shared pages cost the
+        admitting engine nothing), so a warm engine beats an equally
+        loaded cold one and can admit work a cold gate would refuse."""
         gated = [h for h in handles
                  if h.name not in exclude and self.eligible(sensitivity, h)]
         if not gated:
@@ -186,14 +197,30 @@ class Router:
             return RouteDecision(
                 best.name, note, scores, tier=tier.name,
                 quality=tier.quality, preferred=preferred,
-                degraded=degraded, cause=cause if degraded else "")
+                degraded=degraded, cause=cause if degraded else "",
+                prefix_hit=hit(best))
+
+        # cached-prefix affinity: page-aligned overlap between the
+        # stream this handle would prefill and its prefix cache
+        hits: dict[str, int] = {}
+
+        def hit(h):
+            if h.name not in hits:
+                probe = getattr(h.engine, "prefix_hit_tokens", None)
+                hits[h.name] = 0 if (probe is None or tokens is None) \
+                    else probe(tenant, tokens)
+            return hits[h.name]
 
         # per-handle prefill cost: cross-tier targets pay the lossy
-        # re-prefill of the committed stream on top of any fresh prefill
+        # re-prefill of the committed stream on top of any fresh
+        # prefill; engines holding a cached prefix of the stream are
+        # credited the overlap (both cases prefill through
+        # ``add_request``, which serves the hit from shared pages)
         def pf(h):
+            base = prefill_tokens
             if src_tier and self._tier_of(h).name != src_tier:
-                return prefill_tokens + reprefill_tokens
-            return prefill_tokens
+                base += reprefill_tokens
+            return max(base - hit(h), 0)
 
         all_ready: list = []
         causes: list[str] = []
@@ -204,9 +231,14 @@ class Router:
             # whether prefill+decode tokens fit right now (dense: a free
             # slot whose max_len holds them; paged: a free decode row
             # AND enough free pages), so fleets mix dense and paged
-            # engines behind one gate
+            # engines behind one gate; a cached prefix discounts the
+            # page charge (shared pages need no fresh allocation) but
+            # never the max_len bound, so the discount goes through the
+            # paged gate's cached_tokens kwarg, not a smaller need
+            need = prefill_tokens + decode_tokens
             ready = [h for h in group
-                     if h.engine.can_admit(prefill_tokens + decode_tokens)]
+                     if (h.engine.can_admit(need, cached_tokens=hit(h))
+                         if hit(h) else h.engine.can_admit(need))]
             if not ready:
                 causes.append(f"{tname} saturated")
                 skips.append((q, "saturated"))

@@ -63,6 +63,8 @@ class MigrationRecord:
     step: int                        # donor step_count at extraction
     wire_bytes: int = 0
     lossy: bool = False              # cross-tier re-prefill (no cache rows)
+    suffix_only: bool = False        # v3 wire: shared prefix stayed home
+    bytes_saved: int = 0             # uncompressed page bytes not shipped
 
 
 @dataclass
@@ -119,6 +121,10 @@ class FleetTelemetry:
         self.scale_downs = 0
         self.downshifts = 0
         self.upshifts = 0
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_evictions = 0
+        self.prefix_bytes_saved = 0
         self._t0 = self._clock()
 
     def bind_clock(self, clock):
@@ -237,6 +243,17 @@ class FleetTelemetry:
 
     def record_cancelled(self):
         self.cancelled += 1
+
+    def record_prefix(self, *, hits: int = 0, misses: int = 0,
+                      evictions: int = 0, bytes_saved: int = 0):
+        """Prefix-cache deltas harvested from engines (the per-engine
+        ``PrefixCache.stats`` are the source of truth; the controller
+        feeds the fleet-wide accumulation here so counters survive the
+        engine's retirement)."""
+        self.prefix_hits += hits
+        self.prefix_misses += misses
+        self.prefix_evictions += evictions
+        self.prefix_bytes_saved += bytes_saved
 
     def record_expired(self):
         self.expired += 1
@@ -378,6 +395,15 @@ class FleetTelemetry:
             .set(self.downshifts, direction="down")
         m.counter("fleet_tier_shifts_total", "") \
             .set(self.upshifts, direction="up")
+        m.counter("fleet_prefix_hits_total",
+                  "Admissions served a cached prefix").set(self.prefix_hits)
+        m.counter("fleet_prefix_misses_total",
+                  "Admissions with no cached prefix").set(self.prefix_misses)
+        m.counter("fleet_prefix_evictions_total",
+                  "Shared prefix pages evicted").set(self.prefix_evictions)
+        m.counter("fleet_prefix_bytes_saved_total",
+                  "KV bytes not recomputed or re-shipped thanks to "
+                  "shared prefix pages").set(self.prefix_bytes_saved)
         tok = m.counter("engine_tokens_total", "Tokens emitted per engine")
         tps = m.gauge("engine_tokens_per_second",
                       "Per-engine busy-time throughput")
@@ -423,6 +449,15 @@ class FleetTelemetry:
                                         4),
                 "preempt_wait_p50": round(
                     percentile(self.preempt_wait_s, 50), 4),
+            },
+            "prefix": {
+                "hits": self.prefix_hits,
+                "misses": self.prefix_misses,
+                "evictions": self.prefix_evictions,
+                "bytes_saved": self.prefix_bytes_saved,
+                "hit_rate": round(
+                    self.prefix_hits
+                    / max(self.prefix_hits + self.prefix_misses, 1), 4),
             },
             "slo": self.slo_summary(),
         }

@@ -219,9 +219,23 @@ def main():
     ap.add_argument("--verify-mode", default="stepwise",
                     choices=["stepwise", "wide", "distribution"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="spawn paged engines with the content-"
+                         "addressed prefix cache armed (shared KV "
+                         "pages, COW forks, session-affine routing)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size for --prefix-cache engines")
+    ap.add_argument("--tenants", type=int, default=0, metavar="N",
+                    help="cycle requests over N tenants, each reusing "
+                         "its own system-prompt prefix (exercises "
+                         "warm-session routing; needs --prefix-cache)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the run's Chrome trace-event JSON here "
                          "(open in Perfetto / chrome://tracing)")
+    ap.add_argument("--otlp-out", default=None, metavar="PATH",
+                    help="write the run's spans as an OTLP-JSON "
+                         "ExportTraceServiceRequest here (feed to any "
+                         "OpenTelemetry collector/backend)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write a Prometheus text exposition of the "
                          "fleet metrics registry here")
@@ -239,6 +253,7 @@ def main():
                              ScalePolicy)
     from repro.models.init import init_params
     from repro.serving.engine import Engine
+    from repro.serving.paged import PagedEngine
 
     cfg = get(args.arch)
     if args.tiny:
@@ -269,8 +284,16 @@ def main():
                          f"missing from --tiers")
             kw["tier"] = quality_tiers[parts[3]]
             ecfg, eparams = tier_models[parts[3]]
-        eng = Engine(ecfg, eparams, slots=args.slots, max_len=max_len,
-                     seed=args.seed + i)
+        if args.prefix_cache:
+            if max_len % args.page_size:
+                ap.error(f"--engines {spec!r}: max_len {max_len} not a "
+                         f"multiple of --page-size {args.page_size}")
+            eng = PagedEngine(ecfg, eparams, rows=args.slots,
+                              page_size=args.page_size, max_len=max_len,
+                              seed=args.seed + i, prefix_cache=True)
+        else:
+            eng = Engine(ecfg, eparams, slots=args.slots, max_len=max_len,
+                         seed=args.seed + i)
         handles.append(EngineHandle(name, eng, profile, **kw))
     spec_tiers = parse_tiers(args.spec_tiers)
     for dname, vname in spec_tiers.items():
@@ -286,7 +309,10 @@ def main():
                            profile=getattr(
                                daemon, PROFILES[args.autoscale_profile]),
                            slots=args.slots, max_len=args.max_len,
-                           seed=args.seed + 100),
+                           seed=args.seed + 100,
+                           page_size=args.page_size
+                           if args.prefix_cache else 0,
+                           prefix_cache=args.prefix_cache),
             ScalePolicy(min_engines=int(lo), max_engines=int(hi or lo),
                         scale_up_queue_depth=args.scale_up_queue_depth,
                         scale_up_wait_p95=args.scale_up_wait_p95,
@@ -308,15 +334,28 @@ def main():
     sens = ["public", "personal", "confidential"]
     prios = [int(p) for p in args.priorities.split(",")]
     floors = [float(f) for f in args.quality_floor.split(",")]
-    pending = [RequestSpec(rid=f"r{i}",
-                           prompt=rng.integers(5, cfg.vocab_size, 8),
-                           max_new_tokens=args.max_new,
-                           temperature=args.temperature if i % 2 else 0.0,
-                           top_k=16 if i % 2 else 0,
-                           sensitivity=sens[i % 3],
-                           priority=prios[i % len(prios)],
-                           quality_floor=floors[i % len(floors)])
-               for i in range(args.requests)]
+    # multi-tenant traffic: each tenant reuses its own "system prompt"
+    # (2 pages of tokens) ahead of a per-request tail, so later requests
+    # of a tenant hit the prefix pages its first request cached
+    bases = {}
+    if args.tenants:
+        for t in range(args.tenants):
+            bases[f"t{t}"] = rng.integers(5, cfg.vocab_size,
+                                          2 * args.page_size)
+    pending = []
+    for i in range(args.requests):
+        tenant = f"t{i % args.tenants}" if args.tenants else ""
+        tail = rng.integers(5, cfg.vocab_size, 8)
+        prompt = np.concatenate([bases[tenant], tail]) if tenant else tail
+        pending.append(
+            RequestSpec(rid=f"r{i}", prompt=prompt,
+                        max_new_tokens=args.max_new,
+                        temperature=args.temperature if i % 2 else 0.0,
+                        top_k=16 if i % 2 else 0,
+                        sensitivity=sens[i % 3],
+                        priority=prios[i % len(prios)],
+                        quality_floor=floors[i % len(floors)],
+                        tenant=tenant))
 
     fail = parse_event(args.fail)
     drain = parse_event(args.drain)
@@ -401,11 +440,22 @@ def main():
               f"{json.dumps(spec.stats.summary())}")
     print(f"simulated wire time: {fleet.fabric.clock():.3f}s "
           f"({len(fleet.telemetry.migrations)} live migrations)")
+    if args.prefix_cache:
+        p = fleet.telemetry.summary()["prefix"]
+        print(f"prefix cache: {p['hits']} hits / {p['misses']} misses "
+              f"(hit rate {p['hit_rate']:.0%}), "
+              f"{p['bytes_saved']} KV bytes saved, "
+              f"{p['evictions']} evictions")
     if args.trace_out and fleet.tracer is not None:
         fleet.tracer.close_open(reason="run complete")
         fleet.tracer.export_chrome(args.trace_out)
         print(f"trace: {args.trace_out} ({len(fleet.tracer.spans)} spans"
               f" -- open in Perfetto / chrome://tracing)")
+    if args.otlp_out and fleet.tracer is not None:
+        fleet.tracer.close_open(reason="run complete")
+        fleet.tracer.export_otlp(args.otlp_out)
+        print(f"otlp: {args.otlp_out} ({len(fleet.tracer.spans)} spans"
+              f" -- OTLP-JSON, collector-ready)")
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             f.write(fleet.telemetry.prometheus_text())

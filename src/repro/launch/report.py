@@ -127,6 +127,17 @@ def slo_table(slo: dict) -> str:
     return "\n".join(out)
 
 
+def prefix_line(prefix: dict | None) -> str:
+    """One-line prefix-cache digest from a fleet summary's ``prefix``
+    block; empty when the run never armed the cache."""
+    if not prefix or not (prefix.get("hits") or prefix.get("misses")):
+        return ""
+    return (f"\nPrefix cache: hit rate {prefix['hit_rate']:.0%} "
+            f"({prefix['hits']} hits / {prefix['misses']} misses), "
+            f"{fmt_bytes(prefix['bytes_saved'])} KV saved, "
+            f"{prefix['evictions']} evictions")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
@@ -148,6 +159,7 @@ def main():
         doc = json.load(open(args.slo))
         print("### Per-tier SLO\n")
         print(slo_table(doc.get("slo", doc)))
+        print(prefix_line(doc.get("prefix")))
         return
     rows = load(args.dir)
     if args.section in ("roofline", "both"):

@@ -58,6 +58,7 @@ class Request:
     priority: int = 0                # higher dispatches first / preempts
     deadline: Optional[float] = None  # absolute fleet-clock expiry
     quality_floor: float = 0.0       # min tier quality this request accepts
+    tenant: str = ""                 # prefix-cache namespace ("" = default)
     done: bool = False
     output: list = field(default_factory=list)
     slot: int = -1
@@ -71,6 +72,7 @@ def request_to_dict(req: Request) -> dict:
         "temperature": req.temperature, "top_k": req.top_k,
         "sensitivity": req.sensitivity, "priority": req.priority,
         "deadline": req.deadline, "quality_floor": req.quality_floor,
+        "tenant": req.tenant,
         "output": list(req.output),
         "slot": req.slot, "done": req.done,
     }
@@ -83,7 +85,8 @@ def request_from_dict(d: dict) -> Request:
                   sensitivity=d["sensitivity"],
                   priority=d.get("priority", 0),
                   deadline=d.get("deadline"),
-                  quality_floor=d.get("quality_floor", 0.0))
+                  quality_floor=d.get("quality_floor", 0.0),
+                  tenant=d.get("tenant", ""))
     req.output = list(d["output"])
     req.slot = d["slot"]
     req.done = d["done"]
@@ -117,8 +120,15 @@ class SlotSnapshot:
     #                                  the blob so the destination closes
     #                                  that exact span (pack_slot meta)
     version: int = 1                 # wire format: 1 = dense cache rows,
-    #                                  2 = live pages only (paged engine)
-    page_size: int = 0               # v2 only: tokens per KV page
+    #                                  2 = live pages only (paged engine),
+    #                                  3 = suffix pages + prefix-chain
+    #                                      hashes (shared-prefix moves)
+    page_size: int = 0               # v2/v3 only: tokens per KV page
+    prefix: Optional[dict] = None    # v3 only: {"tenant", "chain", "len"}
+    #                                  -- the shared chain the payload
+    #                                  rides on; the destination must
+    #                                  hold these blocks in its prefix
+    #                                  cache or inject fails loudly
 
     @property
     def rid(self) -> str:

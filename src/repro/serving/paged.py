@@ -42,6 +42,7 @@ from repro.models.layers import make_paged_attn_cache
 from repro.models.model import forward
 from repro.serving.engine import (Request, SlotArrays, SlotSnapshot,
                                   request_from_dict, request_to_dict)
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import sample
 
 
@@ -57,6 +58,10 @@ class PageAllocator:
         self.total = total
         self._free: list[int] = list(range(total - 1, -1, -1))
         self.owners: dict[int, str] = {}
+        # extra invariant checks run by check() -- the prefix cache
+        # registers its refcount/ownership audit here so every existing
+        # allocator.check() call site also audits shared pages
+        self.auditors: list = []
 
     @property
     def free_pages(self) -> int:
@@ -84,6 +89,13 @@ class PageAllocator:
             del self.owners[p]
             self._free.append(p)
 
+    def retag(self, page: int, owner: str):
+        """Transfer ownership of an allocated page (request -> prefix
+        cache donation) without it ever appearing free."""
+        if page not in self.owners:
+            raise ValueError(f"retagging unowned page {page}")
+        self.owners[page] = owner
+
     def check(self):
         """Conservation invariant; raises AssertionError on violation."""
         assert len(self._free) + len(self.owners) == self.total, \
@@ -91,6 +103,8 @@ class PageAllocator:
         assert len(set(self._free)) == len(self._free), "free-list dup"
         assert not (set(self._free) & set(self.owners)), \
             "page both free and owned"
+        for audit in self.auditors:
+            audit()
 
 
 @jax.tree_util.register_dataclass
@@ -121,7 +135,8 @@ class PagedEngine:
     def __init__(self, cfg: ModelConfig, params, *, page_size: int = 16,
                  pages: int | None = None, rows: int = 4,
                  max_len: int = 256, mesh=None, rules=None, seed: int = 0,
-                 profile_hook=None):
+                 profile_hook=None, prefix_cache: bool = False,
+                 shared_tenants: tuple = ()):
         assert all(ls.mixer in ("attn", "local")
                    for b in cfg.blocks for ls in b.layers) \
             and not cfg.cross_attention and not cfg.encoder_blocks, \
@@ -149,8 +164,31 @@ class PagedEngine:
         self._prefill_fn = jax.jit(partial(_paged_prefill, cfg=cfg,
                                            mesh=mesh, rules=rules),
                                    static_argnames=("slot", "plen"))
+        self._suffix_fn = jax.jit(partial(_paged_suffix_prefill, cfg=cfg,
+                                          mesh=mesh, rules=rules),
+                                  static_argnames=("slot", "slen"))
         self.profile_hook = profile_hook
         self._compiled: set[str] = set()
+        # -- multi-tenant prefix sharing (opt-in) ---------------------------
+        self.prefix_cache = None
+        self._shared: dict[int, list] = {}   # row -> referenced PrefixNodes
+        self.last_prefix_hit = 0             # tokens served shared, last admit
+        if prefix_cache:
+            self.prefix_cache = PrefixCache(
+                self.allocator, page_size=page_size,
+                cross_tenant=tuple(shared_tenants),
+                token_bytes=self.kv_token_bytes)
+
+    @property
+    def kv_token_bytes(self) -> int:
+        """KV bytes one token occupies across every layer's pools."""
+        layers = sum(b.repeats * len(b.layers) for b in self.cfg.blocks)
+        return (2 * layers * self.cfg.num_kv_heads * self.cfg.head_dim
+                * jnp.dtype(self.cfg.dtype).itemsize)
+
+    @property
+    def page_bytes(self) -> int:
+        return self.kv_token_bytes * self.page_size
 
     def _profiled(self, key: str, fn):
         if key in self._compiled:
@@ -199,20 +237,42 @@ class PagedEngine:
     def _pages_for(self, need_tokens: int) -> int:
         return -(-need_tokens // self.page_size)
 
-    def can_admit(self, need_tokens: int) -> bool:
+    def _evictable_pages(self) -> int:
+        """Refcount-0 prefix-cache pages: reclaimed on demand at admit,
+        so they honestly count as free capacity."""
+        return (self.prefix_cache.evictable_pages()
+                if self.prefix_cache is not None else 0)
+
+    def can_admit(self, need_tokens: int, *, cached_tokens: int = 0) -> bool:
+        """``cached_tokens`` (page-aligned, from ``prefix_hit_tokens``)
+        discounts the page reservation only -- the row must still hold
+        the full stream, so the ``max_len`` bound stays unreduced."""
+        need_pages = (self._pages_for(need_tokens)
+                      - cached_tokens // self.page_size)
         return (bool(self.free_slots)
                 and need_tokens <= self.max_len
-                and self._pages_for(need_tokens) <= self.allocator.free_pages)
+                and need_pages
+                <= self.allocator.free_pages + self._evictable_pages())
 
     def admissible(self, need_tokens: int) -> bool:
         return (need_tokens <= self.max_len
                 and self._pages_for(need_tokens) <= self.allocator.total)
 
+    def prefix_hit_tokens(self, tenant: str, tokens) -> int:
+        """Full-page-aligned cached coverage of ``tokens`` for
+        ``tenant``: that many prefill tokens would be served from shared
+        pages (and as many pages skipped from the reservation).  The
+        router's session-affinity and capacity term."""
+        if self.prefix_cache is None or tokens is None or not len(tokens):
+            return 0
+        return self.prefix_cache.hit_tokens(tenant, tokens)
+
     @property
     def free_token_budget(self) -> int:
         if not self.free_slots:
             return 0
-        return self.allocator.free_pages * self.page_size
+        return ((self.allocator.free_pages + self._evictable_pages())
+                * self.page_size)
 
     # -- request lifecycle --------------------------------------------------
     def _row_pages(self, row: int) -> list[int]:
@@ -221,41 +281,141 @@ class PagedEngine:
 
     def add_request(self, req: Request, *,
                     committed: list[int] | None = None) -> bool:
-        """Admit iff a decode row is free AND the full reservation
-        (``ceil((prompt + max_new) / page_size)`` pages) fits the free
-        page budget -- reserving up front means an admitted request can
-        never deadlock mid-decode waiting for pages."""
+        """Admit iff a decode row is free AND the reservation fits the
+        free page budget -- reserving up front means an admitted request
+        can never deadlock mid-decode waiting for pages.
+
+        With a prefix cache armed, the reservation is charged *honestly
+        small*: the longest cached prefix chain is referenced in place
+        (one refcount per shared page, zero new pages), a cached partial
+        tail is COW-forked into one private page, and only the uncovered
+        suffix + decode budget allocates fresh pages.  Only that suffix
+        is forwarded -- a full hit skips the prefill program entirely.
+        """
         free = self.free_slots
         if not free:
             return False
         need = len(req.prompt) + req.max_new_tokens
         assert need <= self.max_len
-        pages = self.allocator.alloc(self._pages_for(need), req.rid)
+        prefix = np.asarray(req.prompt, np.int32)
+        extra = list(committed) if committed else []
+        if extra:
+            prefix = np.concatenate(
+                [prefix, np.asarray(extra, np.int32)])
+        plen = len(prefix)
+        cache = self.prefix_cache
+        tenant = getattr(req, "tenant", "")
+        full_nodes, tail, hit = (cache.match(tenant, prefix)
+                                 if cache is not None else ([], None, 0))
+        n_ref = len(full_nodes)
+        need_priv = self._pages_for(need) - n_ref
+        pages = self.allocator.alloc(need_priv, req.rid)
+        if pages is None and cache is not None:
+            # refcount-0 shared pages are part of the advertised budget:
+            # reclaim LRU-first and retry before refusing
+            cache.reclaim(need_priv - self.allocator.free_pages)
+            pages = self.allocator.alloc(need_priv, req.rid)
         if pages is None:
             return False
         row = free[0]
         req.slot = row
         self.requests[row] = req
-        prefix = np.asarray(req.prompt, np.int32)
-        if committed:
-            req.output[:] = list(committed)
-            prefix = np.concatenate(
-                [prefix, np.asarray(committed, np.int32)])
-        plen = len(prefix)
+        if extra:
+            req.output[:] = extra
+        if full_nodes:
+            cache.acquire(full_nodes)
+        self._shared[row] = list(full_nodes)
         pt_row = np.full((self.np_pages,), -1, np.int32)
-        pt_row[:len(pages)] = pages
+        pt_row[:n_ref] = [n.page for n in full_nodes]
+        pt_row[n_ref:n_ref + len(pages)] = pages
         s = self.state
         self.state = dataclasses.replace(
             s,
             page_table=s.page_table.at[row].set(jnp.asarray(pt_row)),
             temperature=s.temperature.at[row].set(req.temperature),
             top_k=s.top_k.at[row].set(req.top_k))
-        prompt = jnp.asarray(prefix, jnp.int32)[None]
-        self.state = self._profiled(
-            f"prefill[plen={plen}]",
-            lambda: self._prefill_fn(self.params, self.state, prompt,
-                                     slot=row, plen=plen))
+        if tail is not None and hit > n_ref * self.page_size:
+            # COW fork: the block containing the first decode position
+            # will be written in place, so the cached tail page is
+            # copied into this row's first private page, never shared
+            self._copy_page(tail.page, pages[0])
+        self.last_prefix_hit = hit
+        if hit >= plen:
+            # full hit: every prompt token's KV is already in this row's
+            # page table (shared chain + COW tail) -- no forward at all
+            self._warm_start(row, prefix)
+        elif hit == 0:
+            prompt = jnp.asarray(prefix, jnp.int32)[None]
+            self.state = self._profiled(
+                f"prefill[plen={plen}]",
+                lambda: self._prefill_fn(self.params, self.state, prompt,
+                                         slot=row, plen=plen))
+        else:
+            # suffix-only prefill: seed the covered region, then forward
+            # just the uncovered tokens through the decode-mode program
+            # (prefill-mode attention never reads the page pools, so the
+            # suffix must attend to the shared prefix via the kernel)
+            self._warm_start(row, prefix[:hit])
+            suffix = jnp.asarray(prefix[hit:], jnp.int32)[None]
+            slen = plen - hit
+            self.state = self._profiled(
+                f"suffix[slen={slen}]",
+                lambda: self._suffix_fn(self.params, self.state, suffix,
+                                        slot=row, slen=slen))
+        if cache is not None:
+            self._donate(row, tenant, prefix, hit)
+            cache.account(hit)
         return True
+
+    def _warm_start(self, row: int, covered: np.ndarray):
+        """Seed a row as if ``covered`` had just been prefilled: tokens
+        written, position past the covered region, last token primed.
+        The KV for the region must already sit in the row's page table
+        (shared prefix chain + COW'd tail)."""
+        s = self.state
+        cov = jnp.asarray(covered, jnp.int32)[None]
+        self.state = dataclasses.replace(
+            s,
+            tokens=jax.lax.dynamic_update_slice(
+                s.tokens, cov, (jnp.int32(row), jnp.int32(0))),
+            positions=s.positions.at[row].set(len(covered)),
+            last_token=s.last_token.at[row].set(int(covered[-1])),
+            active=s.active.at[row].set(True))
+
+    def _copy_page(self, src: int, dst: int):
+        """Copy one physical page across every layer's pools (the COW
+        fork and the tail-donation copy)."""
+        def cp(layer):
+            a = layer["attn"]
+            return {"attn": {
+                "k_pool": a["k_pool"].at[:, dst].set(a["k_pool"][:, src]),
+                "v_pool": a["v_pool"].at[:, dst].set(a["v_pool"][:, src]),
+            }}
+        s = self.state
+        self.state = dataclasses.replace(
+            s, caches=[[cp(l) for l in grp] for grp in s.caches])
+
+    def _donate(self, row: int, tenant: str, prefix: np.ndarray, hit: int):
+        """Publish this row's freshly prefilled prompt blocks into the
+        cache: full blocks transfer page ownership in place (the row
+        keeps a reference), the partial tail is donated as a copy (the
+        row's own tail page is about to be written by decode)."""
+        cache, ps = self.prefix_cache, self.page_size
+        nodes = self._shared[row]
+        row_pages = self._row_pages(row)
+        for d in range(len(nodes), len(prefix) // ps):
+            node = cache.adopt(tenant, prefix, d, row_pages[d])
+            if node is None:
+                # a peer cached this block since we matched; keep our
+                # private page (swapping pages mid-request would break
+                # the row's bit-exactness) and stop extending the chain
+                return
+            cache.acquire([node])
+            nodes.append(node)
+        if len(prefix) % ps and hit < len(prefix):
+            d = len(prefix) // ps
+            cache.adopt_tail(tenant, prefix,
+                             lambda dst: self._copy_page(row_pages[d], dst))
 
     def step(self, *, auto_retire: bool = True) -> dict[str, int]:
         if not self.requests:
@@ -278,6 +438,13 @@ class PagedEngine:
     def retire(self, row: int):
         self.requests.pop(row, None)
         pages = self._row_pages(row)
+        nodes = self._shared.pop(row, None)
+        if nodes:
+            # shared pages occupy the leading page-table entries: drop
+            # the references (the cache frees them only at refcount-0
+            # eviction) and free just this row's private pages
+            self.prefix_cache.release(nodes)
+            pages = pages[len(nodes):]
         if pages:
             self.allocator.free(pages)
         s = self.state
@@ -286,21 +453,59 @@ class PagedEngine:
             page_table=s.page_table.at[row].set(-1),
             active=s.active.at[row].set(False))
 
-    # -- per-slot live migration (v2 wire: live pages only) -----------------
-    def extract_slot(self, slot: int, *, keep: bool = False) -> SlotSnapshot:
+    def check(self):
+        """Engine-level conservation audit: allocator invariants (incl.
+        the prefix cache's ownership/refcount auditor), the page ledger
+        (used == row-private + cache-held), and exact refcounts against
+        the live rows' shared chains."""
+        self.allocator.check()
+        assert set(self._shared) <= set(self.requests), \
+            (sorted(self._shared), sorted(self.requests))
+        private = sum(len(self._row_pages(r)) - len(self._shared.get(r, ()))
+                      for r in self.requests)
+        held = self.prefix_cache.pages_held \
+            if self.prefix_cache is not None else 0
+        assert self.allocator.used_pages == private + held, \
+            (self.allocator.used_pages, private, held)
+        if self.prefix_cache is not None:
+            self.prefix_cache.check(self._shared.values())
+
+    # -- per-slot live migration (v2: live pages; v3: suffix only) ----------
+    def extract_slot(self, slot: int, *, keep: bool = False,
+                     suffix_only: bool = False) -> SlotSnapshot:
         """Detach one request shipping only its live pages.
 
         The payload's cache leaves are (R, n_live, page_size, KV, Dh)
         where ``n_live = ceil(position / page_size)`` -- position-ordered
         pages, free of this engine's pool indices -- plus the token
         prefix trimmed to the live region.  Wire version 2.
+
+        ``suffix_only`` (wire version 3) drops the shared prefix-chain
+        pages from the payload and ships their chain *hashes* instead
+        (``snap.prefix``): a destination whose prefix cache holds the
+        chain re-references those pages locally and only the private
+        suffix pages cross the wire.  Callers must verify the
+        destination holds the chain first (``prefix_cache.has_chain``)
+        -- injecting v3 into a cache that misses raises loudly.
         """
         req = self.requests[slot]
         pos = int(self.state.positions[slot])
         ps = self.page_size
         n_live = max(1, -(-pos // ps))
+        row_pages = self._row_pages(slot)
+        shared = self._shared.get(slot, [])
+        n_skip = 0
+        prefix_meta = None
+        if suffix_only:
+            assert shared, "suffix_only extract needs a shared chain"
+            n_skip = min(len(shared), n_live)
+            prefix_meta = {
+                "tenant": getattr(req, "tenant", ""),
+                "chain": [n.key for n in shared[:n_skip]],
+                "len": n_skip * ps,
+            }
         live = jnp.asarray(
-            np.asarray(self._row_pages(slot)[:n_live], np.int32))
+            np.asarray(row_pages[n_skip:n_live], np.int32))
 
         def gather(layer):
             a = layer["attn"]
@@ -322,8 +527,9 @@ class PagedEngine:
             request=request_to_dict(req),
             config_name=self.cfg.name,
             step=int(self.state.step_count),
-            version=2,
+            version=3 if suffix_only else 2,
             page_size=ps,
+            prefix=prefix_meta,
         )
         if not keep:
             self.retire(slot)
@@ -338,22 +544,44 @@ class PagedEngine:
         and kernel program do (the page-level contract)."""
         assert self.cfg.name == snap.config_name, \
             f"config mismatch: {self.cfg.name} != {snap.config_name}"
-        if snap.version != 2:
+        if snap.version not in (2, 3):
             raise ValueError(
-                f"PagedEngine.inject_slot needs a v2 (paged) snapshot, "
-                f"got v{snap.version}; route dense blobs through "
-                f"lossy re-prefill")
+                f"PagedEngine.inject_slot needs a v2/v3 (paged) "
+                f"snapshot, got v{snap.version}; route dense blobs "
+                f"through lossy re-prefill")
         if snap.page_size != self.page_size:
             raise ValueError(
                 f"page_size mismatch: blob {snap.page_size} != engine "
                 f"{self.page_size} (cross-geometry moves are lossy)")
         a = snap.arrays
         req = request_from_dict(snap.request)
+        nodes = []
+        if snap.version == 3:
+            # suffix-only blob: the prefix chain's pages must already
+            # live in this engine's cache -- re-reference, don't re-wire
+            if self.prefix_cache is None:
+                raise ValueError(
+                    f"v3 (suffix-only) blob for {req.rid!r} but this "
+                    "engine has no prefix cache; the sender must fall "
+                    "back to full v2")
+            nodes = self.prefix_cache.lookup_chain(snap.prefix["chain"])
+            if nodes is None:
+                raise ValueError(
+                    f"v3 (suffix-only) blob for {req.rid!r}: destination "
+                    f"prefix cache is missing the {len(snap.prefix['chain'])}"
+                    f"-block chain; the sender must fall back to full v2")
+        n_sh = len(nodes)
         need = len(req.prompt) + req.max_new_tokens
         assert need <= self.max_len, (need, self.max_len)
         n_live = a.caches[0][0]["attn"]["k"].shape[1]
         pages = self.allocator.alloc(
-            max(self._pages_for(need), n_live), req.rid)
+            max(self._pages_for(need) - n_sh, n_live), req.rid)
+        if pages is None and self.prefix_cache is not None:
+            self.prefix_cache.reclaim(
+                max(self._pages_for(need) - n_sh, n_live)
+                - self.allocator.free_pages)
+            pages = self.allocator.alloc(
+                max(self._pages_for(need) - n_sh, n_live), req.rid)
         assert pages is not None, "no free page budget to inject into"
         if slot is None:
             free = self.free_slots
@@ -374,8 +602,12 @@ class PagedEngine:
         s = self.state
         caches = [[scatter(l, pl_) for l, pl_ in zip(grp, pgrp)]
                   for grp, pgrp in zip(s.caches, a.caches)]
+        if nodes:
+            self.prefix_cache.acquire(nodes)
+            self._shared[slot] = list(nodes)
         pt_row = np.full((self.np_pages,), -1, np.int32)
-        pt_row[:len(pages)] = pages
+        pt_row[:n_sh] = [n.page for n in nodes]
+        pt_row[n_sh:n_sh + len(pages)] = pages
         tokens = jnp.zeros((self.max_len,), jnp.int32).at[
             :a.tokens.shape[0]].set(a.tokens)
         impl = str(jax.random.key_impl(s.rng))
@@ -496,6 +728,47 @@ def _paged_prefill(params, state: PagedEngineState, prompt, *, slot: int,
         tokens=tokens,
         positions=state.positions.at[slot].set(plen),
         last_token=state.last_token.at[slot].set(prompt[0, -1]),
+        active=state.active.at[slot].set(True),
+    )
+
+
+def _paged_suffix_prefill(params, state: PagedEngineState, suffix, *,
+                          slot: int, slen: int, cfg, mesh, rules):
+    """Prefill the uncovered suffix of a warm row, one token per decode
+    step.
+
+    The prefill program computes attention over only the tokens it is
+    fed (``attention_causal`` never reads the page pools), so a suffix
+    that must attend to a *cached* prefix has to go through the
+    decode-mode kernel path: each suffix token is forwarded at its
+    absolute position, reads the shared prefix pages through the row's
+    page table, and writes its own KV into the row's private pages.
+    The row's position must already sit at the covered-prefix length
+    (``_warm_start``); logits are discarded -- this is KV construction,
+    not sampling -- and the row finishes exactly like a cold prefill:
+    position at plen, last prompt token primed for the first decode.
+    """
+    pt_row = jax.lax.dynamic_slice_in_dim(state.page_table, slot, 1, 0)
+    start = state.positions[slot]
+
+    def body(caches, i):
+        tok = jax.lax.dynamic_slice(suffix, (0, i), (1, 1))
+        woven = _weave(caches, pt_row)
+        _, caches, _ = forward(
+            params, {"tokens": tok}, cfg=cfg, mode="decode",
+            caches=woven, positions=(start + i)[None, None],
+            mesh=mesh, rules=rules)
+        return caches, None
+
+    caches, _ = jax.lax.scan(body, state.caches, jnp.arange(slen))
+    tokens = jax.lax.dynamic_update_slice(
+        state.tokens, suffix, (jnp.int32(slot), start))
+    return dataclasses.replace(
+        state,
+        caches=caches,
+        tokens=tokens,
+        positions=state.positions.at[slot].set(start + slen),
+        last_token=state.last_token.at[slot].set(suffix[0, -1]),
         active=state.active.at[slot].set(True),
     )
 

@@ -1,0 +1,390 @@
+"""Content-addressed multi-tenant prefix KV cache over ``PageAllocator``.
+
+Agent fleets re-send the same long system/tool prompts per tenant and
+revisit sessions; with the paged engine's position-addressed pools a
+repeated prefix does not need a re-prefill -- the pages holding its KV
+can simply be *referenced* by the next request.  This module turns that
+into a subsystem:
+
+* Token streams are hashed in page-aligned blocks into a per-tenant
+  *chain*: node ``d``'s key is ``H(parent_key, tokens[d*ps:(d+1)*ps])``,
+  so a chain key commits to the whole prefix up to that block (a trie
+  keyed by running hash).  Tenants are isolated by seeding the chain at
+  a per-namespace root; cross-tenant sharing is opt-in by listing tenant
+  ids in ``cross_tenant`` (they hash under the shared "" namespace).
+* Each full-block node owns one physical page (allocator owner tag
+  ``prefix:<key>``) holding the block's KV exactly as prefill wrote it.
+  Shared pages are **immutable**: a request only ever references them
+  read-only via its page table.  The one page a request must write --
+  the partially-filled tail block containing its first decode position
+  -- is never shared in place; it is **copy-on-write forked** into a
+  private page at admission (and conversely a cold request *donates* a
+  copy of its tail so later requests can hit it).
+* Nodes are refcounted: one ref per admitted row referencing the node
+  plus one per child node (children pin parents, so a live chain never
+  dangles).  LRU eviction only ever reclaims refcount-0 nodes, which
+  keeps the pool elastic -- evictable pages count as free budget for
+  admission -- without ever freeing a page some row still addresses.
+
+The cache manages page *identities and lifetimes* only; the engine owns
+the pools and performs the actual KV copies (``PagedEngine._copy_page``)
+so this module stays importable without jax arrays in play and the
+property harness can drive it against a bare allocator.
+
+Reproducibility: a warm request reads bit-identical bytes to what the
+donor's prefill wrote, so a full-prefix hit decodes bit-exactly vs its
+own cold run *when donor and consumer share prefill geometry* (same
+``page_size``, same program -- see ROADMAP Contracts, shared-page
+contract).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_DIGEST = 16                         # blake2b digest bytes (32 hex chars)
+_MAX_TAILS = 4                       # partial-tail fanout cap per chain key
+
+
+def _root_key(namespace: str) -> str:
+    return hashlib.blake2b(b"prefix-root:" + namespace.encode(),
+                           digest_size=_DIGEST).hexdigest()
+
+
+def _child_key(parent_key: str, block: np.ndarray) -> str:
+    h = hashlib.blake2b(digest_size=_DIGEST)
+    h.update(bytes.fromhex(parent_key))
+    h.update(np.asarray(block, np.int32).tobytes())
+    return h.hexdigest()
+
+
+@dataclass
+class PrefixNode:
+    """One shared block: a physical page plus its identity and lifetime.
+
+    ``tokens`` keeps the actual block tokens as a hash-collision guard
+    and, for partial tails, the match material (longest-common-prefix).
+    """
+    key: str                         # chain hash (hex)
+    namespace: str                   # tenant namespace ("" = shared)
+    depth: int                       # block index within the prefix
+    page: int                        # physical page id in the engine pool
+    tokens: np.ndarray               # block tokens (== page_size iff full)
+    parent: str | None               # parent chain key (None at depth 0)
+    partial: bool = False            # tail block (always COW-copied)
+    refs: int = 0                    # row references + child nodes
+    stamp: int = 0                   # LRU clock at last touch
+
+
+@dataclass
+class PrefixStats:
+    hits: int = 0                    # admissions with hit_tokens > 0
+    misses: int = 0                  # admissions that found nothing
+    evictions: int = 0               # pages reclaimed by LRU
+    bytes_saved: int = 0             # hit_tokens * per-token KV bytes
+    hit_tokens: int = 0              # total prefill tokens served shared
+    inserted: int = 0                # pages donated into the cache
+
+    def as_dict(self) -> dict:
+        return dict(vars(self))
+
+
+class PrefixCache:
+    """Per-engine chain/trie of refcounted immutable shared pages."""
+
+    def __init__(self, allocator, *, page_size: int,
+                 cross_tenant: tuple = (), token_bytes: int = 0):
+        self.allocator = allocator
+        self.page_size = page_size
+        self.cross_tenant = frozenset(cross_tenant)
+        self.token_bytes = token_bytes   # per-token KV bytes (engine-set)
+        self.nodes: dict[str, PrefixNode] = {}       # full blocks by key
+        self.tails: dict[str, list[PrefixNode]] = {}  # partials by parent
+        self.stats = PrefixStats()
+        self._clock = 0
+        allocator.auditors.append(self._audit)
+
+    # -- identity -----------------------------------------------------------
+    def namespace(self, tenant: str) -> str:
+        """Opt-in cross-tenant sharing: listed tenants hash under the
+        shared "" namespace, everyone else under their own id."""
+        return "" if tenant in self.cross_tenant else tenant
+
+    def chain_keys(self, tenant: str, tokens) -> list[str]:
+        """Chain hashes of every *full* block of ``tokens``."""
+        ps = self.page_size
+        tokens = np.asarray(tokens, np.int32)
+        key, keys = _root_key(self.namespace(tenant)), []
+        for d in range(len(tokens) // ps):
+            key = _child_key(key, tokens[d * ps:(d + 1) * ps])
+            keys.append(key)
+        return keys
+
+    # -- lookup -------------------------------------------------------------
+    def _touch(self, node: PrefixNode):
+        self._clock += 1
+        node.stamp = self._clock
+
+    def match(self, tenant: str, tokens):
+        """Longest cached coverage of ``tokens``: ``(full_nodes, tail,
+        hit_tokens)``.
+
+        ``full_nodes`` are chain nodes the caller may reference in place
+        (after ``acquire``); ``tail`` -- if any -- is a partial block
+        whose page the caller must COW-copy, contributing its
+        longest-common-prefix with the remaining tokens to the hit.
+        Pure lookup: no stats, no refcounts (callers account on admit).
+        """
+        ps = self.page_size
+        tokens = np.asarray(tokens, np.int32)
+        key = _root_key(self.namespace(tenant))
+        full: list[PrefixNode] = []
+        for d in range(len(tokens) // ps):
+            block = tokens[d * ps:(d + 1) * ps]
+            node = self.nodes.get(_child_key(key, block))
+            if node is None or not np.array_equal(node.tokens, block):
+                break
+            full.append(node)
+            key = node.key
+        hit = len(full) * ps
+        rest = tokens[hit:]
+        tail, tail_hit = None, 0
+        # partial tails hang off the deepest matched chain key; a match
+        # extends coverage even mid-prefix (the COW copy's slots past
+        # the match point are simply overwritten by the suffix prefill)
+        if len(rest):
+            for cand in self.tails.get(key, ()):
+                n = _common_prefix(cand.tokens, rest)
+                if n > tail_hit:
+                    tail, tail_hit = cand, n
+        for node in full + ([tail] if tail else []):
+            self._touch(node)
+        return full, tail, hit + tail_hit
+
+    def hit_tokens(self, tenant: str, tokens) -> int:
+        """Full-block-aligned cached coverage -- the number of prefill
+        tokens (and exactly ``hit // page_size`` pages) a warm admit
+        would not have to charge.  Router affinity + capacity term."""
+        ps = self.page_size
+        tokens = np.asarray(tokens, np.int32)
+        key, hit = _root_key(self.namespace(tenant)), 0
+        for d in range(len(tokens) // ps):
+            block = tokens[d * ps:(d + 1) * ps]
+            node = self.nodes.get(_child_key(key, block))
+            if node is None or not np.array_equal(node.tokens, block):
+                break
+            hit += ps
+            key = node.key
+        return hit
+
+    def has_chain(self, chain: list[str]) -> bool:
+        return self.lookup_chain(chain) is not None
+
+    def lookup_chain(self, chain: list[str]) -> list[PrefixNode] | None:
+        """Resolve a wire chain (v3 suffix-only migration): every key
+        must be present and correctly parent-linked from the root, else
+        None (the caller falls back to a full transfer)."""
+        nodes, parent_key = [], None
+        for key in chain:
+            node = self.nodes.get(key)
+            if node is None or node.partial or node.parent != parent_key:
+                return None
+            nodes.append(node)
+            parent_key = key
+        return nodes
+
+    # -- refcounts ----------------------------------------------------------
+    def acquire(self, nodes):
+        for n in nodes:
+            n.refs += 1
+            self._touch(n)
+
+    def release(self, nodes):
+        for n in nodes:
+            assert n.refs > 0, f"releasing unreferenced node {n.key}"
+            n.refs -= 1
+            self._touch(n)
+
+    def account(self, hit_tokens: int):
+        """Record one admission's outcome into the counters."""
+        if hit_tokens > 0:
+            self.stats.hits += 1
+            self.stats.hit_tokens += hit_tokens
+            self.stats.bytes_saved += hit_tokens * self.token_bytes
+        else:
+            self.stats.misses += 1
+
+    # -- insertion ----------------------------------------------------------
+    def adopt(self, tenant: str, tokens, depth: int,
+              page: int) -> PrefixNode | None:
+        """Donate the full block at ``depth`` of ``tokens``: ownership of
+        ``page`` (which the caller must currently own) is retagged to the
+        cache and a refcount-0 node is created (caller ``acquire``s it to
+        keep referencing the page).  Returns None -- caller keeps its
+        private page -- if the block is already cached: swapping a row
+        onto a peer's page mid-request would break its bit-exactness."""
+        keys = self.chain_keys(tenant, tokens)
+        key = keys[depth]
+        if key in self.nodes:
+            return None
+        parent = None
+        if depth > 0:
+            parent = self.nodes.get(keys[depth - 1])
+            assert parent is not None, "chain donated out of order"
+        ps = self.page_size
+        self.allocator.retag(page, f"prefix:{key}")
+        node = PrefixNode(key=key, namespace=self.namespace(tenant),
+                          depth=depth, page=page,
+                          tokens=np.asarray(
+                              tokens[depth * ps:(depth + 1) * ps],
+                              np.int32).copy(),
+                          parent=parent.key if parent else None)
+        if parent is not None:
+            parent.refs += 1         # children pin parents
+        self.nodes[key] = node
+        self._touch(node)
+        self.stats.inserted += 1
+        return node
+
+    def adopt_tail(self, tenant: str, tokens, copy_page) -> PrefixNode | None:
+        """Cache the partial tail block of ``tokens`` by *copying*: a
+        fresh cache-owned page is allocated and ``copy_page(dst_page)``
+        fills it from the caller's (still private, soon-to-be-written)
+        tail page.  Best-effort: returns None when there is no tail, no
+        page budget, or an equal-or-longer tail is already cached."""
+        ps = self.page_size
+        tokens = np.asarray(tokens, np.int32)
+        rem = len(tokens) % ps
+        if rem == 0:
+            return None
+        keys = self.chain_keys(tenant, tokens)
+        depth = len(tokens) // ps
+        if depth > 0 and (not keys or keys[-1] not in self.nodes):
+            return None              # chain below the tail isn't cached
+        parent_key = keys[-1] if depth > 0 \
+            else _root_key(self.namespace(tenant))
+        tail_tokens = tokens[depth * ps:]
+        sibs = self.tails.setdefault(parent_key, [])
+        for cand in sibs:
+            if _common_prefix(cand.tokens, tail_tokens) == rem:
+                return None          # already covered
+        if len(sibs) >= _MAX_TAILS:
+            victim = min((c for c in sibs if c.refs == 0),
+                         key=lambda c: c.stamp, default=None)
+            if victim is None:
+                return None
+            self._evict(victim)
+        key = _child_key(parent_key, tail_tokens)
+        pages = self.allocator.alloc(1, f"prefix:{key}")
+        if pages is None:
+            return None
+        copy_page(pages[0])
+        parent = self.nodes.get(parent_key)
+        node = PrefixNode(key=key, namespace=self.namespace(tenant),
+                          depth=depth, page=pages[0],
+                          tokens=tail_tokens.copy(), parent=parent_key
+                          if parent else None, partial=True)
+        if parent is not None:
+            parent.refs += 1
+        self.tails[parent_key].append(node)
+        self._touch(node)
+        self.stats.inserted += 1
+        return node
+
+    # -- eviction -----------------------------------------------------------
+    @property
+    def pages_held(self) -> int:
+        return len(self.nodes) + sum(len(v) for v in self.tails.values())
+
+    def evictable_pages(self) -> int:
+        """Refcount-0 pages: reclaimable on demand, so they count as
+        free budget for admission (``free_token_budget`` honesty)."""
+        return (sum(1 for n in self.nodes.values() if n.refs == 0)
+                + sum(1 for v in self.tails.values()
+                      for n in v if n.refs == 0))
+
+    def _evict(self, node: PrefixNode):
+        assert node.refs == 0, f"evicting referenced node {node.key}"
+        if node.partial:
+            for pk, sibs in list(self.tails.items()):
+                if node in sibs:
+                    sibs.remove(node)
+                    if not sibs:
+                        del self.tails[pk]
+                    break
+        else:
+            del self.nodes[node.key]
+        if node.parent is not None and node.parent in self.nodes:
+            parent = self.nodes[node.parent]
+            assert parent.refs > 0
+            parent.refs -= 1
+        self.allocator.free([node.page])
+        self.stats.evictions += 1
+
+    def reclaim(self, n_pages: int) -> int:
+        """Evict up to ``n_pages`` refcount-0 pages, LRU first (leaves
+        before parents: a child holds a ref on its parent, so parents
+        only become evictable once their subtree is gone).  Returns the
+        number actually freed; referenced pages are never touched."""
+        freed = 0
+        while freed < n_pages:
+            victims = [n for n in self.nodes.values() if n.refs == 0]
+            victims += [n for v in self.tails.values()
+                        for n in v if n.refs == 0]
+            if not victims:
+                break
+            self._evict(min(victims, key=lambda n: n.stamp))
+            freed += 1
+        return freed
+
+    # -- invariants ---------------------------------------------------------
+    def _audit(self):
+        """Allocator-attached auditor (runs inside ``allocator.check()``):
+        every cached page is owned under its ``prefix:<key>`` tag and
+        refcounts are non-negative and at least the child count."""
+        children: dict[str, int] = {}
+        every = list(self.nodes.values()) \
+            + [n for v in self.tails.values() for n in v]
+        for n in every:
+            if n.parent is not None:
+                children[n.parent] = children.get(n.parent, 0) + 1
+        for n in every:
+            assert self.allocator.owners.get(n.page) == f"prefix:{n.key}", \
+                (n.key, n.page, self.allocator.owners.get(n.page))
+            assert n.refs >= children.get(n.key, 0) >= 0, \
+                (n.key, n.refs, children.get(n.key, 0))
+        pages = [n.page for n in every]
+        assert len(set(pages)) == len(pages), "cached page aliased"
+
+    def check(self, row_refs=None):
+        """Full refcount audit.  ``row_refs`` -- an iterable of node
+        lists, one per live engine row (``PagedEngine._shared.values()``)
+        -- lets the caller assert refcounts *exactly*: each node's refs
+        must equal its row references plus its child count."""
+        self._audit()
+        if row_refs is None:
+            return
+        counts: dict[str, int] = {}
+        for nodes in row_refs:
+            for n in nodes:
+                counts[n.key] = counts.get(n.key, 0) + 1
+        children: dict[str, int] = {}
+        every = list(self.nodes.values()) \
+            + [n for v in self.tails.values() for n in v]
+        for n in every:
+            if n.parent is not None:
+                children[n.parent] = children.get(n.parent, 0) + 1
+        for n in every:
+            want = counts.get(n.key, 0) + children.get(n.key, 0)
+            assert n.refs == want, (n.key, n.refs, want)
+
+
+def _common_prefix(a: np.ndarray, b: np.ndarray) -> int:
+    n = min(len(a), len(b))
+    if n == 0:
+        return 0
+    neq = np.nonzero(a[:n] != b[:n])[0]
+    return int(neq[0]) if len(neq) else n

@@ -106,11 +106,21 @@ def assert_conserved(fleet):
             continue
         eng = handle.engine
         if getattr(eng, "paged", False):
-            eng.allocator.check()
-            held = sum(len(eng._row_pages(row)) for row in eng.requests)
-            assert eng.allocator.used_pages == held, \
-                (name, eng.allocator.used_pages, held)
-            want = (eng.allocator.free_pages * eng.page_size
+            # eng.check() runs the allocator audit (including the
+            # prefix cache's refcount auditor when armed) and asserts
+            # used == row-held private + cache-held shared pages
+            eng.check()
+            cache = getattr(eng, "prefix_cache", None)
+            cached = cache.pages_held if cache is not None else 0
+            shared = getattr(eng, "_shared", {})
+            held = sum(len(eng._row_pages(row)) - len(shared.get(row, ()))
+                       for row in eng.requests)
+            assert eng.allocator.used_pages == held + cached, \
+                (name, eng.allocator.used_pages, held, cached)
+            # refcount-0 shared pages are evictable on demand, so they
+            # still count toward the admission budget
+            evictable = cache.evictable_pages() if cache is not None else 0
+            want = ((eng.allocator.free_pages + evictable) * eng.page_size
                     if eng.free_slots else 0)
             assert eng.free_token_budget == want, (name,)
         elif hasattr(eng, "free_token_budget"):

@@ -351,8 +351,8 @@ def test_preempted_and_migrated_trace_is_one_connected_tree():
 
 def test_summary_contract_unchanged_and_tracing_optional():
     """The summary() keys bench_fleet.py and the contract tests read
-    are unchanged (slo rides alongside), and tracer=False disables
-    tracing cleanly."""
+    are unchanged (slo and prefix ride alongside), and tracer=False
+    disables tracing cleanly."""
     fleet = FleetController(
         [EngineHandle("e0", mk_engine(seed=0, slots=2), EDGE)],
         authority=TrustAuthority(), tracer=False)
@@ -361,7 +361,9 @@ def test_summary_contract_unchanged_and_tracing_optional():
                       for i in range(2)])
     assert len(outs) == 2
     s = fleet.telemetry.summary()
-    assert set(s) == {"engines", "fleet", "lifecycle", "slo"}
+    assert set(s) == {"engines", "fleet", "lifecycle", "slo", "prefix"}
+    assert set(s["prefix"]) == {"hits", "misses", "evictions",
+                                "bytes_saved", "hit_rate"}
     assert set(s["fleet"]) == {"tokens", "tokens_per_s", "rejected",
                                "failovers", "migrations", "p50", "p95",
                                "p99"}
@@ -432,3 +434,44 @@ def test_engine_profile_hook_fires_once_per_program_key():
     while not req2.done:
         eng.step()
     assert len(calls) == 2
+
+
+def test_otlp_export_structure(tmp_path):
+    """OTLP-JSON export: one ExportTraceServiceRequest whose spans
+    mirror the tracer's store -- resource/scope framing, 32/16-char hex
+    ids, parent links resolving within the same trace, nanosecond
+    timestamps ordered, and ints carried as strings per the OTLP JSON
+    mapping."""
+    fleet = FleetController(
+        [EngineHandle("edge", mk_engine(seed=0, slots=2), EDGE)],
+        authority=TrustAuthority())
+    for i in range(2):
+        t = fleet.submit(RequestSpec(prompt=np.arange(5), rid=f"r{i}",
+                                     max_new_tokens=4))
+        while not t.done:
+            fleet.step()
+    fleet.tracer.close_open(reason="test done")
+    out = tmp_path / "otlp.json"
+    fleet.tracer.export_otlp(str(out))
+    doc = json.loads(out.read_text())
+    (rs,) = doc["resourceSpans"]
+    res_attrs = {a["key"]: a["value"] for a in rs["resource"]["attributes"]}
+    assert res_attrs["service.name"]["stringValue"] == "repro-fleet"
+    (ss,) = rs["scopeSpans"]
+    assert ss["scope"]["name"] == "repro.fleet.tracing"
+    spans = ss["spans"]
+    assert len(spans) == len(fleet.tracer.spans)
+    by_trace: dict[str, set] = {}
+    for sp in spans:
+        assert len(sp["traceId"]) == 32 and len(sp["spanId"]) == 16
+        assert int(sp["endTimeUnixNano"]) >= int(sp["startTimeUnixNano"])
+        by_trace.setdefault(sp["traceId"], set()).add(sp["spanId"])
+        for attr in sp["attributes"]:
+            v = attr["value"]
+            if "intValue" in v:       # OTLP JSON: 64-bit ints as strings
+                assert isinstance(v["intValue"], str)
+    for sp in spans:                  # parents resolve within the trace
+        if "parentSpanId" in sp:
+            assert sp["parentSpanId"] in by_trace[sp["traceId"]]
+    # both requests produced distinct traces
+    assert len(by_trace) >= 2

@@ -309,7 +309,7 @@ def test_v2_repack_is_budget_check_only():
 
 def test_unknown_wire_version_rejected_loudly():
     snap = synthetic_paged_snapshot(seed=0)
-    snap.version = 3
+    snap.version = 99
     blob = pack_slot(snap)
     like = jax.eval_shape(lambda: snap.arrays)
     with pytest.raises(ValueError, match="unknown pack_slot wire version"):

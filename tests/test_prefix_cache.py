@@ -1,0 +1,354 @@
+"""Multi-tenant prefix KV cache: refcount conservation under a
+hand-rolled randomized property harness (>= 300 trials against a bare
+``PageAllocator`` -- no jax in play), COW isolation of shared pages,
+eviction-never-frees-referenced, tenant isolation, warm-admission
+bit-exactness (full hit and suffix-only partial hit), honest admission
+under an evictable-page budget, the v3 suffix-only wire format, and the
+fleet-level counters/affinity wiring.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.configs.tiny import make_tiny
+from repro.core.migration import pack_slot, unpack_slot
+from repro.serving.engine import Request
+from repro.serving.paged import PageAllocator, PagedEngine
+from repro.serving.prefix_cache import PrefixCache
+
+CFG = make_tiny(get("llama-1.5b"))
+PARAMS = None
+
+
+def _params():
+    global PARAMS
+    if PARAMS is None:
+        from repro.models.init import init_params
+        PARAMS = init_params(CFG, jax.random.key(0))
+    return PARAMS
+
+
+def mk_paged(seed=0, page_size=8, rows=4, pages=None, max_len=64, **kw):
+    kw.setdefault("prefix_cache", True)
+    return PagedEngine(CFG, _params(), page_size=page_size, rows=rows,
+                      pages=pages, max_len=max_len, seed=seed, **kw)
+
+
+def mk_req(rid, prompt, max_new=6, **kw):
+    return Request(rid, np.asarray(prompt), max_new_tokens=max_new, **kw)
+
+
+def drain(eng, reqs):
+    for r in reqs:
+        assert eng.add_request(r)
+    while eng.requests:
+        eng.step()
+    return {r.rid: r.output for r in reqs}
+
+
+def pool_pages(eng, page):
+    """Every layer's k/v pool bytes at one physical page (the material
+    a shared node's consumers read)."""
+    out = []
+    for group in eng.state.caches:
+        for layer in group:
+            a = layer["attn"]
+            out.append(np.asarray(a["k_pool"][:, page]))
+            out.append(np.asarray(a["v_pool"][:, page]))
+    return out
+
+
+# -- property harness: refcounts vs a bare allocator --------------------------
+
+def test_prefix_cache_refcount_property_harness_300_trials():
+    """>= 300 randomized admit/retire/reclaim trials against a bare
+    ``PageAllocator``, mimicking exactly what the engine does (match ->
+    acquire -> donate missing blocks -> release on retire), with the
+    full invariant set audited after EVERY operation: allocator
+    conservation, cache ownership tags, refs == row refs + child count,
+    and eviction never touching a referenced page."""
+    trials = 0
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        ps = int(rng.choice([4, 8]))
+        total = int(rng.integers(12, 48))
+        alloc = PageAllocator(total)
+        cache = PrefixCache(alloc, page_size=ps, token_bytes=2)
+        # a few streams per tenant, later ones sharing earlier prefixes
+        streams = {}
+        for t in ("a", "b", "c"):
+            base = rng.integers(5, 1000, 3 * ps)
+            streams[t] = [base,
+                          np.concatenate([base[:2 * ps],
+                                          rng.integers(5, 1000, ps + 3)]),
+                          np.concatenate([base[:ps],
+                                          rng.integers(5, 1000, 5)])]
+        rows: dict[int, list] = {}       # row -> acquired nodes
+        privates: dict[int, list] = {}   # row -> privately-owned pages
+        next_row = 0
+
+        def audit():
+            alloc.check()                # runs cache._audit too
+            cache.check(rows.values())
+            assert alloc.free_pages + alloc.used_pages == total
+            private = sum(len(p) for p in privates.values())
+            assert alloc.used_pages == private + cache.pages_held
+
+        for _ in range(60):
+            trials += 1
+            dice = rng.random()
+            if dice < 0.55:              # admit
+                t = str(rng.choice(list(streams)))
+                toks = streams[t][int(rng.integers(len(streams[t])))]
+                full, tail, hit = cache.match(t, toks)
+                n_blocks = (len(toks) + ps - 1) // ps
+                need = n_blocks - len(full)
+                pages = alloc.alloc(need, f"row{next_row}")
+                if pages is None:
+                    cache.reclaim(need - alloc.free_pages)
+                    pages = alloc.alloc(need, f"row{next_row}")
+                if pages is None:
+                    audit()
+                    continue             # honestly full: skip
+                cache.acquire(full)
+                row, next_row = next_row, next_row + 1
+                rows[row], privates[row] = list(full), pages
+                # donate the uncovered full blocks, engine-style
+                for d in range(len(full), len(toks) // ps):
+                    node = cache.adopt(t, toks, d, privates[row][0])
+                    if node is None:
+                        break
+                    privates[row].pop(0)
+                    cache.acquire([node])
+                    rows[row].append(node)
+                if len(toks) % ps and rng.random() < 0.7:
+                    cache.adopt_tail(t, toks, lambda dst: None)
+                cache.account(hit)
+            elif dice < 0.85 and rows:   # retire
+                row = int(rng.choice(list(rows)))
+                cache.release(rows.pop(row))
+                pages = privates.pop(row)
+                if pages:
+                    alloc.free(pages)
+            else:                        # reclaim under pressure
+                referenced = {n.page
+                              for nodes in rows.values() for n in nodes}
+                before = cache.pages_held
+                freed = cache.reclaim(int(rng.integers(1, 6)))
+                assert cache.pages_held == before - freed
+                for page in referenced:  # never frees a referenced page
+                    assert alloc.owners.get(page, "").startswith("prefix:")
+            audit()
+        # drain everything: with no rows left, only child refs remain,
+        # so leaf-first reclaim must empty the cache completely
+        for row in list(rows):
+            cache.release(rows.pop(row))
+            if privates[row]:
+                alloc.free(privates.pop(row))
+        cache.reclaim(total)
+        assert cache.pages_held == 0
+        audit()
+    assert trials >= 300, trials
+
+
+def test_lru_eviction_order_and_refcount_guard():
+    ps = 4
+    alloc = PageAllocator(8)
+    cache = PrefixCache(alloc, page_size=ps)
+    streams = [np.arange(ps) + 10 * i for i in range(3)]
+    nodes = []
+    for toks in streams:
+        page = alloc.alloc(1, "tmp")[0]
+        nodes.append(cache.adopt("t", toks, 0, page))
+    cache.match("t", streams[0])         # stream 0 most recently used
+    cache.acquire([nodes[2]])            # stream 2 pinned by a "row"
+    assert cache.reclaim(3) == 2         # only the two refcount-0 pages
+    assert nodes[1].key not in cache.nodes   # LRU victim went first
+    assert nodes[2].key in cache.nodes   # referenced: untouchable
+    assert cache.stats.evictions == 2
+    cache.release([nodes[2]])
+    assert cache.reclaim(1) == 1
+    assert cache.pages_held == 0
+
+
+def test_match_is_tenant_isolated_and_cross_tenant_opt_in():
+    ps = 4
+    toks = np.arange(2 * ps) + 5
+    for cross, want in [((), 0), (("a", "b"), 2 * ps)]:
+        alloc = PageAllocator(8)
+        cache = PrefixCache(alloc, page_size=ps, cross_tenant=cross)
+        for d in range(2):
+            node = cache.adopt("a", toks, d, alloc.alloc(1, "tmp")[0])
+            assert node is not None
+        assert cache.hit_tokens("a", toks) == 2 * ps
+        assert cache.hit_tokens("b", toks) == want
+        alloc.auditors.clear()
+
+
+# -- engine: COW isolation + bit-exactness ------------------------------------
+
+def test_warm_full_hit_is_bit_exact_and_skips_prefill():
+    eng = mk_paged(rows=1)
+    prompt = np.arange(2, 22)            # 2 full pages + 4-token tail
+    cold = drain(eng, [mk_req("cold", prompt)])["cold"]
+    assert eng.last_prefix_hit == 0
+
+    def boom(*a, **kw):
+        raise AssertionError("full hit must not run a forward pass")
+    eng._prefill_fn = eng._suffix_fn = boom
+    warm = drain(eng, [mk_req("warm", prompt)])["warm"]
+    assert eng.last_prefix_hit == len(prompt)    # tail COW included
+    assert warm == cold, "full-prefix hit must decode bit-exactly"
+    eng.check()
+
+
+def test_partial_hit_suffix_prefill_matches_cold_run():
+    donor_prompt = np.arange(2, 18)      # 2 full pages
+    prompt = np.concatenate([donor_prompt[:8],
+                             np.arange(40, 50)])  # shares block 0 only
+    cold = drain(mk_paged(rows=1, prefix_cache=False),
+                 [mk_req("x", prompt)])["x"]
+    eng = mk_paged(rows=1)
+    drain(eng, [mk_req("donor", donor_prompt)])
+    warm = drain(eng, [mk_req("x", prompt)])["x"]
+    assert eng.last_prefix_hit >= 8
+    assert warm == cold, \
+        "suffix-only prefill must match the cold run token for token"
+    eng.check()
+
+
+def test_cow_shared_pages_are_immutable():
+    """A second request decoding over a shared chain never writes the
+    shared pages: its first decode position lands in a COW-forked
+    private copy, so the cached bytes are bit-identical before/after."""
+    eng = mk_paged(rows=2)
+    prompt = np.arange(2, 14)            # 1 full page + 4-token tail
+    drain(eng, [mk_req("donor", prompt)])
+    cache = eng.prefix_cache
+    shared = [n.page for n in cache.nodes.values()] \
+        + [n.page for v in cache.tails.values() for n in v]
+    assert shared, "donor must have donated"
+    before = {p: pool_pages(eng, p) for p in shared}
+    out = drain(eng, [mk_req("warm", prompt, max_new=8)])["warm"]
+    assert len(out) == 8
+    for p in shared:
+        for a, b in zip(before[p], pool_pages(eng, p)):
+            assert np.array_equal(a, b), \
+                f"shared page {p} mutated by a consumer's decode"
+    eng.check()
+
+
+# -- admission honesty --------------------------------------------------------
+
+def test_admission_counts_evictable_pages_and_reclaims():
+    eng = mk_paged(rows=2, pages=6, max_len=64)
+    ps = eng.page_size
+    # park 2 refcount-0 pages in the cache (admit + retire)
+    drain(eng, [mk_req("seed", np.arange(2, 2 + 2 * ps), max_new=1)])
+    free, evict = eng.allocator.free_pages, eng._evictable_pages()
+    # only the leaf is refcount-0 (its child ref pins the parent), so
+    # the evictable budget is conservative: 1 page now, the parent
+    # becomes reclaimable once the leaf goes
+    assert evict == 1
+    assert eng.free_token_budget == (free + evict) * ps
+    # a request needing more than the free pages but within
+    # free + evictable must be admittable -- and admitting it must
+    # actually reclaim cached pages rather than fail
+    need = (free + 1) * ps
+    assert eng.can_admit(need)
+    req = mk_req("big", np.arange(3, 3 + need - 1), max_new=1)
+    assert eng.add_request(req)
+    assert eng.prefix_cache.stats.evictions > 0
+    eng.check()
+    # the max_len bound is never weakened by a cached prefix
+    assert not eng.can_admit(eng.max_len + 1, cached_tokens=eng.max_len)
+
+
+# -- v3 suffix-only migration -------------------------------------------------
+
+def test_v3_suffix_only_migration_bit_exact_and_smaller():
+    prompt = np.arange(2, 26)            # 3 full pages
+    reference = drain(mk_paged(seed=0, rows=1),
+                      [mk_req("r", prompt, max_new=8)])["r"]
+
+    src, dst = mk_paged(seed=0, rows=1), mk_paged(seed=0, rows=1)
+    drain(dst, [mk_req("warmer", prompt, max_new=1)])  # dst holds chain
+    req = mk_req("r", prompt, max_new=8)
+    assert src.add_request(req)
+    for _ in range(3):
+        src.step()
+    slot = next(iter(src.requests))
+    full_blob = pack_slot(src.extract_slot(slot, keep=True))
+    snap = src.extract_slot(slot, suffix_only=True)
+    assert snap.version == 3
+    assert snap.prefix and len(snap.prefix["chain"]) == 3
+    blob = pack_slot(snap)
+    assert len(blob) < len(full_blob), (len(blob), len(full_blob))
+
+    moved = dst.inject_slot(unpack_slot(blob, dst.slot_like()))
+    while dst.requests:
+        dst.step()
+    assert moved.output == reference, \
+        "suffix-only hand-off must resume bit-exactly"
+    src.check(), dst.check()
+
+
+def test_v3_inject_without_chain_fails_loudly():
+    prompt = np.arange(2, 26)
+    src = mk_paged(seed=0, rows=1)
+    assert src.add_request(mk_req("r", prompt, max_new=8))
+    src.step()
+    snap = src.extract_slot(next(iter(src.requests)), suffix_only=True)
+    blob = pack_slot(snap)
+    cold_dst = mk_paged(seed=0, rows=1)  # cache armed, chain missing
+    with pytest.raises(ValueError, match="missing the 3-block chain"):
+        cold_dst.inject_slot(unpack_slot(blob, cold_dst.slot_like()))
+    plain_dst = mk_paged(seed=0, rows=1, prefix_cache=False)
+    with pytest.raises(ValueError, match="v2"):
+        plain_dst.inject_slot(unpack_slot(blob, plain_dst.slot_like()))
+
+
+# -- fleet wiring: router affinity + telemetry counters -----------------------
+
+def test_router_affinity_prefers_warm_engine():
+    from repro.core.daemon import EDGE
+    from repro.fleet import EngineHandle
+    from repro.fleet.router import Router
+
+    cold, warm = mk_paged(seed=1, rows=2), mk_paged(seed=2, rows=2)
+    prompt = np.arange(2, 18)            # 2 full pages
+    drain(warm, [mk_req("seed", prompt, max_new=1)])
+    handles = [EngineHandle("cold", cold, EDGE),
+               EngineHandle("warm", warm, EDGE)]
+    dec = Router().route(handles, CFG, sensitivity="public",
+                         prefill_tokens=len(prompt), decode_tokens=4,
+                         tokens=prompt, tenant="")
+    assert dec.target == "warm" and dec.prefix_hit == 16
+    assert dec.to_attrs()["route_prefix_hit"] == 16
+
+
+def test_fleet_harvests_prefix_counters():
+    from repro.core.attestation import TrustAuthority
+    from repro.core.daemon import EDGE
+    from repro.fleet import EngineHandle, FleetController, RequestSpec
+
+    fleet = FleetController(
+        [EngineHandle("solo", mk_paged(seed=3, rows=2), EDGE)],
+        authority=TrustAuthority())
+    prompt = np.arange(2, 18)
+    for i in range(2):
+        t = fleet.submit(RequestSpec(rid=f"s{i}", prompt=prompt,
+                                     max_new_tokens=2, tenant="ada"))
+        while not t.done:
+            fleet.step()
+    tel = fleet.telemetry
+    assert tel.prefix_hits == 1 and tel.prefix_misses == 1
+    assert tel.prefix_bytes_saved > 0
+    s = tel.summary()["prefix"]
+    assert s["hit_rate"] == 0.5
+    text = tel.prometheus_text()
+    assert "fleet_prefix_hits_total 1" in text
+    assert "fleet_prefix_misses_total 1" in text
+    assert "fleet_prefix_bytes_saved_total" in text
