@@ -22,7 +22,8 @@ if [ "${LINT:-0}" = "1" ]; then
         tests/test_fleet.py tests/test_fleet_lifecycle.py \
         tests/test_fleet_speculation.py tests/test_fleet_autoscale.py \
         tests/test_fleet_quality.py tests/test_fleet_tracing.py \
-        tests/test_paging.py tests/test_prefix_cache.py
+        tests/test_paging.py tests/test_prefix_cache.py \
+        tests/test_program_cache.py
     ruff format --diff src/repro/fleet \
         || echo "note: ruff format suggestions above are advisory"
 fi

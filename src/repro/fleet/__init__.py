@@ -31,7 +31,13 @@ autoscaler  -- elastic pool membership: per-tier EngineTemplate pools +
                (new engine joins router/balancer at once) and
                drain-then-retire (every slot migrates or parks via the
                migration path -- scaling is migration), with typed
-               ScaleEvents on the unified audit log
+               ScaleEvents on the unified audit log; a warm-standby
+               pool (ScalePolicy.standby_pool) keeps pre-attested,
+               program-warmed engines outside the routable set and
+               promotes one in microseconds, pre-armed off EWMA
+               arrival-rate / queue-slope forecasts
+               (prearm_horizon_s) and prefix-prewarmed from a
+               same-tier donor on promote/spawn
 
 Quality tiers (core.replication.QualityTier) are a first-class routing
 dimension: engines carry a tier (distinct weights -- full bf16, int8,

@@ -34,6 +34,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, ClassVar, Optional
 
+from repro.core.attestation import Attester, capabilities, measure_config
 from repro.core.daemon import DeviceProfile
 from repro.core.replication import FULL_TIER, QualityTier
 from repro.fleet.cluster import EngineHandle
@@ -86,7 +87,17 @@ class ScalePolicy:
     Scale-up fires when ANY armed pressure signal trips; scale-down
     only when the backlog is empty and mean slot utilization sits at or
     below ``scale_down_util``.  ``cooldown_s`` (fleet clock) separates
-    consecutive scale events so one burst cannot thrash the pool."""
+    consecutive scale events so one burst cannot thrash the pool.
+
+    Warm capacity: ``standby_pool > 0`` keeps that many pre-built,
+    pre-attested, program-warmed engines OUTSIDE the routable set;
+    scale-up then *promotes* (registers a handle -- milliseconds)
+    instead of constructing.  With ``prearm_horizon_s > 0`` the pool
+    fills only when the queue-trend forecast (EWMA arrival rate +
+    depth slope) projects the scale-up depth trigger within the
+    horizon; at 0 the pool is kept topped up unconditionally.
+    ``prefix_prewarm`` bounds how many hot prefix chains a spawned or
+    promoted paged engine grafts from a same-tier donor (0 = off)."""
     min_engines: int = 1
     max_engines: int = 4
     scale_up_queue_depth: int = 4    # pending items (fresh+parked); 0 = off
@@ -95,13 +106,41 @@ class ScalePolicy:
     scale_down_util: float = 0.25    # mean occupied-slot fraction
     cooldown_s: float = 0.0
     window: int = 64                 # queue-wait samples for the p95
+    standby_pool: int = 0            # warm standbys to hold (0 = off)
+    prearm_horizon_s: float = 0.0    # forecast lookahead; 0 = always fill
+    prefix_prewarm: int = 4          # top-K chains grafted on spawn/promote
+
+    def _want_prearm(self, sig: "ScaleSignals") -> str:
+        """Should the standby pool grow?  Returns the reason, or ""."""
+        if self.standby_pool <= 0 or sig.standbys >= self.standby_pool \
+                or sig.engines >= self.max_engines:
+            return ""
+        if self.prearm_horizon_s <= 0:
+            return (f"standby pool {sig.standbys}/{self.standby_pool} "
+                    "below target")
+        h = self.prearm_horizon_s
+        # two trend projections, believe the worse: queued depth growing
+        # (slope) and raw arrivals outpacing service (EWMA rate)
+        forecast = max(sig.depth + max(sig.depth_slope, 0.0) * h,
+                       sig.depth + max(sig.arrival_rate, 0.0) * h)
+        if 0 < self.scale_up_queue_depth <= forecast:
+            return (f"forecast depth {forecast:.1f} >= "
+                    f"{self.scale_up_queue_depth} within {h:.3f}s "
+                    f"(rate {sig.arrival_rate:.2f}/s, "
+                    f"slope {sig.depth_slope:.2f}/s)")
+        return ""
 
     def decide(self, sig: "ScaleSignals", *, now: float,
                last_scale: Optional[float]) -> tuple[Optional[str], str]:
-        """Pure decision: ("up"|"down"|None, reason).  Separated from
-        application so tests can drive it without real engines."""
+        """Pure decision: ("up"|"down"|"prearm"|None, reason).
+        Separated from application so tests can drive it without real
+        engines.  "prearm" asks for a standby build -- off the dispatch
+        path, exempt from cooldown (pre-arming is preparation, not a
+        membership change, so it must not be gated by -- or consume --
+        the scale cooldown)."""
+        prearm = self._want_prearm(sig)
         if last_scale is not None and now - last_scale < self.cooldown_s:
-            return None, "cooldown"
+            return ("prearm", prearm) if prearm else (None, "cooldown")
         if sig.engines < self.min_engines:
             return "up", f"pool {sig.engines} below min {self.min_engines}"
         if sig.engines < self.max_engines:
@@ -115,6 +154,8 @@ class ScalePolicy:
             if self.scale_up_on_expiry and sig.expired_delta > 0:
                 return "up", (f"{sig.expired_delta} deadline expiries "
                               "since last decision")
+        if prearm:
+            return "prearm", prearm
         if sig.engines > self.min_engines and sig.depth == 0 \
                 and sig.utilization <= self.scale_down_util:
             return "down", (f"idle: utilization {sig.utilization:.2f} <= "
@@ -130,20 +171,42 @@ class ScaleSignals:
     expired_delta: int               # deadline expiries since last look
     utilization: float               # mean occupied-slot fraction
     engines: int                     # routable pool size
+    # queue-trend forecast inputs (EWMA-smoothed, fleet clock):
+    arrival_rate: float = 0.0        # admissions per second
+    depth_slope: float = 0.0         # d(depth)/dt, signed
+    standbys: int = 0                # warm engines held outside the pool
 
 
 @dataclass
 class ScaleEvent:
     """One fleet membership change on the unified audit log.  The
     ``kind`` discriminator is how the mixed log is filtered -- no more
-    dummy ``rid`` field to survive per-request scans."""
+    dummy ``rid`` field to survive per-request scans.  ``action`` is
+    "spawn" | "retire" | "prearm" (a standby built outside the routable
+    set -- pool size unchanged); promotions record as "spawn" with the
+    provenance in ``reason``."""
     kind: ClassVar[str] = "scale"    # audit-log discriminator
-    action: str                      # "spawn" | "retire"
+    action: str                      # "spawn" | "retire" | "prearm"
     engine: str
     reason: str
     t: float                         # fleet clock at the decision
     engines: int = 0                 # routable pool size AFTER the event
     signals: Optional[ScaleSignals] = None
+
+
+@dataclass
+class StandbyEngine:
+    """One warm-pool entry: a fully constructed engine held OUTSIDE the
+    routable set -- attested at build time (when the fleet has an
+    authority) and program-warmed (its decode program has executed
+    once, so the geometry's XLA compile is already paid).  Promotion is
+    handle registration only."""
+    name: str
+    engine: Any
+    template: EngineTemplate
+    attester: Any = None
+    build_s: float = 0.0             # off-path construct+warm cost
+    cache_hit: bool = False          # programs served from the cache
 
 
 class Autoscaler:
@@ -173,9 +236,18 @@ class Autoscaler:
         self.policy = policy or ScalePolicy()
         self.spawned: list[str] = []     # live spawned engine names
         self.events: list[ScaleEvent] = []
+        self.standbys: list[StandbyEngine] = []   # the warm pool
+        self.promotions = 0              # scale-ups served from the pool
         self._n_spawned = 0              # ever, for unique names/seeds
         self._last_scale: Optional[float] = None
         self._expired_seen = 0
+        self._prearm_due = ""            # reason; built off-path
+        # queue-trend observation state (EWMA, fleet clock)
+        self._obs_t: Optional[float] = None
+        self._obs_depth = 0
+        self._obs_arrived = 0
+        self._rate: Optional[float] = None
+        self._slope: Optional[float] = None
 
     @property
     def template(self) -> EngineTemplate:
@@ -183,6 +255,26 @@ class Autoscaler:
         return next(iter(self.templates.values()))
 
     # -- observation --------------------------------------------------------
+    def _observe(self, fleet):
+        """Advance the queue-trend estimators (once per step): EWMA of
+        the admission rate (ticket-count delta over the fleet clock)
+        and of the queue-depth slope.  Both feed the prearm forecast."""
+        now = fleet.clock()
+        depth = fleet.queue.depth()
+        arrived = len(fleet.tickets)
+        if self._obs_t is not None:
+            dt = now - self._obs_t
+            if dt > 0:
+                rate = (arrived - self._obs_arrived) / dt
+                slope = (depth - self._obs_depth) / dt
+                a = 0.5
+                self._rate = rate if self._rate is None \
+                    else a * rate + (1 - a) * self._rate
+                self._slope = slope if self._slope is None \
+                    else a * slope + (1 - a) * self._slope
+        self._obs_t, self._obs_depth, self._obs_arrived = \
+            now, depth, arrived
+
     def signals(self, fleet) -> ScaleSignals:
         routable = [h for h in fleet.handles.values()
                     if h.healthy and h.spec_role != "verify"]
@@ -194,7 +286,10 @@ class Autoscaler:
             wait_p95=percentile(waits, 95),
             expired_delta=fleet.telemetry.expired - self._expired_seen,
             utilization=util,
-            engines=len(routable))
+            engines=len(routable),
+            arrival_rate=self._rate or 0.0,
+            depth_slope=self._slope or 0.0,
+            standbys=len(self.standbys))
 
     # -- the per-step hook --------------------------------------------------
     def step(self, fleet) -> Optional[ScaleEvent]:
@@ -203,24 +298,31 @@ class Autoscaler:
         # over .spawned terminating after chaos)
         self.spawned = [n for n in self.spawned
                         if n in fleet.handles and fleet.handles[n].healthy]
+        self._observe(fleet)
         sig = self.signals(fleet)
         now = fleet.clock()
         action, why = self.policy.decide(sig, now=now,
                                          last_scale=self._last_scale)
         # consume the expiry counter only when the scale-up path could
-        # actually act on it (a decision fired, or the up-branch was
-        # evaluated and declined on its merits).  Expiries observed
+        # actually act on it (a scale decision fired, or the up-branch
+        # was evaluated and declined on its merits).  Expiries observed
         # while gated -- cooldown, or pool at max -- stay accumulated
-        # so the signal fires as soon as the gate lifts.
+        # so the signal fires as soon as the gate lifts; a "prearm"
+        # under cooldown never consumes them.
         gated = (self._last_scale is not None
                  and now - self._last_scale < self.policy.cooldown_s)
-        if action is not None or \
+        if action in ("up", "down") or \
                 (not gated and sig.engines < self.policy.max_engines):
             self._expired_seen = fleet.telemetry.expired
         if action == "up":
             return self.scale_up(fleet, reason=why, signals=sig)
         if action == "down":
             return self.scale_down(fleet, reason=why, signals=sig)
+        if action == "prearm":
+            # note the want only: the standby is built by replenish(),
+            # which FleetController.step runs AFTER dispatch -- pool
+            # construction never delays work already queued
+            self._prearm_due = why
         return None
 
     # -- scale events -------------------------------------------------------
@@ -267,41 +369,79 @@ class Autoscaler:
                 return h.engine.cfg, h.engine.params
         # multi-template fleets may NEVER borrow across tiers: stamping
         # tier X on tier Y's weights would serve floored requests below
-        # their contract with no audit trail
-        assert len(self.templates) == 1, \
-            (f"template tier {template.tier.name!r} declares no params "
-             "and no live engine of that tier exists to borrow from")
+        # their contract with no audit trail.  A real exception, not an
+        # assert: under ``python -O`` an assert vanishes and the borrow
+        # silently happens.
+        if len(self.templates) != 1:
+            raise RuntimeError(
+                f"template tier {template.tier.name!r} declares no params "
+                "and no live engine of that tier exists to borrow from "
+                "(cross-tier weight borrowing is forbidden)")
         ref = next(iter(fleet.handles.values())).engine
         return ref.cfg, ref.params
 
+    def _fresh_name(self, fleet, template: EngineTemplate) -> str:
+        taken = set(fleet.handles) | {s.name for s in self.standbys}
+        while f"{template.name}{self._n_spawned}" in taken:
+            self._n_spawned += 1
+        return f"{template.name}{self._n_spawned}"
+
+    def _construct(self, template: EngineTemplate, cfg, params):
+        if template.page_size:
+            return PagedEngine(cfg, params, page_size=template.page_size,
+                               pages=template.pages or None,
+                               rows=template.slots,
+                               max_len=template.max_len,
+                               seed=template.seed + self._n_spawned,
+                               prefix_cache=template.prefix_cache,
+                               shared_tenants=template.shared_tenants)
+        return Engine(cfg, params, slots=template.slots,
+                      max_len=template.max_len,
+                      seed=template.seed + self._n_spawned)
+
     def scale_up(self, fleet, *, reason: str = "manual",
                  signals: Optional[ScaleSignals] = None) -> ScaleEvent:
-        """Instantiate one engine from the backlog-demanded tier's
-        template and register it.  It joins the router/balancer
-        immediately: queued and parked work dispatches onto it in this
-        very step's dispatch pass."""
+        """Add one engine of the backlog-demanded tier to the routable
+        set.  With a matching warm standby the scale-up *promotes* it --
+        handle registration only, milliseconds; programs, attestation
+        and warm-up were paid off-path at build time -- else it falls
+        back to inline construction.  Either way the engine joins the
+        router/balancer immediately: queued and parked work dispatches
+        onto it in this very step's dispatch pass."""
         template = self.pick_template(fleet)
+        sb = next((s for s in self.standbys
+                   if s.template.tier.name == template.tier.name), None)
+        if sb is not None:
+            self.standbys.remove(sb)
+            t0 = time.perf_counter()
+            handle = EngineHandle(sb.name, sb.engine, sb.template.profile,
+                                  attester=sb.attester,
+                                  tier=sb.template.tier)
+            fleet.add_engine(handle)
+            promote_s = time.perf_counter() - t0
+            self.spawned.append(sb.name)
+            self.promotions += 1
+            ev = self._record(fleet, "spawn", sb.name,
+                              f"promoted warm standby: {reason}", signals)
+            if fleet.telemetry.tracer is not None:
+                fleet.telemetry.tracer.annotate_spawn(
+                    sb.name, promoted=True,
+                    construct_s=round(promote_s, 6),
+                    standby_build_s=round(sb.build_s, 6),
+                    cache_hit=sb.cache_hit)
+            self._prefix_prewarm(fleet, handle)
+            # refill off-path at the end of this step
+            self._prearm_due = self._prearm_due or "refill after promotion"
+            return ev
         cfg, params = self._params_for(fleet, template)
-        while f"{template.name}{self._n_spawned}" in fleet.handles:
-            self._n_spawned += 1
-        name = f"{template.name}{self._n_spawned}"
+        name = self._fresh_name(fleet, template)
         t_build = time.perf_counter()
-        if template.page_size:
-            eng = PagedEngine(cfg, params, page_size=template.page_size,
-                              pages=template.pages or None,
-                              rows=template.slots,
-                              max_len=template.max_len,
-                              seed=template.seed + self._n_spawned,
-                              prefix_cache=template.prefix_cache,
-                              shared_tenants=template.shared_tenants)
-        else:
-            eng = Engine(cfg, params, slots=template.slots,
-                         max_len=template.max_len,
-                         seed=template.seed + self._n_spawned)
+        eng = self._construct(template, cfg, params)
         build_s = time.perf_counter() - t_build
         self._n_spawned += 1
-        fleet.add_engine(EngineHandle(name, eng, template.profile,
-                                      tier=template.tier))
+        handle = EngineHandle(name, eng, template.profile,
+                              tier=template.tier)
+        fleet.add_engine(handle)
         self.spawned.append(name)
         ev = self._record(fleet, "spawn", name, reason, signals)
         # the spawn span (opened by the ScaleEvent above, closed by the
@@ -310,8 +450,87 @@ class Autoscaler:
         # child spans via the engine's profile hook
         if fleet.telemetry.tracer is not None:
             fleet.telemetry.tracer.annotate_spawn(
-                name, construct_s=round(build_s, 6))
+                name, construct_s=round(build_s, 6),
+                cache_hit=eng.program_cache_hit)
+        self._prefix_prewarm(fleet, handle)
         return ev
+
+    # -- the warm-standby pool ----------------------------------------------
+    def replenish(self, fleet) -> Optional[ScaleEvent]:
+        """Build at most one pending standby.  ``FleetController.step``
+        calls this AFTER dispatch, so pool construction (the one
+        remaining seconds-scale cost, and only on a cache-cold
+        geometry) never delays work already queued."""
+        if not self._prearm_due:
+            return None
+        why, self._prearm_due = self._prearm_due, ""
+        if len(self.standbys) >= self.policy.standby_pool:
+            return None
+        return self._build_standby(fleet, reason=why)
+
+    def _build_standby(self, fleet, *, reason: str = "prearm") \
+            -> Optional[ScaleEvent]:
+        """Construct + attest + program-warm one engine into the pool.
+
+        The standby is held outside the routable set: no handle, no
+        routing, no load.  Attestation happens NOW (the promoted handle
+        carries the attester, so ``add_engine`` does not re-issue), and
+        the decode program executes once on the fresh inactive state --
+        output discarded, state untouched (jit is functional) -- so the
+        geometry's compile is paid here, not at first useful token."""
+        template = self.pick_template(fleet)
+        cfg, params = self._params_for(fleet, template)
+        name = self._fresh_name(fleet, template)
+        t0 = time.perf_counter()
+        eng = self._construct(template, cfg, params)
+        self._n_spawned += 1
+        attester = None
+        if fleet.authority is not None and template.profile.attested:
+            attester = Attester(name, fleet.authority,
+                                measure_config(eng.cfg),
+                                capabilities(eng.cfg))
+        eng._profiled("decode",
+                      lambda: eng._decode_fn(eng.params, eng.state))
+        build_s = time.perf_counter() - t0
+        self.standbys.append(StandbyEngine(
+            name=name, engine=eng, template=template, attester=attester,
+            build_s=build_s, cache_hit=eng.program_cache_hit))
+        # on the audit log but NOT a membership change: no _last_scale
+        # (prearm must not start a scale cooldown), pool size unchanged
+        pool = len([h for h in fleet.handles.values()
+                    if h.healthy and h.spec_role != "verify"])
+        ev = ScaleEvent(action="prearm", engine=name, reason=reason,
+                        t=fleet.clock(), engines=pool, signals=None)
+        self.events.append(ev)
+        fleet.telemetry.record_scale(ev)
+        return ev
+
+    def _prefix_prewarm(self, fleet, handle):
+        """Graft the hottest prefix chains from the best same-tier
+        donor into a just-added engine (bounded by the policy's
+        ``prefix_prewarm``), so it is warm in *cache*, not just in
+        code.  Best-effort; the outcome -- including a loud skip
+        reason -- lands on the spawn span."""
+        k = self.policy.prefix_prewarm
+        eng = handle.engine
+        if k <= 0 or getattr(eng, "prefix_cache", None) is None:
+            return
+        donors = [h for h in fleet.handles.values()
+                  if h.name != handle.name and h.healthy
+                  and h.tier.name == handle.tier.name
+                  and getattr(h.engine, "prefix_cache", None) is not None
+                  and h.engine.prefix_cache.pages_held > 0]
+        if not donors:
+            return
+        donor = max(donors, key=lambda h: h.engine.prefix_cache.pages_held)
+        report = eng.prewarm_chains(donor.engine, top_k=k)
+        if fleet.telemetry.tracer is not None:
+            attrs = {"prewarm_donor": donor.name,
+                     "prewarm_chains": report["chains"],
+                     "prewarm_pages": report["pages"]}
+            if report["skipped"]:
+                attrs["prewarm_skipped"] = report["skipped"]
+            fleet.telemetry.tracer.annotate_spawn(handle.name, **attrs)
 
     def scale_down(self, fleet, *, reason: str = "manual",
                    signals: Optional[ScaleSignals] = None) \

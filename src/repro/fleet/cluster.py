@@ -29,7 +29,7 @@ from __future__ import annotations
 import time
 import warnings
 from dataclasses import dataclass
-from typing import Optional
+from typing import ClassVar, Optional
 
 from repro.core.attestation import Attester, capabilities, measure_config
 from repro.core.channel import Fabric, NetworkCondition
@@ -69,6 +69,21 @@ class EngineHandle:
     @property
     def reachable(self) -> bool:
         return self.cond is None or (self.cond.up and self.cond.loss < 0.95)
+
+
+@dataclass
+class FloorReject:
+    """A typed admission refusal on the unified audit log: the spec's
+    ``quality_floor`` exceeds every live tier AND every tier the
+    autoscaler could ever spawn, so queueing can never help -- the
+    ticket fails fast with ``hint`` instead of waiting out a deadline
+    the fleet is structurally unable to meet."""
+    kind: ClassVar[str] = "floor_reject"   # audit-log discriminator
+    rid: str
+    floor: float                     # the request's quality floor
+    best: float                      # best quality the fleet could field
+    hint: str                        # actionable cause, also on the ticket
+    t: float                         # fleet clock at admission
 
 
 class FleetController:
@@ -220,6 +235,22 @@ class FleetController:
         ticket = RequestTicket(spec, engine_req, self)
         ticket.seq = self.queue.next_seq()
         self.tickets[engine_req.rid] = ticket
+        # quality-aware admission: a floor no live tier meets AND no
+        # autoscaler template could ever spawn is structurally
+        # unservable -- fail fast with a typed reject-with-hint rather
+        # than queueing until the deadline expires
+        floor = engine_req.quality_floor
+        best = self.best_quality()
+        if floor > best + 1e-12:
+            hint = (f"quality_floor {floor:.2f} exceeds every live and "
+                    f"spawnable tier (best {best:.2f}); lower the floor "
+                    "or register a higher-quality tier/template")
+            self.telemetry.record_floor_reject(FloorReject(
+                rid=engine_req.rid, floor=floor, best=best, hint=hint,
+                t=self.clock()))
+            self.ticket_transition(engine_req.rid, RequestState.FAILED,
+                                   reason=hint)
+            return False if legacy else ticket
         self.queue.push(WorkItem(
             rid=engine_req.rid, priority=engine_req.priority,
             seq=ticket.seq, t_submit=ticket.submitted_at,
@@ -229,6 +260,16 @@ class FleetController:
             quality_floor=engine_req.quality_floor,
             ticket=ticket, req=engine_req))
         return True if legacy else ticket
+
+    def best_quality(self) -> float:
+        """The highest quality tier the fleet could ever field: every
+        registered engine's tier plus every autoscaler template tier
+        (capacity a scale-up could legally create)."""
+        qs = [h.tier.quality for h in self.handles.values()]
+        if self.autoscaler is not None:
+            qs += [t.tier.quality
+                   for t in self.autoscaler.templates.values()]
+        return max(qs, default=0.0)
 
     # -- bookkeeping shared with the balancer ----------------------------------
     def reassign(self, req: Request, handle_name: str):
@@ -577,6 +618,13 @@ class FleetController:
                 self.telemetry.record_migration(rec)
         for handle in self.handles.values():
             self._harvest_prefix(handle)
+        if self.autoscaler is not None:
+            # after dispatch: replenishing the warm-standby pool is the
+            # one remaining seconds-scale cost (and only on a
+            # cache-cold geometry) -- it must never delay queued work
+            replenish = getattr(self.autoscaler, "replenish", None)
+            if replenish is not None:
+                replenish(self)
         self._steps += 1
         return emitted
 
@@ -678,7 +726,8 @@ class FleetController:
         if getattr(handle.engine, "profile_hook", None) is None:
             tracer, name = self.tracer, handle.name
             handle.engine.profile_hook = \
-                lambda key, wall_s: tracer.record_jit(name, key, wall_s)
+                lambda key, wall_s, **meta: tracer.record_jit(
+                    name, key, wall_s, **meta)
 
     def set_link(self, name: str, cond: NetworkCondition | None):
         """Inject (or clear) link conditions for one engine: the fleet-

@@ -27,6 +27,7 @@ from dataclasses import dataclass, field
 
 from repro.configs.base import ModelConfig
 from repro.core.daemon import PrivacyAwareDaemon, placement_allowed
+from repro.serving.prefix_cache import HashedPrefix
 
 
 @dataclass
@@ -201,14 +202,24 @@ class Router:
                 prefix_hit=hit(best))
 
         # cached-prefix affinity: page-aligned overlap between the
-        # stream this handle would prefill and its prefix cache
+        # stream this handle would prefill and its prefix cache.  The
+        # prompt's blocks are hashed ONCE here (lazily, memoized per
+        # namespace/page_size inside HashedPrefix) and every engine is
+        # probed with the precomputed digests -- probing N engines used
+        # to re-hash the full prompt N times per route call
         hits: dict[str, int] = {}
+        hashed = HashedPrefix(tokens) if tokens is not None \
+            and len(tokens) else None
 
         def hit(h):
             if h.name not in hits:
-                probe = getattr(h.engine, "prefix_hit_tokens", None)
-                hits[h.name] = 0 if (probe is None or tokens is None) \
-                    else probe(tenant, tokens)
+                probe = getattr(h.engine, "prefix_hit_tokens_hashed", None)
+                if probe is not None and hashed is not None:
+                    hits[h.name] = probe(tenant, hashed)
+                else:
+                    legacy = getattr(h.engine, "prefix_hit_tokens", None)
+                    hits[h.name] = 0 if (legacy is None or tokens is None) \
+                        else legacy(tenant, tokens)
             return hits[h.name]
 
         # per-handle prefill cost: cross-tier targets pay the lossy

@@ -113,6 +113,7 @@ class FleetTelemetry:
             "fleet_preempt_wait_seconds",
             "Park -> resume latency per preempted request")
         self.rejected = 0
+        self.floor_rejects = 0
         self.failovers = 0
         self.preemptions = 0
         self.cancelled = 0
@@ -207,8 +208,9 @@ class FleetTelemetry:
         self._log(ev)
         if ev.action == "spawn":
             self.scale_ups += 1
-        else:
+        elif ev.action == "retire":
             self.scale_downs += 1
+        # other actions ("prearm") change no membership counter
         if self.tracer is not None:
             self.tracer.on_scale(ev)
 
@@ -257,6 +259,13 @@ class FleetTelemetry:
 
     def record_expired(self):
         self.expired += 1
+
+    def record_floor_reject(self, ev):
+        """A typed quality-floor admission refusal (FloorReject) on the
+        unified audit log: the fleet could never field the demanded
+        tier, so the request failed fast instead of queueing."""
+        self._log(ev)
+        self.floor_rejects += 1
 
     def events_of(self, rid: str) -> list:
         """This request's audit entries, chronological -- served from

@@ -452,17 +452,24 @@ class Tracer:
     def on_scale(self, ev):
         """Spawn opens an engine-lifetime span that stays open until the
         engine's first productive step (time-to-useful); retire closes
-        any such span and marks the membership change."""
+        any such span and marks the membership change.  Other actions
+        (e.g. "prearm": a warm standby built outside the routable set)
+        are instantaneous marks -- they neither open nor close a spawn
+        span."""
         trace = f"engine:{ev.engine}"
         if ev.action == "spawn":
             sp = self._new(trace, "spawn", "spawn", ev.t,
                            engine=ev.engine, reason=ev.reason)
             if sp is not None:
                 self._spawn[ev.engine] = sp
-        else:
+        elif ev.action == "retire":
             self._close(self._spawn.pop(ev.engine, None), ev.t,
                         note="retired before first token")
             mark = self._new(trace, "retire", "mark", ev.t,
+                             engine=ev.engine, reason=ev.reason)
+            self._close(mark, ev.t)
+        else:
+            mark = self._new(trace, ev.action, "mark", ev.t,
                              engine=ev.engine, reason=ev.reason)
             self._close(mark, ev.t)
 
@@ -489,21 +496,28 @@ class Tracer:
             sp.attrs.update(attrs)
 
     # -- jit profiling (Engine.profile_hook) ---------------------------------
-    def record_jit(self, engine: str, key: str, wall_s: float):
+    def record_jit(self, engine: str, key: str, wall_s: float, *,
+                   cache_hit: bool = False):
         """One jitted program build on ``engine`` took ``wall_s`` real
-        seconds (compile-dominated first invocation).  The span is
-        anchored on the fleet clock -- under an injected SimClock the
-        wall duration cannot be laid on the sim timeline, so the span
-        clamps into its parent and keeps the truth in ``wall_s``."""
+        seconds (compile-dominated first invocation).  ``cache_hit``
+        marks a program served already-compiled from the process-wide
+        program cache: the wall is the warm execution, not a build --
+        time-to-useful spans stay honest about where compile cost was
+        (not) paid.  The span is anchored on the fleet clock -- under
+        an injected SimClock the wall duration cannot be laid on the
+        sim timeline, so the span clamps into its parent and keeps the
+        truth in ``wall_s``."""
         now = self._clock()
         parent = self._spawn.get(engine)
         start = now - wall_s
         if parent is not None:
             start = max(start, parent.t_start)
         start = min(max(start, self._t0), now)
+        attrs = {"engine": engine, "wall_s": round(wall_s, 6)}
+        if cache_hit:
+            attrs["cache_hit"] = True
         sp = self._new(f"engine:{engine}", f"jit:{key}", "jit", start,
-                       parent=parent.span_id if parent else None,
-                       engine=engine, wall_s=round(wall_s, 6))
+                       parent=parent.span_id if parent else None, **attrs)
         self._close(sp, now)
 
     # -- wire context (rides pack_slot's meta dict) --------------------------

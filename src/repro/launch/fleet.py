@@ -207,6 +207,16 @@ def main():
     ap.add_argument("--scale-up-queue-depth", type=int, default=4)
     ap.add_argument("--scale-up-wait-p95", type=float, default=None)
     ap.add_argument("--scale-cooldown-s", type=float, default=0.0)
+    ap.add_argument("--warm-pool", type=int, default=0, metavar="N",
+                    help="hold N pre-built, attested, program-warmed "
+                         "standby engines outside the routable set; "
+                         "scale-up promotes one in milliseconds instead "
+                         "of constructing inline (needs --autoscale)")
+    ap.add_argument("--prearm-horizon", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="fill the warm pool only when the queue-trend "
+                         "forecast projects the scale-up depth trigger "
+                         "within this horizon (0 = keep it topped up)")
     ap.add_argument("--aging-rate", type=float, default=0.0)
     ap.add_argument("--sync-every", type=int, default=1)
     ap.add_argument("--rebalance-every", type=int, default=0)
@@ -316,7 +326,9 @@ def main():
             ScalePolicy(min_engines=int(lo), max_engines=int(hi or lo),
                         scale_up_queue_depth=args.scale_up_queue_depth,
                         scale_up_wait_p95=args.scale_up_wait_p95,
-                        cooldown_s=args.scale_cooldown_s))
+                        cooldown_s=args.scale_cooldown_s,
+                        standby_pool=args.warm_pool,
+                        prearm_horizon_s=args.prearm_horizon))
     fleet = FleetController(
         handles, authority=TrustAuthority(),
         balancer=Rebalancer(sync_every=args.sync_every),

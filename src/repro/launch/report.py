@@ -101,7 +101,8 @@ def trace_timelines(trace: dict, rid: str | None = None) -> str:
                 extras = [a.get("engine") or ev.get("engine") or ""]
                 for k in ("reason", "route_tier", "outcome", "state",
                           "wire_bytes", "lossy", "dst",
-                          "time_to_useful_s", "wall_s"):
+                          "time_to_useful_s", "wall_s", "cache_hit",
+                          "promoted", "construct_s", "standby_build_s"):
                     if a.get(k) not in (None, "", False):
                         extras.append(f"{k}={a[k]}")
                 lines.append(

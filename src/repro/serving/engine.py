@@ -17,6 +17,7 @@ bit-identically anywhere.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -29,7 +30,26 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.model import forward, make_cache, vocab_mask_logits
+from repro.serving.program_cache import get_programs
 from repro.serving.sampling import policy_probs, sample
+
+
+def _call_profile_hook(hook, key: str, wall_s: float, *,
+                       cache_hit: bool = False):
+    """Invoke a profile hook, passing ``cache_hit`` only to hooks that
+    can take it (a ``cache_hit`` parameter or ``**kwargs``); legacy
+    two-positional hooks keep working unchanged."""
+    try:
+        params = inspect.signature(hook).parameters
+    except (TypeError, ValueError):
+        hook(key, wall_s)
+        return
+    if "cache_hit" in params or any(
+            p.kind is inspect.Parameter.VAR_KEYWORD
+            for p in params.values()):
+        hook(key, wall_s, cache_hit=cache_hit)
+    else:
+        hook(key, wall_s)
 
 
 @jax.tree_util.register_dataclass
@@ -160,18 +180,34 @@ class Engine:
         self.rules = rules
         self.requests: dict[int, Request] = {}
         self.state = self._fresh_state(seed)
-        self._decode_fn = jax.jit(partial(_decode_step, cfg=cfg, mesh=mesh,
-                                          rules=rules))
-        self._prefill_fn = jax.jit(partial(_prefill, cfg=cfg, mesh=mesh,
+        # jitted programs come from the process-wide program cache: every
+        # engine of one (cfg, mesh, rules, slots, max_len) key shares one
+        # set of callables, so a spawned engine reuses the donor
+        # geometry's compiled prefill/decode/probs/verify with zero
+        # rebuild (``program_cache_hit`` records the provenance)
+        self._programs, self.program_cache_hit = get_programs(
+            "dense", cfg, mesh, rules, slots=slots, max_len=max_len,
+            build=lambda: {
+                "decode": jax.jit(partial(_decode_step, cfg=cfg,
+                                          mesh=mesh, rules=rules)),
+                "prefill": jax.jit(partial(_prefill, cfg=cfg, mesh=mesh,
                                            rules=rules),
-                                   static_argnames=("slot", "plen"))
-        self._verify_fn = jax.jit(partial(_verify_window, cfg=cfg,
-                                          mesh=mesh, rules=rules))
-        self._probs_fn = None        # compiled lazily (distribution verify)
+                                   static_argnames=("slot", "plen")),
+                "verify": jax.jit(partial(_verify_window, cfg=cfg,
+                                          mesh=mesh, rules=rules)),
+                "probs": jax.jit(partial(_decode_step_probs, cfg=cfg,
+                                         mesh=mesh, rules=rules)),
+            })
+        self._decode_fn = self._programs.fns["decode"]
+        self._prefill_fn = self._programs.fns["prefill"]
+        self._verify_fn = self._programs.fns["verify"]
         # jit programs compile on first invocation per program key; the
         # hook (``profile_hook(key, wall_s)``) receives the wall time of
-        # exactly that first call -- compile-dominated -- so the fleet
-        # tracer can attribute program builds to spawn spans
+        # exactly that first call -- compile-dominated when the program
+        # cache missed, ~0 when a peer engine already compiled it (the
+        # hook is then told ``cache_hit=True`` when it can take it) --
+        # so the fleet tracer can attribute program builds to spawn
+        # spans without claiming phantom compiles
         self.profile_hook = profile_hook
         self._compiled: set[str] = set()
 
@@ -180,16 +216,23 @@ class Engine:
         on this engine, time it to completion (``block_until_ready``)
         and report to ``profile_hook``.  Warm keys run untouched, and a
         key is marked warm even with no hook attached so a hook wired in
-        later never reports an already-compiled program as a build."""
+        later never reports an already-compiled program as a build.  A
+        key another engine already ran through the shared program set is
+        reported as a cache hit: the wall time is the (tiny) first
+        dispatch, not a compile."""
         if key in self._compiled:
             return fn()
         self._compiled.add(key)
+        shared = self._programs.compiled
+        warm = key in shared
+        shared.add(key)
         if self.profile_hook is None:
             return fn()
         t0 = time.perf_counter()
         out = fn()
         jax.block_until_ready(out)
-        self.profile_hook(key, time.perf_counter() - t0)
+        _call_profile_hook(self.profile_hook, key,
+                           time.perf_counter() - t0, cache_hit=warm)
         return out
 
     # -- state ------------------------------------------------------------
@@ -329,11 +372,7 @@ class Engine:
 
     @property
     def _decode_probs(self):
-        if self._probs_fn is None:
-            self._probs_fn = jax.jit(partial(
-                _decode_step_probs, cfg=self.cfg, mesh=self.mesh,
-                rules=self.rules))
-        return self._probs_fn
+        return self._programs.fns["probs"]
 
     def retire(self, slot: int):
         self.requests.pop(slot, None)

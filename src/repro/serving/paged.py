@@ -41,8 +41,10 @@ from repro.configs.base import ModelConfig
 from repro.models.layers import make_paged_attn_cache
 from repro.models.model import forward
 from repro.serving.engine import (Request, SlotArrays, SlotSnapshot,
-                                  request_from_dict, request_to_dict)
+                                  _call_profile_hook, request_from_dict,
+                                  request_to_dict)
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.program_cache import get_programs
 from repro.serving.sampling import sample
 
 
@@ -97,12 +99,20 @@ class PageAllocator:
         self.owners[page] = owner
 
     def check(self):
-        """Conservation invariant; raises AssertionError on violation."""
-        assert len(self._free) + len(self.owners) == self.total, \
-            (len(self._free), len(self.owners), self.total)
-        assert len(set(self._free)) == len(self._free), "free-list dup"
-        assert not (set(self._free) & set(self.owners)), \
-            "page both free and owned"
+        """Conservation invariant; raises ``RuntimeError`` on violation.
+
+        Real exceptions, not ``assert``: this is the load-bearing page
+        ledger -- it must keep firing under ``python -O``."""
+        if len(self._free) + len(self.owners) != self.total:
+            raise RuntimeError(
+                f"page ledger broken: {len(self._free)} free + "
+                f"{len(self.owners)} owned != {self.total} total")
+        if len(set(self._free)) != len(self._free):
+            raise RuntimeError("free-list dup")
+        if set(self._free) & set(self.owners):
+            raise RuntimeError(
+                f"pages both free and owned: "
+                f"{sorted(set(self._free) & set(self.owners))}")
         for audit in self.auditors:
             audit()
 
@@ -159,14 +169,24 @@ class PagedEngine:
         self.requests: dict[int, Request] = {}
         self.allocator = PageAllocator(self.pages)
         self.state = self._fresh_state(seed)
-        self._decode_fn = jax.jit(partial(_paged_decode_step, cfg=cfg,
-                                          mesh=mesh, rules=rules))
-        self._prefill_fn = jax.jit(partial(_paged_prefill, cfg=cfg,
+        # shared process-wide programs: the pool size changes cache leaf
+        # shapes, so `pages` is part of the sharing key
+        self._programs, self.program_cache_hit = get_programs(
+            "paged", cfg, mesh, rules, slots=rows, max_len=max_len,
+            page_size=page_size, pages=self.pages,
+            build=lambda: {
+                "decode": jax.jit(partial(_paged_decode_step, cfg=cfg,
+                                          mesh=mesh, rules=rules)),
+                "prefill": jax.jit(partial(_paged_prefill, cfg=cfg,
                                            mesh=mesh, rules=rules),
-                                   static_argnames=("slot", "plen"))
-        self._suffix_fn = jax.jit(partial(_paged_suffix_prefill, cfg=cfg,
+                                   static_argnames=("slot", "plen")),
+                "suffix": jax.jit(partial(_paged_suffix_prefill, cfg=cfg,
                                           mesh=mesh, rules=rules),
-                                  static_argnames=("slot", "slen"))
+                                  static_argnames=("slot", "slen")),
+            })
+        self._decode_fn = self._programs.fns["decode"]
+        self._prefill_fn = self._programs.fns["prefill"]
+        self._suffix_fn = self._programs.fns["suffix"]
         self.profile_hook = profile_hook
         self._compiled: set[str] = set()
         # -- multi-tenant prefix sharing (opt-in) ---------------------------
@@ -194,12 +214,16 @@ class PagedEngine:
         if key in self._compiled:
             return fn()
         self._compiled.add(key)
+        shared = self._programs.compiled
+        warm = key in shared        # another engine already compiled this
+        shared.add(key)
         if self.profile_hook is None:
             return fn()
         t0 = time.perf_counter()
         out = fn()
         jax.block_until_ready(out)
-        self.profile_hook(key, time.perf_counter() - t0)
+        _call_profile_hook(self.profile_hook, key,
+                           time.perf_counter() - t0, cache_hit=warm)
         return out
 
     # -- state ------------------------------------------------------------
@@ -266,6 +290,14 @@ class PagedEngine:
         if self.prefix_cache is None or tokens is None or not len(tokens):
             return 0
         return self.prefix_cache.hit_tokens(tenant, tokens)
+
+    def prefix_hit_tokens_hashed(self, tenant: str, hashed) -> int:
+        """``prefix_hit_tokens`` over a router-precomputed
+        ``HashedPrefix`` -- one hashing pass serves every engine."""
+        if self.prefix_cache is None or hashed is None \
+                or not len(hashed.tokens):
+            return 0
+        return self.prefix_cache.hit_tokens_hashed(tenant, hashed)
 
     @property
     def free_token_budget(self) -> int:
@@ -395,6 +427,86 @@ class PagedEngine:
         self.state = dataclasses.replace(
             s, caches=[[cp(l) for l in grp] for grp in s.caches])
 
+    def _copy_page_from(self, donor: PagedEngine, src: int, dst: int):
+        """Copy one physical page from ``donor``'s pools into this
+        engine's (cross-engine prefix pre-warm).  Pool layer structure
+        matches by precondition: ``prewarm_chains`` only pairs engines
+        of one config/page geometry."""
+        ds = donor.state
+
+        def cp(layer, dlayer):
+            a, b = layer["attn"], dlayer["attn"]
+            return {"attn": {
+                "k_pool": a["k_pool"].at[:, dst].set(
+                    b["k_pool"][:, src].astype(a["k_pool"].dtype)),
+                "v_pool": a["v_pool"].at[:, dst].set(
+                    b["v_pool"][:, src].astype(a["v_pool"].dtype)),
+            }}
+
+        s = self.state
+        self.state = dataclasses.replace(
+            s, caches=[[cp(l, dl) for l, dl in zip(grp, dgrp)]
+                       for grp, dgrp in zip(s.caches, ds.caches)])
+
+    def prewarm_chains(self, donor: PagedEngine, *, top_k: int = 4) -> dict:
+        """Pre-warm this engine's prefix cache from a same-geometry
+        donor: graft the donor's hottest refcount>0 full-block chains
+        (most recently touched first, at most ``top_k`` chains) by
+        copying each page into a locally allocated one.  Spawned and
+        promoted engines come up warm in *cache*, not just in code.
+
+        Best-effort with a *loud skip*: the report says how many chains
+        and pages landed and why it stopped (``skipped``), it never
+        raises -- prewarm is an optimization, not a correctness step.
+        """
+        report = {"chains": 0, "pages": 0, "skipped": None}
+        mine, theirs = self.prefix_cache, donor.prefix_cache
+        if mine is None or theirs is None:
+            report["skipped"] = "no prefix cache on donor or target"
+            return report
+        if (donor.page_size != self.page_size
+                or donor.cfg.name != self.cfg.name):
+            report["skipped"] = (
+                f"geometry mismatch: donor {donor.cfg.name}"
+                f"/ps={donor.page_size} vs {self.cfg.name}"
+                f"/ps={self.page_size}")
+            return report
+        # hottest chain := most recently touched hot (refcount>0) node;
+        # the chain is that node's ancestry, grafted root-first
+        hot = sorted((n for n in theirs.nodes.values() if n.refs > 0),
+                     key=lambda n: n.stamp, reverse=True)
+        planned: list = []
+        chains = 0
+        for leaf in hot:
+            if chains >= top_k:
+                break
+            chain = []
+            node, seen = leaf, {n.key for n in planned}
+            while node is not None:
+                if node.key in seen or node.key in mine.nodes:
+                    break            # ancestry already planned/local
+                chain.append(node)
+                node = theirs.nodes.get(node.parent) \
+                    if node.parent is not None else None
+            if not chain:
+                continue
+            planned.extend(reversed(chain))
+            chains += 1
+        for node in planned:
+            pages = self.allocator.alloc(1, f"prewarm:{node.key}")
+            if pages is None:
+                report["skipped"] = (
+                    f"page budget exhausted after {report['pages']} of "
+                    f"{len(planned)} pages")
+                break
+            self._copy_page_from(donor, node.page, pages[0])
+            if mine.graft(node, pages[0]) is None:
+                self.allocator.free(pages)
+                continue
+            report["pages"] += 1
+        report["chains"] = chains
+        return report
+
     def _donate(self, row: int, tenant: str, prefix: np.ndarray, hit: int):
         """Publish this row's freshly prefilled prompt blocks into the
         cache: full blocks transfer page ownership in place (the row
@@ -459,14 +571,18 @@ class PagedEngine:
         (used == row-private + cache-held), and exact refcounts against
         the live rows' shared chains."""
         self.allocator.check()
-        assert set(self._shared) <= set(self.requests), \
-            (sorted(self._shared), sorted(self.requests))
+        if not set(self._shared) <= set(self.requests):
+            raise RuntimeError(
+                f"shared-chain rows without live requests: "
+                f"{sorted(set(self._shared) - set(self.requests))}")
         private = sum(len(self._row_pages(r)) - len(self._shared.get(r, ()))
                       for r in self.requests)
         held = self.prefix_cache.pages_held \
             if self.prefix_cache is not None else 0
-        assert self.allocator.used_pages == private + held, \
-            (self.allocator.used_pages, private, held)
+        if self.allocator.used_pages != private + held:
+            raise RuntimeError(
+                f"page ledger broken: used={self.allocator.used_pages} != "
+                f"private={private} + cache-held={held}")
         if self.prefix_cache is not None:
             self.prefix_cache.check(self._shared.values())
 
@@ -582,12 +698,17 @@ class PagedEngine:
                 - self.allocator.free_pages)
             pages = self.allocator.alloc(
                 max(self._pages_for(need) - n_sh, n_live), req.rid)
-        assert pages is not None, "no free page budget to inject into"
+        if pages is None:
+            raise RuntimeError(
+                f"no free page budget to inject {req.rid!r} into")
         if slot is None:
             free = self.free_slots
-            assert free, "no free row to inject into"
+            if not free:
+                raise RuntimeError(
+                    f"no free row to inject {req.rid!r} into")
             slot = free[0]
-        assert slot not in self.requests, f"row {slot} busy"
+        if slot in self.requests:
+            raise RuntimeError(f"row {slot} busy")
         live = jnp.asarray(np.asarray(pages[:n_live], np.int32))
 
         def scatter(pool_layer, pay_layer):

@@ -61,6 +61,35 @@ def _child_key(parent_key: str, block: np.ndarray) -> str:
     return h.hexdigest()
 
 
+class HashedPrefix:
+    """A prompt hashed into chain keys ONCE, probed many times.
+
+    ``Router.route`` used to call ``prefix_hit_tokens`` per candidate
+    engine and each call re-hashed every page-aligned block -- O(prompt
+    x engines) hashing per route.  Build one of these per route() and
+    probe every engine with it: the chain for a (namespace, page_size)
+    pair is computed on first use and memoized, so N same-geometry
+    engines cost exactly one hashing pass.
+    """
+
+    def __init__(self, tokens):
+        self.tokens = np.asarray(tokens, np.int32)
+        self._chains: dict[tuple, list] = {}
+
+    def chain(self, namespace: str, page_size: int) -> list:
+        """``[(chain_key, block), ...]`` for every full block, hashed
+        lazily once per (namespace, page_size)."""
+        memo = self._chains.get((namespace, page_size))
+        if memo is None:
+            key, memo = _root_key(namespace), []
+            for d in range(len(self.tokens) // page_size):
+                block = self.tokens[d * page_size:(d + 1) * page_size]
+                key = _child_key(key, block)
+                memo.append((key, block))
+            self._chains[(namespace, page_size)] = memo
+        return memo
+
+
 @dataclass
 class PrefixNode:
     """One shared block: a physical page plus its identity and lifetime.
@@ -180,6 +209,19 @@ class PrefixCache:
             key = node.key
         return hit
 
+    def hit_tokens_hashed(self, tenant: str, hashed: HashedPrefix) -> int:
+        """``hit_tokens`` over precomputed digests: zero hashing here
+        beyond ``hashed``'s one-time (memoized) pass, so the router can
+        probe N engines for the price of one."""
+        hit = 0
+        for key, block in hashed.chain(self.namespace(tenant),
+                                       self.page_size):
+            node = self.nodes.get(key)
+            if node is None or not np.array_equal(node.tokens, block):
+                break
+            hit += self.page_size
+        return hit
+
     def has_chain(self, chain: list[str]) -> bool:
         return self.lookup_chain(chain) is not None
 
@@ -245,6 +287,34 @@ class PrefixCache:
         if parent is not None:
             parent.refs += 1         # children pin parents
         self.nodes[key] = node
+        self._touch(node)
+        self.stats.inserted += 1
+        return node
+
+    def graft(self, src: PrefixNode, page: int) -> PrefixNode | None:
+        """Install a copy of a *donor engine's* full-block node (cross-
+        engine prefix pre-warm).  The caller must own ``page`` and must
+        already have copied the donor page's KV into it; ownership is
+        retagged to the cache and a refcount-0 node appears -- warm but
+        evictable until a row references it.  Returns None -- caller
+        keeps/frees its page -- when the block is already cached, is a
+        partial tail, or its parent chain is not present locally (graft
+        root-first)."""
+        if src.partial or src.key in self.nodes:
+            return None
+        parent = None
+        if src.parent is not None:
+            parent = self.nodes.get(src.parent)
+            if parent is None:
+                return None
+        self.allocator.retag(page, f"prefix:{src.key}")
+        node = PrefixNode(key=src.key, namespace=src.namespace,
+                          depth=src.depth, page=page,
+                          tokens=np.asarray(src.tokens, np.int32).copy(),
+                          parent=parent.key if parent else None)
+        if parent is not None:
+            parent.refs += 1
+        self.nodes[src.key] = node
         self._touch(node)
         self.stats.inserted += 1
         return node

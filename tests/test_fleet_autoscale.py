@@ -485,3 +485,211 @@ def test_paged_pool_chaos_soak_conserves_token_budget():
             eng = handle.engine
             assert eng.allocator.used_pages == 0, handle.name
             assert eng.free_token_budget == eng.pages * eng.page_size
+
+
+# -- millisecond scale-up: program cache + warm standbys ----------------------
+
+def test_scale_policy_prearm_decisions():
+    """Pure prearm policy: the pool fills below target (horizon 0),
+    fills on forecast only when a horizon is set, keeps filling under
+    cooldown (prearm is preparation, not a membership change), and
+    never arms with the routable pool at max."""
+    base = dict(depth=0, wait_p95=0.0, expired_delta=0,
+                utilization=0.5, engines=2)
+    pol = ScalePolicy(min_engines=1, max_engines=3,
+                      scale_up_queue_depth=4, standby_pool=1,
+                      cooldown_s=10.0)
+    dec = lambda now=0.0, last=None, **kw: pol.decide(  # noqa: E731
+        ScaleSignals(**{**base, **kw}), now=now, last_scale=last)
+    assert dec() == ("prearm", "standby pool 0/1 below target")
+    assert dec(standbys=1)[0] is None                  # pool full
+    assert dec(engines=3)[0] is None                   # routable at max
+    assert dec(now=5.0, last=0.0)[0] == "prearm"       # inside cooldown
+    assert dec(depth=4)[0] == "up"                     # real pressure wins
+    # forecast-gated: horizon 0.5s, trigger depth 4
+    fpol = ScalePolicy(min_engines=1, max_engines=3,
+                       scale_up_queue_depth=4, standby_pool=1,
+                       prearm_horizon_s=0.5)
+    fdec = lambda **kw: fpol.decide(  # noqa: E731
+        ScaleSignals(**{**base, **kw}), now=0.0, last_scale=None)
+    assert fdec()[0] is None                           # no trend, no arm
+    assert fdec(arrival_rate=10.0)[0] == "prearm"      # 0 + 10*0.5 >= 4
+    assert fdec(depth=2, depth_slope=4.0)[0] == "prearm"   # 2 + 4*0.5 >= 4
+    assert fdec(depth=2, depth_slope=2.0)[0] is None   # 2 + 1 < 4
+    assert fdec(depth=3, depth_slope=-9.0)[0] is None  # falling queue
+
+
+def test_warm_spawn_shares_compiled_programs_and_is_bit_exact():
+    """Two engines of one (cfg, mesh, rules, geometry) key are served
+    the SAME jitted programs by the process-wide cache -- the second
+    construction is a cache hit and its greedy decode is bit-identical
+    (it runs the donor's executables)."""
+    e1, e2 = mk_engine(seed=51), mk_engine(seed=52)
+    assert e2.program_cache_hit
+    assert e1._programs is e2._programs
+    assert e1._decode_fn is e2._decode_fn
+    assert e1._prefill_fn is e2._prefill_fn
+    prompt = np.arange(3, 9)
+    outs = []
+    for eng in (e1, e2):
+        req = Request("r", np.asarray(prompt), max_new_tokens=8)
+        eng.add_request(req)
+        while not req.done:
+            eng.step()
+        outs.append(req.output)
+    assert outs[0] == outs[1] == reference_output(prompt, 8)
+    # a different geometry is a different key -> different programs
+    other = mk_engine(seed=53, max_len=MAX_LEN * 2)
+    assert other._programs is not e1._programs
+
+
+def test_standby_pool_prearms_attests_and_promotes_in_one_step():
+    """The warm pool end to end: an idle step pre-arms a standby off
+    the dispatch path (typed "prearm" event, no membership counters,
+    no cooldown consumed); the burst then promotes it -- pre-attested,
+    cache-served programs -- and the spawn span records the promotion
+    provenance; the pool refills after the promotion."""
+    fleet = mk_fleet(ScalePolicy(min_engines=1, max_engines=3,
+                                 scale_up_queue_depth=2,
+                                 standby_pool=1))
+    auto = fleet.autoscaler
+    fleet.step()                          # idle: builds the standby
+    assert len(auto.standbys) == 1
+    sb = auto.standbys[0]
+    assert sb.attester is not None        # attested at BUILD time
+    assert sb.cache_hit                   # programs from the cache
+    prearms = [ev for ev in fleet.telemetry.scale_events()
+               if ev.action == "prearm"]
+    assert len(prearms) == 1 and prearms[0].engine == sb.name
+    assert fleet.telemetry.scale_ups == 0
+    assert fleet.telemetry.scale_downs == 0
+    assert auto._last_scale is None       # prearm never starts cooldown
+    # the burst: scale-up promotes instead of constructing
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(5, CFG.vocab_size, 6) for _ in range(4)]
+    tickets = [fleet.submit(greedy_spec(f"w{i}", p))
+               for i, p in enumerate(prompts)]
+    fleet.step()
+    assert auto.promotions == 1
+    assert sb.name in fleet.handles
+    assert fleet.handles[sb.name].attester is sb.attester
+    spawn = next(ev for ev in fleet.telemetry.scale_events()
+                 if ev.action == "spawn")
+    assert "promoted warm standby" in spawn.reason
+    for _ in range(60):
+        if all(t.done for t in tickets):
+            break
+        fleet.step()
+    for t, p in zip(tickets, prompts):
+        assert t.output == reference_output(p, 8)
+    # promotion provenance on the (closed) spawn span
+    span = next(s for s in fleet.tracer.spans
+                if s.name == "spawn"
+                and s.trace_id == f"engine:{sb.name}")
+    assert span.attrs["promoted"] is True
+    assert span.attrs["cache_hit"] is True
+    assert span.attrs["standby_build_s"] > 0
+    assert span.attrs["time_to_useful_s"] >= 0
+    # the pool refilled off-path after the promotion
+    assert len(auto.standbys) == 1
+
+
+def test_floor_unservable_request_fails_fast_with_hint():
+    """Quality-aware admission: a floor above every live tier AND every
+    template tier terminates FAILED at submit with a typed
+    reject-with-hint on the ticket and the audit log -- it never
+    queues.  A floor the fleet could spawn for still queues."""
+    fleet = mk_fleet(ScalePolicy(min_engines=1, max_engines=2))
+    t = fleet.submit(greedy_spec("greedy-floor", np.arange(6),
+                                 quality_floor=1.5))
+    assert t is not None
+    assert t.state is RequestState.FAILED
+    assert "quality_floor 1.50 exceeds" in t.events[-1].reason
+    assert fleet.queue.depth() == 0       # never queued
+    assert fleet.telemetry.floor_rejects == 1
+    rejects = [ev for ev in fleet.telemetry.events
+               if getattr(ev, "kind", "") == "floor_reject"]
+    assert len(rejects) == 1
+    assert rejects[0].rid == "greedy-floor" and rejects[0].floor == 1.5
+    assert rejects[0].hint in t.events[-1].reason
+    # servable floor (template tier covers it): queues normally
+    ok = fleet.submit(greedy_spec("ok", np.arange(6), quality_floor=1.0))
+    assert ok.state is RequestState.QUEUED
+    assert ok.result() == reference_output(np.arange(6), 8)
+
+
+def test_cross_tier_weight_borrow_refused_loudly():
+    """A paramless template whose tier has no live engine must refuse
+    to borrow another tier's weights -- RuntimeError, not a vanishing
+    assert."""
+    import pytest
+
+    from repro.core.replication import QualityTier
+
+    int8 = QualityTier("int8", 0.8, "int8")
+    templates = [mk_template(), EngineTemplate(name="auto8", profile=EDGE,
+                                               slots=SLOTS, max_len=MAX_LEN,
+                                               seed=200, tier=int8)]
+    fleet = mk_fleet(ScalePolicy(min_engines=1, max_engines=2))
+    auto = Autoscaler(templates, ScalePolicy())
+    with pytest.raises(RuntimeError, match="cross-tier weight borrowing"):
+        auto._params_for(fleet, auto.templates["int8"])
+
+
+def test_promotion_mid_chaos_soak_conserves_pages_and_tickets():
+    """The paged chaos soak with the warm pool armed: a standby is
+    promoted mid-churn (engine failure included) and the per-step audit
+    -- request conservation AND the page/ledger invariants on every
+    engine, grafted prewarm pages included -- holds throughout."""
+    clk = SimClock()
+
+    def paged_engine(seed):
+        return PagedEngine(CFG, _params(), page_size=8, pages=8,
+                           rows=4, max_len=MAX_LEN, seed=seed,
+                           prefix_cache=True)
+
+    template = EngineTemplate(name="pauto", profile=EDGE, slots=4,
+                              max_len=MAX_LEN, seed=400,
+                              page_size=8, pages=8, prefix_cache=True)
+    fleet = FleetController(
+        [EngineHandle("pbase", paged_engine(0), EDGE)],
+        authority=TrustAuthority(), clock=clk,
+        autoscaler=Autoscaler(template,
+                              ScalePolicy(min_engines=1, max_engines=3,
+                                          scale_up_queue_depth=2,
+                                          scale_down_util=0.3,
+                                          standby_pool=1,
+                                          prefix_prewarm=2)))
+    rng = np.random.default_rng(11)
+    tickets = {}
+    fleet.step()                          # pre-arm before the burst
+    assert len(fleet.autoscaler.standbys) == 1
+    for i in range(8):
+        rid = f"q{i}"
+        tickets[rid] = fleet.submit(greedy_spec(
+            rid, rng.integers(5, CFG.vocab_size, 6),
+            priority=(0, 5, 10)[i % 3], tenant=f"t{i % 2}"))
+    failed = False
+    for step in range(300):
+        clk.advance(0.05)
+        fleet.step()
+        assert_conserved(fleet)
+        if step >= 2 and not failed:
+            busy = [n for n in fleet.autoscaler.spawned
+                    if n in fleet.handles and fleet.handles[n].healthy
+                    and fleet.handles[n].engine.requests]
+            if busy:
+                fleet.fail(busy[0])
+                failed = True
+                assert_conserved(fleet)
+        if all(t.done for t in tickets.values()):
+            break
+    assert failed, "no spawned paged engine was ever busy"
+    assert fleet.autoscaler.promotions >= 1, \
+        "the soak never promoted from the warm pool"
+    assert all(t.state is RequestState.DONE for t in tickets.values()), \
+        {r: t.state.value for r, t in tickets.items() if not t.done}
+    for rid, t in tickets.items():
+        terminals = [ev for ev in fleet.telemetry.events_of(rid)
+                     if ev.dst in {s.value for s in TERMINAL_STATES}]
+        assert len(terminals) == 1, (rid, terminals)

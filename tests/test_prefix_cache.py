@@ -352,3 +352,121 @@ def test_fleet_harvests_prefix_counters():
     assert "fleet_prefix_hits_total 1" in text
     assert "fleet_prefix_misses_total 1" in text
     assert "fleet_prefix_bytes_saved_total" in text
+
+
+def test_route_hashes_prompt_blocks_exactly_once_per_call():
+    """The route-time rehash fix: probing N candidate engines for
+    cached-prefix affinity must hash the prompt's blocks ONCE per
+    ``route()`` (HashedPrefix memoizes per namespace/page_size), not
+    once per engine -- counted by monkeypatching the chain hash."""
+    from repro.core.daemon import EDGE
+    from repro.fleet import EngineHandle
+    from repro.fleet.router import Router
+    from repro.serving import prefix_cache as pc
+
+    engines = [mk_paged(seed=10 + i, rows=2) for i in range(3)]
+    prompt = np.arange(2, 18)            # 2 full blocks at page_size=8
+    drain(engines[-1], [mk_req("seed", prompt, max_new=1)])
+    handles = [EngineHandle(f"e{i}", eng, EDGE)
+               for i, eng in enumerate(engines)]
+    calls = []
+    real = pc._child_key
+
+    def counting(parent_key, block):
+        calls.append(parent_key)
+        return real(parent_key, block)
+
+    pc._child_key = counting
+    try:
+        dec = Router().route(handles, CFG, sensitivity="public",
+                             prefill_tokens=len(prompt), decode_tokens=4,
+                             tokens=prompt, tenant="")
+    finally:
+        pc._child_key = real
+    assert dec.target == "e2" and dec.prefix_hit == 16
+    # one hashing pass: 2 full blocks -> exactly 2 digests, regardless
+    # of the 3 engines probed (the legacy per-engine probe did 6)
+    assert len(calls) == 2, calls
+
+
+def test_hit_tokens_hashed_matches_legacy_probe():
+    eng = mk_paged(seed=20, rows=2)
+    prompt = np.arange(3, 25)            # 2 full blocks + partial tail
+    drain(eng, [mk_req("seed", prompt, max_new=1)])
+    from repro.serving.prefix_cache import HashedPrefix
+    for probe in (prompt, prompt[:8], np.arange(50, 60)):
+        hashed = HashedPrefix(probe)
+        assert eng.prefix_cache.hit_tokens_hashed("", hashed) \
+            == eng.prefix_cache.hit_tokens("", probe)
+        assert eng.prefix_hit_tokens_hashed("", hashed) \
+            == eng.prefix_hit_tokens("", probe)
+
+
+def test_prewarm_chains_grafts_donor_chains_bit_exact():
+    """Cross-engine cache population (no longer donation-only): a
+    fresh engine grafts the donor's hot chains page-by-page, serves a
+    warm full hit immediately, and decodes bit-identically to a cold
+    run of the same prompt."""
+    donor, fresh = mk_paged(seed=30), mk_paged(seed=31)
+    prompt = np.arange(2, 18)            # 2 full blocks
+    # keep the seeding request LIVE so the whole chain is refcount>0
+    live = mk_req("live", prompt, max_new=20)
+    assert donor.add_request(live)
+    report = fresh.prewarm_chains(donor, top_k=4)
+    assert report["chains"] == 1 and report["pages"] == 2
+    assert report["skipped"] is None
+    assert fresh.prefix_cache.hit_tokens("", prompt) == 16
+    fresh.allocator.check()
+    # grafted pages carry the donor's exact KV bytes
+    dn = donor.prefix_cache.nodes
+    fn = fresh.prefix_cache.nodes
+    assert set(dn) == set(fn)
+    for key in dn:
+        for a, b in zip(pool_pages(donor, dn[key].page),
+                        pool_pages(fresh, fn[key].page)):
+            np.testing.assert_array_equal(a, b)
+    # warm admission on the grafted cache is bit-exact vs a cold engine
+    cold = mk_paged(seed=32)
+    out_cold = drain(cold, [mk_req("c", prompt, max_new=6)])["c"]
+    out_warm = drain(fresh, [mk_req("w", prompt, max_new=6)])["w"]
+    assert fresh.last_prefix_hit == 16   # served from grafted pages
+    assert out_warm == out_cold
+    fresh.check()
+
+
+def test_prewarm_chains_loud_skips():
+    donor = mk_paged(seed=40)
+    prompt = np.arange(2, 18)
+    assert donor.add_request(mk_req("live", prompt, max_new=20))
+    # geometry mismatch: different page_size never grafts
+    other = mk_paged(seed=41, page_size=4, max_len=64)
+    report = other.prewarm_chains(donor, top_k=4)
+    assert report["pages"] == 0
+    assert "geometry mismatch" in report["skipped"]
+    # budget exhaustion: a 1-page pool fits half the 2-page chain and
+    # says so instead of failing quietly
+    tiny = mk_paged(seed=42, pages=1)
+    report = tiny.prewarm_chains(donor, top_k=4)
+    assert report["pages"] == 1
+    assert "budget exhausted" in report["skipped"]
+    tiny.allocator.check()
+    # no prefix cache anywhere: skip, not crash
+    bare = mk_paged(seed=43, prefix_cache=False)
+    report = bare.prewarm_chains(donor, top_k=4)
+    assert "no prefix cache" in report["skipped"]
+
+
+def test_allocator_invariants_raise_under_python_O():
+    """The PageAllocator/ledger invariants are real exceptions now --
+    ``python -O`` cannot silence them."""
+    alloc = PageAllocator(4)
+    pages = alloc.alloc(2, "r1")
+    alloc.check()
+    alloc._free.append(pages[0])         # corrupt: page free AND owned
+    with pytest.raises(RuntimeError, match="ledger broken"):
+        alloc.check()
+    alloc._free.pop()
+    del alloc.owners[pages[1]]           # conservation holds, count-wise
+    alloc._free.append(pages[0])         # ...but pages[0] is aliased
+    with pytest.raises(RuntimeError, match="free and owned"):
+        alloc.check()
