@@ -1,18 +1,40 @@
-"""Simulated network channel + the attested migration session.
+"""Network channels and transports: the simulated byte fabric, and the
+real message transports the fleet's control plane runs over.
 
-We are single-host, so the socket layer is simulated: a ``Channel``
-models latency / bandwidth / packet loss against a deterministic
-``SimClock`` (benchmarks read transfer time off the clock; compute time
-is real wall time).  Everything above the byte layer -- the attested
-TLS-style handshake, session-key binding, chunked transfer with
-integrity, multi-hop transitive chains -- is real protocol code and is
-what the security tests exercise.
+Two layers live here:
+
+  * the *simulated* byte fabric (``Channel``/``Fabric``): latency /
+    bandwidth / packet loss modelled against a deterministic
+    ``SimClock`` (benchmarks read transfer time off the clock; compute
+    time is real wall time).  Everything above the byte layer -- the
+    attested TLS-style handshake, session-key binding, chunked transfer
+    with integrity, multi-hop transitive chains -- is real protocol
+    code and is what the security tests exercise.  Link conditions are
+    properties of the *path*: ``Fabric.path`` composes the per-pair
+    condition with each endpoint's own uplink condition (latencies add,
+    bandwidth is the min, loss compounds, up = every segment up), so a
+    lossy edge uplink degrades every pair that crosses it.
+
+  * the *message transport* (``Transport``): the frame fabric the
+    fleet's control plane and engine services exchange control,
+    migration and heartbeat messages over.  ``InProcTransport`` is the
+    deterministic test transport (synchronous in-process delivery, the
+    bit-exactness contracts hold here); ``SocketTransport`` is real
+    loopback TCP -- length-prefixed frames, one listener per node, one
+    cached connection per (src, dst) pair -- so migrations and
+    heartbeats are genuinely overlapped in-flight bytes.  Both support
+    sender-side fault injection (drop / delay / peer death) for the
+    chaos suites.
 """
 
 from __future__ import annotations
 
 import os
+import socket
+import struct
+import threading
 from dataclasses import dataclass, field
+from typing import Callable, Optional
 
 from repro.core import crypto
 from repro.core.attestation import Attester, Quote
@@ -63,28 +85,143 @@ class Channel:
         return data
 
 
+class ComposedCondition:
+    """Effective condition of a multi-segment path.
+
+    Latencies add, bandwidth is the narrowest segment, loss compounds
+    (a packet survives only if it survives every segment), and the path
+    is up only when every segment is up.  Duck-types
+    ``NetworkCondition`` so channels, tier policy and router cost can
+    consume either.
+    """
+
+    def __init__(self, *parts):
+        self.parts = [p for p in parts if p is not None]
+
+    @property
+    def latency_s(self) -> float:
+        return sum(p.latency_s for p in self.parts)
+
+    @property
+    def bandwidth_bps(self) -> float:
+        return min((p.bandwidth_bps for p in self.parts), default=1e9)
+
+    @property
+    def loss(self) -> float:
+        keep = 1.0
+        for p in self.parts:
+            keep *= 1.0 - min(p.loss, 0.99)
+        return 1.0 - keep
+
+    @property
+    def up(self) -> bool:
+        return all(p.up for p in self.parts)
+
+    transfer_time = NetworkCondition.transfer_time
+
+
+class PathCondition:
+    """Live view of the path a<->b on a fabric: endpoint uplink of
+    ``a``, the pair condition, endpoint uplink of ``b``, composed at
+    read time so later ``set_link``/``set_endpoint`` calls are seen by
+    channels already handed out.  ``endpoints=False`` reads only the
+    pair segment -- a pinned circuit that ignores uplink outages."""
+
+    def __init__(self, fabric: "Fabric", a: str, b: str, *,
+                 endpoints: bool = True):
+        self.fabric, self.a, self.b = fabric, a, b
+        self.endpoints = endpoints
+
+    def _now(self) -> ComposedCondition:
+        if not self.endpoints:
+            return ComposedCondition(self.fabric.pair_cond(self.a, self.b))
+        return self.fabric.path(self.a, self.b)
+
+    @property
+    def latency_s(self) -> float:
+        return self._now().latency_s
+
+    @property
+    def bandwidth_bps(self) -> float:
+        return self._now().bandwidth_bps
+
+    @property
+    def loss(self) -> float:
+        return self._now().loss
+
+    @property
+    def up(self) -> bool:
+        return self._now().up
+
+    transfer_time = NetworkCondition.transfer_time
+
+
 class Fabric:
     """Cluster interconnect: one ``Channel`` per engine pair, all ticking
     the same ``SimClock`` so fleet-wide transfer timings compose.  Links
     default to ``default_cond`` until ``set_link`` gives a pair its own
-    conditions (a lossy edge uplink next to a fast pod fabric)."""
+    conditions (a lossy edge uplink next to a fast pod fabric).  Each
+    node may additionally register its own uplink condition via
+    ``set_endpoint``; ``path`` composes endpoint + pair + endpoint so
+    conditions are properties of the route, not of a single global
+    knob."""
 
     def __init__(self, default_cond: NetworkCondition | None = None):
         self.clock = SimClock()
         self.default_cond = default_cond or NetworkCondition()
         self._conds: dict[frozenset, NetworkCondition] = {}
+        self._endpoints: dict[str, NetworkCondition] = {}
         self._links: dict[frozenset, Channel] = {}
+        self._pair_links: dict[frozenset, Channel] = {}
 
     def set_link(self, a: str, b: str, cond: NetworkCondition):
         self._conds[frozenset((a, b))] = cond
         self._links.pop(frozenset((a, b)), None)
 
+    def set_endpoint(self, name: str, cond: NetworkCondition | None):
+        if cond is None:
+            self._endpoints.pop(name, None)
+        else:
+            self._endpoints[name] = cond
+
+    def endpoint(self, name: str) -> NetworkCondition | None:
+        return self._endpoints.get(name)
+
+    def pair_cond(self, a: str, b: str) -> NetworkCondition:
+        return self._conds.get(frozenset((a, b)), self.default_cond)
+
+    def path(self, a: str, b: str, *,
+             end_a: NetworkCondition | None = None,
+             end_b: NetworkCondition | None = None) -> ComposedCondition:
+        """Effective condition of the a->b route: a's uplink, the pair
+        link, b's uplink.  Explicit ``end_*`` override the registered
+        endpoint conditions (the router passes a handle's tier uplink
+        here)."""
+        return ComposedCondition(
+            end_a if end_a is not None else self._endpoints.get(a),
+            self.pair_cond(a, b),
+            end_b if end_b is not None else self._endpoints.get(b),
+        )
+
     def link(self, a: str, b: str) -> Channel:
         key = frozenset((a, b))
         if key not in self._links:
-            cond = self._conds.get(key, self.default_cond)
-            self._links[key] = Channel(cond=cond, clock=self.clock)
+            self._links[key] = Channel(cond=PathCondition(self, a, b),
+                                       clock=self.clock)
         return self._links[key]
+
+    def pair_link(self, a: str, b: str) -> Channel:
+        """A pinned circuit between two co-provisioned engines (a
+        draft/verify tier pair's dedicated interconnect): the channel
+        reads only the live pair-level condition, so endpoint uplink
+        outages -- which gate routing and client traffic -- do not sever
+        an established intra-pair wire."""
+        key = frozenset((a, b))
+        if key not in self._pair_links:
+            self._pair_links[key] = Channel(
+                cond=PathCondition(self, a, b, endpoints=False),
+                clock=self.clock)
+        return self._pair_links[key]
 
 
 class AttestedSession:
@@ -129,3 +266,272 @@ def transitive_chain(hops: list[Attester], channel: Channel,
         s = AttestedSession(src, dst, channel, whitelist)
         quotes.extend(s.quotes)
     return quotes
+
+
+# ---------------------------------------------------------------------------
+# Message transports
+# ---------------------------------------------------------------------------
+#
+# The fleet's control plane and engine services talk in framed messages.
+# A transport moves opaque frames (bytes) between named nodes; the bus
+# layer (fleet/bus.py) owns encoding.  Fault injection is sender-side
+# and per-frame: a hook inspects (src, dst, payload) and returns
+# None/"ok" (deliver), "drop" (silently lose the frame), or
+# ("delay", seconds) (deliver late -- immediately into a hold queue on
+# the in-proc transport, via a timer on the socket transport).
+
+FaultHook = Callable[[str, str, bytes], object]
+
+
+class Transport:
+    """Frame fabric between named nodes."""
+
+    def register(self, name: str, deliver: Callable[[bytes], None]) -> None:
+        raise NotImplementedError
+
+    def deregister(self, name: str) -> None:
+        raise NotImplementedError
+
+    def send(self, src: str, dst: str, payload: bytes) -> bool:
+        """Hand one frame to the fabric.  Returns False when the
+        destination is known-unreachable (dead peer); a True return is
+        *not* a delivery guarantee -- frames may still be lost in
+        flight.  Reliability lives above (RPC retry + idempotent
+        receivers)."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class InProcTransport(Transport):
+    """Deterministic in-process transport: ``send`` delivers
+    synchronously into the destination's handler on the caller's
+    thread.  This is the transport the bit-exactness / conservation
+    contracts are verified on.  Faulted "delay" frames park in
+    ``held`` until the test calls ``release_held``."""
+
+    def __init__(self):
+        self._nodes: dict[str, Callable[[bytes], None]] = {}
+        self.fault: Optional[FaultHook] = None
+        self.held: list[tuple[str, str, bytes]] = []
+        self.dropped: int = 0
+
+    def register(self, name: str, deliver: Callable[[bytes], None]) -> None:
+        self._nodes[name] = deliver
+
+    def deregister(self, name: str) -> None:
+        self._nodes.pop(name, None)
+
+    def send(self, src: str, dst: str, payload: bytes) -> bool:
+        if dst not in self._nodes:
+            return False
+        if self.fault is not None:
+            verdict = self.fault(src, dst, payload)
+            if verdict == "drop":
+                self.dropped += 1
+                return True
+            if isinstance(verdict, tuple) and verdict and verdict[0] == "delay":
+                self.held.append((src, dst, payload))
+                return True
+        self._nodes[dst](payload)
+        return True
+
+    def release_held(self) -> int:
+        """Deliver every held frame (in order); returns how many."""
+        held, self.held = self.held, []
+        n = 0
+        for src, dst, payload in held:
+            deliver = self._nodes.get(dst)
+            if deliver is not None:
+                deliver(payload)
+                n += 1
+        return n
+
+
+class SocketTransport(Transport):
+    """Loopback TCP transport: one listener per node, frames are
+    4-byte big-endian length prefix + payload, one cached outbound
+    connection per (src, dst) pair.  Each accepted connection gets a
+    reader thread that feeds complete frames to the node's handler, so
+    a migration blob in flight never blocks another engine's decode
+    loop."""
+
+    MAX_FRAME = 64 * 1024 * 1024
+
+    def __init__(self, host: str = "127.0.0.1"):
+        self.host = host
+        self._lock = threading.RLock()
+        self._addrs: dict[str, tuple[str, int]] = {}
+        self._servers: dict[str, socket.socket] = {}
+        self._conns: dict[tuple[str, str], socket.socket] = {}
+        self._threads: list[threading.Thread] = []
+        self.fault: Optional[FaultHook] = None
+        self.dropped = 0
+        self._closed = False
+
+    # -- wire helpers ------------------------------------------------
+    @staticmethod
+    def _send_frame(sock: socket.socket, payload: bytes) -> None:
+        sock.sendall(struct.pack(">I", len(payload)) + payload)
+
+    @classmethod
+    def _recv_frame(cls, sock: socket.socket) -> bytes | None:
+        hdr = cls._recv_exact(sock, 4)
+        if hdr is None:
+            return None
+        (n,) = struct.unpack(">I", hdr)
+        if n > cls.MAX_FRAME:
+            raise ValueError(f"frame too large: {n} bytes")
+        return cls._recv_exact(sock, n)
+
+    @staticmethod
+    def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
+        buf = b""
+        while len(buf) < n:
+            try:
+                chunk = sock.recv(n - len(buf))
+            except OSError:
+                return None
+            if not chunk:
+                return None
+            buf += chunk
+        return buf
+
+    # -- node lifecycle ----------------------------------------------
+    def register(self, name: str, deliver: Callable[[bytes], None]) -> None:
+        srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        srv.bind((self.host, 0))
+        srv.listen(16)
+        with self._lock:
+            self._servers[name] = srv
+            self._addrs[name] = srv.getsockname()
+        t = threading.Thread(target=self._accept_loop,
+                             args=(name, srv, deliver),
+                             name=f"xport-accept-{name}", daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def _accept_loop(self, name: str, srv: socket.socket,
+                     deliver: Callable[[bytes], None]) -> None:
+        while True:
+            try:
+                conn, _ = srv.accept()
+            except OSError:
+                return      # listener closed: node deregistered
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            t = threading.Thread(target=self._reader_loop,
+                                 args=(conn, deliver),
+                                 name=f"xport-read-{name}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _reader_loop(self, conn: socket.socket,
+                     deliver: Callable[[bytes], None]) -> None:
+        while True:
+            try:
+                frame = self._recv_frame(conn)
+            except (OSError, ValueError):
+                frame = None
+            if frame is None:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                return
+            deliver(frame)
+
+    def deregister(self, name: str) -> None:
+        """Kill the node: close its listener and every cached
+        connection touching it.  In-flight frames to it are lost --
+        exactly the peer-death fault the chaos suite exercises."""
+        with self._lock:
+            srv = self._servers.pop(name, None)
+            self._addrs.pop(name, None)
+            stale = [k for k in self._conns if name in k]
+            socks = [self._conns.pop(k) for k in stale]
+        if srv is not None:
+            try:
+                srv.close()
+            except OSError:
+                pass
+        for s in socks:
+            try:
+                s.close()
+            except OSError:
+                pass
+
+    # -- sending -----------------------------------------------------
+    def _conn_to(self, src: str, dst: str) -> socket.socket | None:
+        key = (src, dst)
+        with self._lock:
+            sock = self._conns.get(key)
+            if sock is not None:
+                return sock
+            addr = self._addrs.get(dst)
+        if addr is None:
+            return None
+        try:
+            sock = socket.create_connection(addr, timeout=5.0)
+        except OSError:
+            return None
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        with self._lock:
+            # lost the race to another sender thread: keep theirs
+            if key in self._conns:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                return self._conns[key]
+            self._conns[key] = sock
+        return sock
+
+    def send(self, src: str, dst: str, payload: bytes) -> bool:
+        if self._closed:
+            return False
+        if self.fault is not None:
+            verdict = self.fault(src, dst, payload)
+            if verdict == "drop":
+                self.dropped += 1
+                return True
+            if isinstance(verdict, tuple) and verdict and verdict[0] == "delay":
+                delay_s = float(verdict[1])
+                timer = threading.Timer(
+                    delay_s, self._send_now, args=(src, dst, payload))
+                timer.daemon = True
+                timer.start()
+                return True
+        return self._send_now(src, dst, payload)
+
+    def _send_now(self, src: str, dst: str, payload: bytes) -> bool:
+        sock = self._conn_to(src, dst)
+        if sock is None:
+            return False
+        try:
+            with self._lock:
+                self._send_frame(sock, payload)
+            return True
+        except OSError:
+            with self._lock:
+                self._conns.pop((src, dst), None)
+            try:
+                sock.close()
+            except OSError:
+                pass
+            return False
+
+    def close(self) -> None:
+        self._closed = True
+        with self._lock:
+            servers = list(self._servers.values())
+            conns = list(self._conns.values())
+            self._servers.clear()
+            self._conns.clear()
+            self._addrs.clear()
+        for s in servers + conns:
+            try:
+                s.close()
+            except OSError:
+                pass

@@ -26,6 +26,18 @@ speculative -- draft/verify tier pairs: draft on an edge engine, slot
                hand-off over the attested wire (heterogeneous max_len
                via migration.repack_slot), teacher-forced verification
                on a cloud engine with rejected suffixes bounced back
+service     -- the control-plane/service split: ControlPlane owns
+               membership, tickets, admission and routing while each
+               engine runs inside an EngineService pulling work from a
+               per-engine mailbox on its own thread (jitted decode
+               steps release the GIL, so engines decode concurrently);
+               placement/migration/heartbeats travel as messages over a
+               pluggable bus transport
+bus         -- the message layer under service mode: msgpack-framed
+               Message envelopes, per-engine Mailboxes, MessageBus over
+               a core.channel Transport, receiver-side DedupCache and
+               the heartbeat FailureDetector (typed HeartbeatLoss
+               events on the audit log)
 autoscaler  -- elastic pool membership: per-tier EngineTemplate pools +
                ScalePolicy drive spawn at the tier the backlog needs
                (new engine joins router/balancer at once) and
@@ -60,7 +72,10 @@ from repro.fleet.lifecycle import (DeadlineExpired, LifecycleError,
                                    RequestFailed, RequestSpec,
                                    RequestState, RequestTicket,
                                    TERMINAL_STATES)
+from repro.fleet.bus import (DedupCache, FailureDetector,  # noqa: F401
+                             HeartbeatLoss, Mailbox, Message, MessageBus)
 from repro.fleet.router import RouteDecision, Router
+from repro.fleet.service import ControlPlane, EngineService
 from repro.fleet.speculative import SpecTierStats, SpeculativeTierController
 from repro.fleet.telemetry import (FleetTelemetry, MigrationRecord,
                                    QualityEvent)
@@ -83,11 +98,13 @@ from repro.fleet.tracing import (Counter, Gauge,  # noqa: F401
 # bool-returning submit(Request)/Engine.run() path is deprecated and
 # warns.
 __all__ = [
-    "Autoscaler", "DeadlineExpired", "EngineHandle", "EngineTemplate",
-    "FULL_TIER", "FleetController", "FleetTelemetry", "LifecycleError",
-    "LifecycleEvent", "MigrationRecord", "QualityEvent", "QualityTier",
-    "Rebalancer", "RequestCancelled", "RequestFailed", "RequestSpec",
-    "RequestState", "RequestTicket", "RouteDecision", "Router",
-    "ScaleEvent", "ScalePolicy", "ScaleSignals", "SpecTierStats",
+    "Autoscaler", "ControlPlane", "DeadlineExpired", "EngineHandle",
+    "EngineService", "EngineTemplate", "FULL_TIER", "FailureDetector",
+    "FleetController", "FleetTelemetry", "HeartbeatLoss",
+    "LifecycleError", "LifecycleEvent", "Message", "MessageBus",
+    "MigrationRecord", "QualityEvent", "QualityTier", "Rebalancer",
+    "RequestCancelled", "RequestFailed", "RequestSpec", "RequestState",
+    "RequestTicket", "RouteDecision", "Router", "ScaleEvent",
+    "ScalePolicy", "ScaleSignals", "SpecTierStats",
     "SpeculativeTierController", "TERMINAL_STATES", "Tracer",
 ]

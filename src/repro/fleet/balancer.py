@@ -52,6 +52,24 @@ def peek_slot_header(blob: bytes) -> dict:
     return msgpack.unpackb(blob)["meta"]
 
 
+def wire_compatible(hdr: dict, engine) -> bool:
+    """Can a packed blob with header ``hdr`` inject exactly on
+    ``engine``?  v1 (dense rows) lands dense-side only, v2 (live pages)
+    needs a paged engine at the same page size, v3 (suffix-only)
+    additionally needs the target to hold the shared prefix chain the
+    blob rides on.  Anything else must re-prefill (lossy by geometry).
+    Shared by the in-process balancer and the engine-service inject
+    handler, so both transports enforce one placement contract."""
+    version = hdr.get("version", 1)
+    paged = getattr(engine, "paged", False)
+    page_match = paged and engine.page_size == hdr.get("page_size", 0)
+    return (version == 1 and not paged) \
+        or (version == 2 and page_match) \
+        or (version == 3 and page_match
+            and getattr(engine, "prefix_cache", None) is not None
+            and engine.prefix_cache.has_chain(hdr["prefix"]["chain"]))
+
+
 def wire_slot(snap, dst_engine, *, link, session=None, aad=b"",
               compression_level=3):
     """The one slot wire hop every mover shares: pack -> compress ->
@@ -161,7 +179,12 @@ class Rebalancer:
             deadline_slack=deadline_slack,
             quality_floor=meta.get("quality_floor", 0.0),
             src_tier=src_tier,
-            reprefill_tokens=len(meta["prompt"]) + len(meta["output"]))
+            reprefill_tokens=len(meta["prompt"]) + len(meta["output"]),
+            # the blob already lives fleet-side (parked queue item or
+            # shadow checkpoint): the placement route originates at the
+            # control plane, not at the -- possibly dead or unreachable
+            # -- donor whose uplink carried it here
+            fabric=fleet.fabric, path_src=None)
         if dec.target is None:
             return None
         target = fleet.handles[dec.target]
@@ -171,19 +194,7 @@ class Rebalancer:
         # v1 (dense rows) on a dense engine, v2 (live pages) on a paged
         # engine with the same page size -- anything else re-prefills
         # the committed stream (lossy), like a cross-tier move
-        version = hdr.get("version", 1)
-        paged_target = getattr(target.engine, "paged", False)
-        page_match = paged_target \
-            and target.engine.page_size == hdr.get("page_size", 0)
-        wire_ok = (version == 1 and not paged_target) \
-            or (version == 2 and page_match) \
-            or (version == 3 and page_match
-                # suffix-only blobs additionally need the target to
-                # hold the shared prefix chain it rides on
-                and getattr(target.engine, "prefix_cache", None)
-                is not None
-                and target.engine.prefix_cache.has_chain(
-                    hdr["prefix"]["chain"]))
+        wire_ok = wire_compatible(hdr, target.engine)
         if tier_change or not wire_ok:
             req = request_from_dict(meta)
             req.done, req.slot = False, -1
@@ -388,7 +399,8 @@ class Rebalancer:
                 decode_tokens=remaining,
                 quality_floor=req.quality_floor,
                 src_tier=src_tier.name if src_tier else None,
-                reprefill_tokens=len(req.prompt) + len(req.output))
+                reprefill_tokens=len(req.prompt) + len(req.output),
+                fabric=fleet.fabric, path_src=src.name)
             if dec.target is None:
                 continue             # stays until capacity frees up
             recs.append(self.migrate(

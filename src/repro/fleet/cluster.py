@@ -26,6 +26,7 @@ complete.
 
 from __future__ import annotations
 
+import threading
 import time
 import warnings
 from dataclasses import dataclass
@@ -174,6 +175,14 @@ class FleetController:
                 measurement=self.measurement, router=self.router,
                 telemetry=self.telemetry, fleet=self, clock=self.clock,
                 **(spec_options or {}))
+        # fleet-state lock: a no-op in the synchronous loop, load-
+        # bearing in service mode where the control thread and user
+        # threads (submit/cancel/result) share queue/tickets/inflight.
+        # Reentrant so ack closures and ticket transitions nest freely.
+        self._lock = threading.RLock()
+        # set by fleet.service.ControlPlane while service mode is
+        # active: cancel (and ticket.result) route through it
+        self.service = None
         self.queue = WorkQueue()             # fresh + parked work items
         self.tickets: dict[str, RequestTicket] = {}
         self.inflight: dict[str, tuple[Request, str, float]] = {}
@@ -217,6 +226,10 @@ class FleetController:
         ``Request`` returns bool, a ``RequestSpec`` a ticket; either way
         a ticket is created internally so priorities, deadlines and the
         event log stay uniform."""
+        with self._lock:
+            return self._admit_locked(req)
+
+    def _admit_locked(self, req: Request | RequestSpec):
         legacy = isinstance(req, Request)
         if legacy:
             engine_req = req
@@ -326,7 +339,13 @@ class FleetController:
     def cancel(self, rid: str, *, reason: str = "caller cancelled") -> bool:
         """Cancel a request.  Queued/parked work is dropped outright; an
         in-flight slot (draft + verify replica for speculative requests)
-        is retired immediately, so capacity frees within one step."""
+        is retired immediately, so capacity frees within one step.
+
+        In service mode the slot lives on another thread: the control
+        plane drops the queued half under the fleet lock and sends the
+        owning service a cancel message instead of touching its engine."""
+        if self.service is not None:
+            return self.service.cancel(rid, reason=reason)
         ticket = self.tickets.get(rid)
         if ticket is None or ticket.done:
             return False
@@ -495,7 +514,8 @@ class FleetController:
             prefill_tokens=len(req.prompt),
             decode_tokens=req.max_new_tokens, deadline_slack=slack,
             quality_floor=req.quality_floor,
-            tokens=req.prompt, tenant=req.tenant)
+            tokens=req.prompt, tenant=req.tenant,
+            fabric=self.fabric)
         dec = route()
         if dec.target is None and dec.saturated \
                 and self._park_victim(item, handles):
@@ -600,8 +620,14 @@ class FleetController:
             self.telemetry.record_step(handle.name, len(out),
                                        self.clock() - t0)
             emitted.update(out)
-        for spec in self.spec_controllers.values():
-            emitted.update(spec.step())
+        for dname, spec in list(self.spec_controllers.items()):
+            try:
+                emitted.update(spec.step())
+            except ConnectionError:
+                # the pair circuit itself went down mid-round: degrade,
+                # don't crash -- the pair dissolves and its requests
+                # continue local-only on the draft engine
+                self._dissolve_pair(self.handles[dname], graceful=True)
         now = self.clock()
         for rid in list(self.inflight):
             req, hname, t0 = self.inflight[rid]
@@ -733,8 +759,17 @@ class FleetController:
         """Inject (or clear) link conditions for one engine: the fleet-
         level availability knob.  A downed/lossy link makes the engine
         unreachable to the router, and requests degrade to reachable
-        tiers instead of queueing behind a dead uplink."""
+        tiers instead of queueing behind a dead uplink.
+
+        The condition doubles as the engine's *endpoint uplink* on the
+        shared fabric: every routed pair path that crosses this engine
+        (router cost, tier degradation, migration channels) composes it
+        with the pair's own link condition -- degradation is a property
+        of the route, not a per-handle flag.  A draft/verify tier
+        pair's wire is a pinned circuit (``Fabric.pair_link``) and
+        keeps serving verify rounds across an uplink outage."""
         self.handles[name].cond = cond
+        self.fabric.set_endpoint(name, cond)
 
     def retire_engine(self, name: str, *, reason: str = "scale-down") \
             -> int:

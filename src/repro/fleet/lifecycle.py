@@ -35,6 +35,7 @@ the speculative tier controller.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from enum import Enum
 from typing import ClassVar, Optional
@@ -243,8 +244,21 @@ class RequestTicket:
         ``RequestCancelled`` / ``DeadlineExpired`` / ``RequestFailed``
         for the other terminals.  A fleet-wide stall (no eligible engine
         will ever take the work) fails the ticket rather than spinning.
+
+        In service mode (a ``ControlPlane`` owns the engines) the caller
+        must *not* drive ``fleet.step()`` -- the engines belong to their
+        service threads.  There ``result()`` just waits for the service
+        loops to finish the ticket, bounded by ``max_steps`` polls.
         """
         fleet = self._fleet
+        service = getattr(fleet, "service", None)
+        if service is not None and getattr(service, "running", False):
+            wait_s = max(getattr(service, "poll_s", 0.002), 1e-4)
+            for _ in range(max_steps):
+                if self.done:
+                    break
+                time.sleep(wait_s)
+            return self._terminal_result(max_steps)
         for _ in range(max_steps):
             if self.done:
                 break
@@ -256,6 +270,9 @@ class RequestTicket:
                     fleet.abandon(self.rid,
                                   reason="stalled: no eligible engine")
                     break
+        return self._terminal_result(max_steps)
+
+    def _terminal_result(self, max_steps: int) -> list[int]:
         if self.state in (RequestState.DONE, RequestState.HALTED):
             return self.output
         if self.state is RequestState.CANCELLED:

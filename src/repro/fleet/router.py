@@ -104,10 +104,13 @@ class Router:
             return FULL_TIER
         return tier
 
-    def _starved(self, handle) -> bool:
-        cond = getattr(handle, "cond", None)
+    def _starved(self, cond) -> bool:
         return (self.bandwidth_floor > 0.0 and cond is not None
                 and cond.bandwidth_bps < self.bandwidth_floor)
+
+    @staticmethod
+    def _reachable(cond) -> bool:
+        return cond is None or (cond.up and cond.loss < 0.95)
 
     def route(self, handles, cfg: ModelConfig, *, sensitivity: str,
               prefill_tokens: int, decode_tokens: int,
@@ -116,7 +119,8 @@ class Router:
               quality_floor: float = 0.0,
               src_tier: str | None = None,
               reprefill_tokens: int = 0,
-              tokens=None, tenant: str = "") -> RouteDecision:
+              tokens=None, tenant: str = "",
+              fabric=None, path_src: str | None = None) -> RouteDecision:
         """Pick an engine.
 
         Tier preference is lexicographically ahead of cost: among
@@ -146,7 +150,28 @@ class Router:
         prefix of them is credited that overlap -- its prefill charge
         *and* its capacity check drop by the hit (shared pages cost the
         admitting engine nothing), so a warm engine beats an equally
-        loaded cold one and can admit work a cold gate would refuse."""
+        loaded cold one and can admit work a cold gate would refuse.
+
+        Path-aware link health: with a ``fabric``, reachability and the
+        bandwidth floor read the *composed route* from ``path_src``
+        (``"$client"`` for fresh admissions, the donor engine for a
+        migrating slot) to each candidate -- endpoint uplink + per-pair
+        link -- instead of the candidate's endpoint condition alone, so
+        a degraded pair link between donor and target is priced even
+        when both endpoints are healthy.  Without a fabric the legacy
+        endpoint-only view applies."""
+        conds: dict[str, object] = {}
+
+        def link_cond(h):
+            if h.name not in conds:
+                if fabric is None:
+                    conds[h.name] = getattr(h, "cond", None)
+                else:
+                    conds[h.name] = fabric.path(
+                        path_src or "$client", h.name,
+                        end_b=getattr(h, "cond", None))
+            return conds[h.name]
+
         gated = [h for h in handles
                  if h.name not in exclude and self.eligible(sensitivity, h)]
         if not gated:
@@ -165,22 +190,23 @@ class Router:
         preferred = next(self._tier_of(h).name for h in floored
                          if self._tier_of(h).quality == preferred_q)
         acceptable = [h for h in floored
-                      if getattr(h, "reachable", True)]
+                      if self._reachable(link_cond(h))]
         if not acceptable:
             return RouteDecision(None, "all eligible engines unreachable "
                                        "(links down)", cause="link",
                                  preferred=preferred)
         # starved links: skip while an adequately-linked engine exists
         # anywhere (availability beats the bandwidth preference)
-        well_linked = [h for h in acceptable if not self._starved(h)]
+        well_linked = [h for h in acceptable
+                       if not self._starved(link_cond(h))]
         usable = well_linked or acceptable
 
         # why was each better tier passed over?  (quality, kind) pairs;
         # a degraded pick's cause is the kind of the best tier above it
         skips: list[tuple[float, str]] = []
         for h in floored:
-            if not getattr(h, "reachable", True) or \
-                    (well_linked and self._starved(h)):
+            if not self._reachable(link_cond(h)) or \
+                    (well_linked and self._starved(link_cond(h))):
                 skips.append((self._tier_of(h).quality, "link"))
 
         by_quality: dict[float, list] = {}

@@ -182,7 +182,11 @@ class SpeculativeTierController:
             if validators else None
         self.compression_level = compression_level
         self.measurement = measurement
-        self.link = fabric.link(draft.name, verify.name)
+        # pinned circuit: the tier pair is co-provisioned, so its wire
+        # reads the live pair-level condition but not endpoint uplinks
+        # (an edge uplink outage reroutes clients, it does not sever the
+        # established draft<->verify interconnect)
+        self.link = fabric.pair_link(draft.name, verify.name)
         self.session = None
         if draft.attester is not None and verify.attester is not None:
             self.session = AttestedSession(draft.attester, verify.attester,
@@ -214,6 +218,8 @@ class SpeculativeTierController:
         """None when the request may speculate; else the fallback reason."""
         if self._dissolved or not self.verify.healthy:
             return "verify tier gone"
+        if not self.link.cond.up:
+            return "pair wire down"
         if req.temperature != 0.0 and self.verify_mode != "distribution":
             # token-equality acceptance cannot re-weight sampled drafts;
             # the distribution mode's accept/reject rule can

@@ -26,6 +26,7 @@ deadline expiry are deterministic under test.
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 from typing import ClassVar, Optional
@@ -93,6 +94,10 @@ _SERVING = frozenset({"prefilling", "decoding", "drafting", "verifying"})
 class FleetTelemetry:
     def __init__(self, clock=None):
         self._clock = clock or time.perf_counter
+        # concurrent engine services record from their own threads; one
+        # reentrant lock serializes every append to the audit log, the
+        # per-rid index, per-engine stats and the scalar counters
+        self._tlock = threading.RLock()
         self.engines: dict[str, EngineStats] = {}
         self.migrations: list[MigrationRecord] = []
         self.events: list = []           # unified audit log
@@ -115,6 +120,7 @@ class FleetTelemetry:
         self.rejected = 0
         self.floor_rejects = 0
         self.failovers = 0
+        self.heartbeat_losses = 0
         self.preemptions = 0
         self.cancelled = 0
         self.expired = 0
@@ -153,46 +159,54 @@ class FleetTelemetry:
             self.tracer.note_tier(engine, tier)
 
     def stats(self, name: str) -> EngineStats:
-        if name not in self.engines:
-            self.engines[name] = EngineStats(name)
-        return self.engines[name]
+        with self._tlock:
+            if name not in self.engines:
+                self.engines[name] = EngineStats(name)
+            return self.engines[name]
 
     # -- recording ----------------------------------------------------------
     def record_step(self, name: str, tokens: int, dt: float):
-        s = self.stats(name)
-        s.steps += 1
-        s.tokens += tokens
-        s.busy_s += dt
+        with self._tlock:
+            s = self.stats(name)
+            s.steps += 1
+            s.tokens += tokens
+            s.busy_s += dt
         self.step_latency_s.observe(dt)
         if self.tracer is not None:
             self.tracer.on_engine_step(name, tokens)
 
     def record_admit(self, name: str):
-        self.stats(name).admitted += 1
+        with self._tlock:
+            self.stats(name).admitted += 1
 
     def record_reject(self):
-        self.rejected += 1
+        with self._tlock:
+            self.rejected += 1
 
     def record_complete(self, name: str, latency_s: float):
-        self.stats(name).completed += 1
+        with self._tlock:
+            self.stats(name).completed += 1
         self.request_latency_s.observe(latency_s)
 
     def record_migration(self, rec: MigrationRecord):
-        self.migrations.append(rec)
-        self.stats(rec.src).migrations_out += 1
-        self.stats(rec.dst).migrations_in += 1
+        with self._tlock:
+            self.migrations.append(rec)
+            self.stats(rec.src).migrations_out += 1
+            self.stats(rec.dst).migrations_in += 1
         if self.tracer is not None:
             self.tracer.on_migration(rec)
 
     def record_failure(self, name: str):
-        self.stats(name).failed = True
-        self.failovers += 1
+        with self._tlock:
+            self.stats(name).failed = True
+            self.failovers += 1
 
     def _log(self, ev):
-        self.events.append(ev)
-        rid = getattr(ev, "rid", "")
-        if rid:
-            self._by_rid.setdefault(rid, []).append(ev)
+        with self._tlock:
+            self.events.append(ev)
+            rid = getattr(ev, "rid", "")
+            if rid:
+                self._by_rid.setdefault(rid, []).append(ev)
 
     def record_event(self, ev):
         """A typed lifecycle transition (LifecycleEvent)."""
@@ -206,13 +220,27 @@ class FleetTelemetry:
         read shows WHY a request moved (the retire event precedes its
         slots' MIGRATING transitions)."""
         self._log(ev)
-        if ev.action == "spawn":
-            self.scale_ups += 1
-        elif ev.action == "retire":
-            self.scale_downs += 1
+        with self._tlock:
+            if ev.action == "spawn":
+                self.scale_ups += 1
+            elif ev.action == "retire":
+                self.scale_downs += 1
         # other actions ("prearm") change no membership counter
         if self.tracer is not None:
             self.tracer.on_scale(ev)
+
+    def record_heartbeat_loss(self, ev):
+        """A liveness-declared engine failure (bus.HeartbeatLoss): the
+        service stopped heartbeating and the fleet clock timed it out.
+        Typed on the unified audit log next to the failover transitions
+        it triggers."""
+        self._log(ev)
+        with self._tlock:
+            self.heartbeat_losses += 1
+
+    def heartbeat_events(self) -> list:
+        return [ev for ev in self.events
+                if getattr(ev, "kind", "") == "heartbeat_loss"]
 
     def scale_events(self) -> list:
         return [ev for ev in self.events
@@ -223,10 +251,11 @@ class FleetTelemetry:
         downshifts read in sequence with the lifecycle transitions and
         scale events that caused them."""
         self._log(ev)
-        if ev.direction == "down":
-            self.downshifts += 1
-        else:
-            self.upshifts += 1
+        with self._tlock:
+            if ev.direction == "down":
+                self.downshifts += 1
+            else:
+                self.upshifts += 1
         if self.tracer is not None:
             self.tracer.on_quality(ev)
 
@@ -238,13 +267,15 @@ class FleetTelemetry:
         self.queue_wait_s.observe(wait_s)
 
     def record_preemption(self):
-        self.preemptions += 1
+        with self._tlock:
+            self.preemptions += 1
 
     def record_resume(self, wait_s: float):
         self.preempt_wait_s.observe(wait_s)
 
     def record_cancelled(self):
-        self.cancelled += 1
+        with self._tlock:
+            self.cancelled += 1
 
     def record_prefix(self, *, hits: int = 0, misses: int = 0,
                       evictions: int = 0, bytes_saved: int = 0):
@@ -252,25 +283,29 @@ class FleetTelemetry:
         ``PrefixCache.stats`` are the source of truth; the controller
         feeds the fleet-wide accumulation here so counters survive the
         engine's retirement)."""
-        self.prefix_hits += hits
-        self.prefix_misses += misses
-        self.prefix_evictions += evictions
-        self.prefix_bytes_saved += bytes_saved
+        with self._tlock:
+            self.prefix_hits += hits
+            self.prefix_misses += misses
+            self.prefix_evictions += evictions
+            self.prefix_bytes_saved += bytes_saved
 
     def record_expired(self):
-        self.expired += 1
+        with self._tlock:
+            self.expired += 1
 
     def record_floor_reject(self, ev):
         """A typed quality-floor admission refusal (FloorReject) on the
         unified audit log: the fleet could never field the demanded
         tier, so the request failed fast instead of queueing."""
         self._log(ev)
-        self.floor_rejects += 1
+        with self._tlock:
+            self.floor_rejects += 1
 
     def events_of(self, rid: str) -> list:
         """This request's audit entries, chronological -- served from
         the per-rid index, not a scan of the whole log."""
-        return list(self._by_rid.get(rid, ()))
+        with self._tlock:
+            return list(self._by_rid.get(rid, ()))
 
     # -- reading ------------------------------------------------------------
     def fleet_tokens(self) -> int:

@@ -40,6 +40,7 @@ from __future__ import annotations
 import hashlib
 import json
 import math
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -85,13 +86,18 @@ class Counter:
     def __init__(self, name: str, help: str = ""):
         self.name, self.help = name, help
         self._values: dict[tuple, float] = {}
+        # service threads and the control plane increment concurrently;
+        # read-modify-write on a dict entry is not atomic under threads
+        self._vlock = threading.Lock()
 
     def inc(self, amount: float = 1.0, **labels):
         k = _label_key(labels)
-        self._values[k] = self._values.get(k, 0.0) + amount
+        with self._vlock:
+            self._values[k] = self._values.get(k, 0.0) + amount
 
     def set(self, value: float, **labels):
-        self._values[_label_key(labels)] = value
+        with self._vlock:
+            self._values[_label_key(labels)] = value
 
     def get(self, **labels) -> float:
         return self._values.get(_label_key(labels), 0.0)
@@ -150,17 +156,21 @@ class WindowedHistogram:
         self._x: list[float] = []        # sample values, same order
         self.count = 0                   # cumulative, never trimmed
         self.total = 0.0
+        # observe() runs on service threads while the control plane
+        # reads percentiles; trim + append must not interleave
+        self._hlock = threading.Lock()
 
     def bind_clock(self, clock):
         self._clock = clock
 
     def observe(self, x: float, t: Optional[float] = None):
         now = self._clock() if t is None else t
-        self._t.append(now)
-        self._x.append(float(x))
-        self.count += 1
-        self.total += float(x)
-        self._trim(now)
+        with self._hlock:
+            self._t.append(now)
+            self._x.append(float(x))
+            self.count += 1
+            self.total += float(x)
+            self._trim(now)
 
     append = observe                     # legacy list spelling
 
@@ -174,7 +184,9 @@ class WindowedHistogram:
             del self._t[:drop], self._x[:drop]
 
     def quantile(self, q: float) -> float:
-        return percentile(self._x, q)
+        with self._hlock:
+            window = list(self._x)
+        return percentile(window, q)
 
     # -- list-compatible window reads ---------------------------------------
     def __len__(self):
@@ -219,6 +231,7 @@ class MetricsRegistry:
     def __init__(self, clock=None):
         self._clock = clock or time.perf_counter
         self._instruments: dict[str, object] = {}
+        self._rlock = threading.Lock()
 
     def bind_clock(self, clock):
         self._clock = clock
@@ -227,10 +240,11 @@ class MetricsRegistry:
                 inst.bind_clock(clock)
 
     def _get(self, cls, name: str, help: str, **kw):
-        inst = self._instruments.get(name)
-        if inst is None:
-            inst = cls(name, help, **kw)
-            self._instruments[name] = inst
+        with self._rlock:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = cls(name, help, **kw)
+                self._instruments[name] = inst
         assert isinstance(inst, cls), \
             f"{name!r} already registered as {type(inst).__name__}"
         return inst
@@ -300,6 +314,21 @@ class Span:
                 "tier": self.tier, "attrs": dict(self.attrs)}
 
 
+def _locked(fn):
+    """Run a Tracer entry point under the instance lock (``self._lock``).
+
+    Every decorated method is atomic relative to the others, so a
+    compound transition (close phase + open hop, say) can never
+    interleave with a concurrent report from an engine thread."""
+    def wrapper(self, *args, **kwargs):
+        with self._lock:
+            return fn(self, *args, **kwargs)
+    wrapper.__name__ = fn.__name__
+    wrapper.__qualname__ = fn.__qualname__
+    wrapper.__doc__ = fn.__doc__
+    return wrapper
+
+
 class Tracer:
     """Builds span trees by consuming the unified audit log.
 
@@ -314,11 +343,17 @@ class Tracer:
 
     The span store is bounded: past ``max_spans`` new spans are counted
     in ``dropped`` instead of created (already-open spans still close),
-    so a long-lived fleet cannot grow the trace without bound."""
+    so a long-lived fleet cannot grow the trace without bound.
+
+    Thread safety: in service mode engine threads record steps, jit
+    builds and wire hops while the control-plane thread consumes the
+    audit log, so every entry point that touches the span store runs
+    under one reentrant lock."""
 
     def __init__(self, clock=None, *, max_spans: int = 200_000):
         self._clock = clock or time.perf_counter
         self._t0 = self._clock()
+        self._lock = threading.RLock()
         self.max_spans = max_spans
         self.spans: list[Span] = []
         self.dropped = 0
@@ -366,6 +401,7 @@ class Tracer:
             sp.attrs.update(attrs)
 
     # -- audit-log consumers (called by FleetTelemetry) ----------------------
+    @_locked
     def on_lifecycle(self, ev):
         """One typed transition -> one span edge."""
         t, rid, dst = ev.t, ev.rid, ev.dst
@@ -412,6 +448,7 @@ class Tracer:
         if sp is not None:
             self._phase[rid] = sp
 
+    @_locked
     def on_migration(self, rec):
         """Annotate the request's hop span with the MigrationRecord's
         facts (wire bytes, lossy/bit-exact, src/dst).  A hand-off that
@@ -439,6 +476,7 @@ class Tracer:
         if not hop.attrs.get("src"):
             hop.attrs["src"] = rec.src
 
+    @_locked
     def on_quality(self, ev):
         """A tier down-/upshift lands as an instantaneous mark span."""
         root = self._root(ev.rid, ev.t)
@@ -449,6 +487,7 @@ class Tracer:
                        reason=ev.reason)
         self._close(sp, ev.t)
 
+    @_locked
     def on_scale(self, ev):
         """Spawn opens an engine-lifetime span that stays open until the
         engine's first productive step (time-to-useful); retire closes
@@ -473,6 +512,7 @@ class Tracer:
                              engine=ev.engine, reason=ev.reason)
             self._close(mark, ev.t)
 
+    @_locked
     def on_engine_step(self, engine: str, tokens: int):
         """First productive step of a spawned engine closes its spawn
         span -- the measured time-to-useful the autoscaler's jit
@@ -483,11 +523,13 @@ class Tracer:
             self._close(sp, t)
             sp.attrs["time_to_useful_s"] = round(sp.duration(), 6)
 
+    @_locked
     def annotate_spawn(self, engine: str, **attrs):
         sp = self._spawn.get(engine)
         if sp is not None:
             sp.attrs.update(attrs)
 
+    @_locked
     def annotate(self, rid: str, **attrs):
         """Attach attributes to the request's currently-open phase span
         (e.g. the router's decision facts at dispatch)."""
@@ -496,6 +538,7 @@ class Tracer:
             sp.attrs.update(attrs)
 
     # -- jit profiling (Engine.profile_hook) ---------------------------------
+    @_locked
     def record_jit(self, engine: str, key: str, wall_s: float, *,
                    cache_hit: bool = False):
         """One jitted program build on ``engine`` took ``wall_s`` real
@@ -521,6 +564,7 @@ class Tracer:
         self._close(sp, now)
 
     # -- wire context (rides pack_slot's meta dict) --------------------------
+    @_locked
     def wire_context(self, rid: str, *, src: str = "") -> Optional[dict]:
         """Trace context for a slot blob about to leave ``src``: the hop
         span opens on the donor *before* the state is packed, and its
@@ -541,6 +585,7 @@ class Tracer:
             return None
         return {"trace_id": rid, "span_id": hop.span_id}
 
+    @_locked
     def bind_hop(self, ctx: Optional[dict], *, dst: str = ""):
         """Destination side of a wire hop: the unpacked blob named the
         donor-opened span; mark it wire-carried (the arrival transition
@@ -554,12 +599,15 @@ class Tracer:
                 hop.attrs["dst"] = dst
 
     # -- reads ---------------------------------------------------------------
+    @_locked
     def trace_of(self, rid: str) -> list[Span]:
         return [sp for sp in self.spans if sp.trace_id == rid]
 
+    @_locked
     def open_spans(self) -> list[Span]:
         return [sp for sp in self.spans if sp.open]
 
+    @_locked
     def close_open(self, *, reason: str = "shutdown"):
         """Close every dangling span (end of run / export time)."""
         t = self._clock()
@@ -571,6 +619,7 @@ class Tracer:
             self._close(sp, t, closed_by=reason)
 
     # -- exporters -----------------------------------------------------------
+    @_locked
     def chrome_trace(self) -> dict:
         """Chrome trace-event JSON (the dict; ``export_chrome`` writes
         it).  One track (tid) per engine plus a ``fleet`` track for
@@ -620,6 +669,7 @@ class Tracer:
         with open(path, "w") as f:
             json.dump(self.chrome_trace(), f)
 
+    @_locked
     def otlp_trace(self) -> dict:
         """OTLP/JSON ``ExportTraceServiceRequest`` (the dict;
         ``export_otlp`` writes it) -- the spans in the standard

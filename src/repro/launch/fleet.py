@@ -39,6 +39,14 @@ slot migrating or parking via the migration path -- once idle:
         --engines edge:edge --slots 2 --autoscale 1:3 \
         --scale-up-queue-depth 3 --scale-cooldown-s 0
 
+Service mode (the control-plane/engine-service split): each engine
+decodes on its own thread behind a mailbox, messages ride loopback TCP
+(length-prefixed msgpack frames), and engines decode *concurrently* --
+jitted steps release the GIL:
+
+    PYTHONPATH=src python -m repro.launch.fleet --tiny --requests 12 \
+        --engines a:edge,b:edge,c:edge --transport socket
+
 Flags
   --arch NAME            model config (default llama-1.5b)
   --tiny                 shrink the config (CPU-friendly smoke scale)
@@ -96,6 +104,17 @@ Flags
   --aging-rate F         priority points gained per second of queue
                          wait, so starved low-priority work eventually
                          dispatches (default 0 = strict priority)
+  --transport MODE       sim (default): the synchronous fleet loop on
+                         the deterministic in-process fabric -- every
+                         contract (bit-exactness, conservation, spec
+                         pairs, autoscaling, preemption) holds here.
+                         socket: service mode -- a ControlPlane plus
+                         one EngineService thread per engine, messages
+                         over loopback TCP; requests stream
+                         concurrently and failures are detected by
+                         heartbeat.  Step-indexed chaos flags (--fail /
+                         --drain / --link-down), --spec-tiers and
+                         --autoscale are sim-only
   --sync-every N         shadow-checkpoint cadence in fleet steps
   --rebalance-every N    load-smoothing cadence (0 = off, default)
   --fail NAME@STEP       fail-stop engine NAME before fleet step STEP;
@@ -218,6 +237,8 @@ def main():
                          "forecast projects the scale-up depth trigger "
                          "within this horizon (0 = keep it topped up)")
     ap.add_argument("--aging-rate", type=float, default=0.0)
+    ap.add_argument("--transport", default="sim",
+                    choices=["sim", "socket"])
     ap.add_argument("--sync-every", type=int, default=1)
     ap.add_argument("--rebalance-every", type=int, default=0)
     ap.add_argument("--fail", default=None, metavar="NAME@STEP")
@@ -368,6 +389,47 @@ def main():
                         priority=prios[i % len(prios)],
                         quality_floor=floors[i % len(floors)],
                         tenant=tenant))
+
+    if args.transport == "socket":
+        if spec_tiers or autoscaler is not None or args.fail \
+                or args.drain or args.link_down:
+            ap.error("--transport socket serves plain engines only: "
+                     "--spec-tiers/--autoscale and the step-indexed "
+                     "chaos flags (--fail/--drain/--link-down) are "
+                     "sim-only (see the README transport matrix)")
+        from repro.core.channel import SocketTransport
+        from repro.fleet import ControlPlane
+        cp = ControlPlane(fleet, transport=SocketTransport(),
+                          sync_every=max(args.sync_every, 1))
+        cp.start(threads=True)
+        import time
+        t0 = time.perf_counter()
+        cp.serve(pending, timeout_s=600.0)
+        wall = time.perf_counter() - t0
+        cp.stop()
+        for rid in sorted(fleet.tickets):
+            t = fleet.tickets[rid]
+            route = "->".join(fleet.placements.get(rid, [])) or "-"
+            out = t.output
+            print(f"{rid}[{t.spec.sensitivity:12s} p{t.spec.priority:<3d} "
+                  f"{t.state.value:9s}] via {route}: "
+                  f"{out[:8]}{'...' if len(out) > 8 else ''}")
+        summ = fleet.telemetry.summary()
+        toks = sum(len(t.output) for t in fleet.tickets.values())
+        print(json.dumps(summ, indent=1))
+        print(f"service mode: {len(fleet.tickets)} requests, "
+              f"{toks} tokens in {wall:.2f}s wall "
+              f"({toks / max(wall, 1e-9):.1f} tok/s aggregate, "
+              f"{fleet.telemetry.heartbeat_losses} heartbeat losses)")
+        if args.trace_out and fleet.tracer is not None:
+            fleet.tracer.close_open(reason="run complete")
+            fleet.tracer.export_chrome(args.trace_out)
+            print(f"trace: {args.trace_out}")
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                f.write(fleet.telemetry.prometheus_text())
+            print(f"metrics: {args.metrics_out}")
+        return
 
     fail = parse_event(args.fail)
     drain = parse_event(args.drain)

@@ -83,50 +83,9 @@ def greedy_spec(rid, prompt, max_new=8, **kw):
                        max_new_tokens=max_new, **kw)
 
 
-def assert_conserved(fleet):
-    """Every ticketed request lives in exactly one place: pending work
-    (fresh or parked), in flight on a registered healthy engine, or a
-    terminal state.  Violations are exactly 'lost' (nowhere) or
-    'duplicated' (in two places)."""
-    queued = {it.rid for it in fleet.queue.ordered()}
-    inflight = set(fleet.inflight)
-    assert not queued & inflight, f"duplicated: {queued & inflight}"
-    for rid, ticket in fleet.tickets.items():
-        places = ((rid in queued) + (rid in inflight)
-                  + (ticket.state in TERMINAL_STATES))
-        assert places == 1, \
-            f"{rid} in {places} places (state {ticket.state.value})"
-    for rid, (req, hname, _) in fleet.inflight.items():
-        assert hname in fleet.handles, f"{rid} on deregistered {hname}"
-        assert fleet.handles[hname].healthy, f"{rid} on dead {hname}"
-    # token-budget conservation: each engine's admission ledger must
-    # agree with an independent walk over its live rows
-    for name, handle in fleet.handles.items():
-        if not handle.healthy:
-            continue
-        eng = handle.engine
-        if getattr(eng, "paged", False):
-            # eng.check() runs the allocator audit (including the
-            # prefix cache's refcount auditor when armed) and asserts
-            # used == row-held private + cache-held shared pages
-            eng.check()
-            cache = getattr(eng, "prefix_cache", None)
-            cached = cache.pages_held if cache is not None else 0
-            shared = getattr(eng, "_shared", {})
-            held = sum(len(eng._row_pages(row)) - len(shared.get(row, ()))
-                       for row in eng.requests)
-            assert eng.allocator.used_pages == held + cached, \
-                (name, eng.allocator.used_pages, held, cached)
-            # refcount-0 shared pages are evictable on demand, so they
-            # still count toward the admission budget
-            evictable = cache.evictable_pages() if cache is not None else 0
-            want = ((eng.allocator.free_pages + evictable) * eng.page_size
-                    if eng.free_slots else 0)
-            assert eng.free_token_budget == want, (name,)
-        elif hasattr(eng, "free_token_budget"):
-            assert len(eng.free_slots) == eng.slots - len(eng.requests)
-            assert eng.free_token_budget \
-                == len(eng.free_slots) * eng.max_len, (name,)
+# the conservation audit is shared with the service-mode/socket suites:
+# the contract is transport-independent (tests/helpers.py)
+from tests.helpers import assert_conserved  # noqa: E402
 
 
 # -- policy decisions (pure, no engines) -------------------------------------

@@ -1,0 +1,401 @@
+"""Service-mode fleet: control plane + engine services over a
+pluggable transport.
+
+The contract under test is the tentpole's promise that splitting the
+synchronous ``FleetController.step()`` loop into per-engine services
+behind mailboxes changes *where* code runs but not *what* it computes:
+
+  * on the deterministic in-process transport, driven threadless tick
+    by tick, service-mode decode is bit-exact against an uninterrupted
+    solo run and the conservation audit holds at every boundary;
+  * over a faulty transport (dropped frames, delayed frames, dead
+    peers) the RPC retry + dedup pair and the heartbeat failure
+    detector keep requests exactly-once: nothing lost, nothing
+    duplicated, and -- because every engine shares one compiled
+    geometry with slots=1 (see test_fleet_autoscale's header for why
+    one-slot engines make the solo oracle exact) -- recovered requests
+    still finish bit-exact.
+
+The socket-transport tests at the bottom run real threads on the real
+clock; they are the concurrency leg of CI (run under pytest-timeout
+there) but stay plugin-free so the local tier-1 suite needs nothing
+extra.
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.configs.tiny import make_tiny
+from repro.core.attestation import TrustAuthority
+from repro.core.channel import (ComposedCondition, NetworkCondition,
+                                SimClock, SocketTransport)
+from repro.core.daemon import EDGE
+from repro.fleet import (ControlPlane, EngineHandle, FleetController,
+                         RequestSpec, RequestState)
+from repro.fleet.bus import decode_message
+from repro.models.init import init_params
+from repro.serving.engine import Engine, Request
+from tests.helpers import assert_conserved
+
+CFG = make_tiny(get("llama-1.5b"))
+PARAMS = None
+SLOTS = 1          # one live request per batch: the solo oracle is exact
+MAX_LEN = 64
+
+
+def _params():
+    global PARAMS
+    if PARAMS is None:
+        PARAMS = init_params(CFG, jax.random.key(0))
+    return PARAMS
+
+
+def mk_engine(seed=0):
+    return Engine(CFG, _params(), slots=SLOTS, max_len=MAX_LEN, seed=seed)
+
+
+def mk_fleet(n=2, *, clock=None):
+    handles = [EngineHandle(f"e{i}", mk_engine(seed=i), EDGE)
+               for i in range(n)]
+    return FleetController(handles, authority=TrustAuthority(),
+                           clock=clock)
+
+
+def reference_output(prompt, max_new, *, seed=1234):
+    eng = mk_engine(seed=seed)
+    req = Request("ref", np.asarray(prompt), max_new_tokens=max_new)
+    eng.add_request(req)
+    while not req.done:
+        eng.step()
+    return req.output
+
+
+def greedy_spec(rid, prompt, max_new=8, **kw):
+    return RequestSpec(rid=rid, prompt=np.asarray(prompt),
+                       max_new_tokens=max_new, **kw)
+
+
+def drive(cp, clk, *, dt=0.02, until=None, max_rounds=3000,
+          skip_services=()):
+    """Threadless deterministic driver: tick the control plane and
+    every (non-wedged) service, advancing the SimClock between rounds
+    so heartbeats, RPC timeouts and deadlines all progress."""
+    for _ in range(max_rounds):
+        if until is not None and until():
+            return
+        cp.tick()
+        for name, svc in cp.services.items():
+            if name not in skip_services:
+                svc.tick()
+        clk.advance(dt)
+    if until is not None:
+        raise AssertionError("driver exhausted max_rounds")
+
+
+# -- deterministic transport: the contracts survive the split ---------------
+
+def test_threadless_inproc_bit_exact_and_conserved():
+    clk = SimClock()
+    fleet = mk_fleet(2, clock=clk)
+    cp = ControlPlane(fleet)
+    cp.start(threads=False)
+    specs = [greedy_spec(f"r{i}", [3 + i, 5, 7], max_new=8)
+             for i in range(4)]
+    tickets = [cp.submit(s) for s in specs]
+    drive(cp, clk, until=lambda: all(t.done for t in tickets))
+    for i, t in enumerate(tickets):
+        assert t.state is RequestState.DONE
+        assert t.output == reference_output([3 + i, 5, 7], 8), t.rid
+    assert_conserved(fleet)
+    # both engines took work: the split kept the whole pool routable
+    assert len({h for hs in fleet.placements.values() for h in hs}) == 2
+    cp.stop()
+    assert fleet.service is None
+
+
+def test_service_mode_cancel_frees_slot_and_conserves():
+    clk = SimClock()
+    fleet = mk_fleet(1, clock=clk)
+    cp = ControlPlane(fleet)
+    cp.start(threads=False)
+    victim = cp.submit(greedy_spec("rv", [3, 5, 7], max_new=32))
+    waiter = cp.submit(greedy_spec("rw", [4, 5, 7], max_new=4))
+    drive(cp, clk, max_rounds=20,
+          until=lambda: victim.state is RequestState.DECODING)
+    assert fleet.cancel("rv")          # routes through the control plane
+    assert victim.state is RequestState.CANCELLED
+    drive(cp, clk, until=lambda: waiter.done)
+    assert waiter.output == reference_output([4, 5, 7], 4)
+    assert_conserved(fleet)
+    cp.stop()
+
+
+# -- per-pair link conditions compose into routing --------------------------
+
+def test_composed_condition_math():
+    a = NetworkCondition(latency_s=0.01, bandwidth_bps=1e9, loss=0.1)
+    b = NetworkCondition(latency_s=0.02, bandwidth_bps=1e8, loss=0.5)
+    c = ComposedCondition(a, None, b)
+    assert c.latency_s == pytest.approx(0.03)
+    assert c.bandwidth_bps == 1e8
+    assert c.loss == pytest.approx(1 - 0.9 * 0.5)
+    assert c.up
+    assert not ComposedCondition(a, NetworkCondition(up=False)).up
+
+
+def test_path_condition_is_live_and_router_reads_it():
+    clk = SimClock()
+    fleet = mk_fleet(2, clock=clk)
+    # the channel fleet.set_link hands out must see conditions set later
+    ch = fleet.fabric.link("e0", "e1")
+    fleet.fabric.set_endpoint("e0", NetworkCondition(latency_s=0.5))
+    assert ch.cond.latency_s == pytest.approx(
+        0.5 + fleet.fabric.default_cond.latency_s)
+    # a dead endpoint uplink makes the *path* unreachable even though
+    # the pair link itself is fine -- the router must skip that engine
+    fleet.set_link("e0", NetworkCondition(up=False))
+    cp = ControlPlane(fleet)
+    cp.start(threads=False)
+    t = cp.submit(greedy_spec("r0", [3, 5, 7], max_new=4))
+    drive(cp, clk, until=lambda: t.done)
+    assert fleet.placements["r0"] == ["e1"]
+    cp.stop()
+
+
+# -- fault injection on the deterministic transport -------------------------
+
+def test_dropped_frames_lose_nothing_duplicate_nothing():
+    """Drop every third frame on the floor (places, acks, reports and
+    heartbeats alike): RPC retry + receiver dedup + heartbeat re-offer
+    of completions must still finish every request bit-exact."""
+    clk = SimClock()
+    fleet = mk_fleet(2, clock=clk)
+    cp = ControlPlane(fleet, rpc_timeout_s=0.1)
+    seen = {"n": 0}
+
+    def fault(src, dst, payload):
+        seen["n"] += 1
+        if seen["n"] % 3 == 0:
+            return "drop"
+        return None
+
+    cp.transport.fault = fault
+    cp.start(threads=False)
+    specs = [greedy_spec(f"r{i}", [3 + i, 5, 7], max_new=6)
+             for i in range(4)]
+    tickets = [cp.submit(s) for s in specs]
+    drive(cp, clk, until=lambda: all(t.done for t in tickets))
+    cp.transport.fault = None
+    assert cp.transport.dropped > 0
+    for i, t in enumerate(tickets):
+        assert t.state is RequestState.DONE
+        assert t.output == reference_output([3 + i, 5, 7], 6), t.rid
+    assert_conserved(fleet)
+    cp.stop()
+
+
+def test_delayed_frames_do_not_double_place():
+    """Delay the first ack of every RPC: the control plane retries, the
+    service re-acks from its dedup cache, and when the stale originals
+    finally arrive they must be ignored (the rpc entry is gone) -- one
+    placement, one finalization, bit-exact output."""
+    clk = SimClock()
+    fleet = mk_fleet(2, clock=clk)
+    cp = ControlPlane(fleet, rpc_timeout_s=0.1)
+    delayed: set[int] = set()
+
+    def fault(src, dst, payload):
+        msg = decode_message(payload)
+        if msg.type == "ack" and msg.req_id not in delayed:
+            delayed.add(msg.req_id)
+            return ("delay", 1.0)
+        return None
+
+    cp.transport.fault = fault
+    cp.start(threads=False)
+    specs = [greedy_spec(f"r{i}", [3 + i, 5, 7], max_new=6)
+             for i in range(3)]
+    tickets = [cp.submit(s) for s in specs]
+    rounds = {"n": 0}
+
+    def step_and_release():
+        rounds["n"] += 1
+        if all(t.done for t in tickets):
+            return True
+        if rounds["n"] % 16 == 0:
+            # stale originals land well after the retry was re-acked
+            cp.transport.release_held()
+        return False
+
+    drive(cp, clk, until=step_and_release)
+    cp.transport.fault = None
+    cp.transport.release_held()
+    assert delayed                     # the fault actually fired
+    for i, t in enumerate(tickets):
+        assert t.state is RequestState.DONE
+        assert t.output == reference_output([3 + i, 5, 7], 6), t.rid
+        # exactly one engine ever held the request: no double placement
+        assert len(fleet.placements[t.rid]) == 1
+    assert_conserved(fleet)
+    cp.stop()
+
+
+def test_heartbeat_loss_declares_failure_and_fails_over():
+    """A wedged service stops heartbeating: the detector times it out
+    on the fleet clock, a typed HeartbeatLoss lands on the audit log,
+    and its slots re-place through the parked failover path -- the
+    bugfix satellite, deterministic on a SimClock."""
+    clk = SimClock()
+    fleet = mk_fleet(2, clock=clk)
+    cp = ControlPlane(fleet, sync_every=2, hb_timeout_s=0.5,
+                      rpc_timeout_s=0.1)
+    cp.start(threads=False)
+    t0 = cp.submit(greedy_spec("r0", [3, 5, 7], max_new=24))
+    t1 = cp.submit(greedy_spec("r1", [4, 5, 7], max_new=24))
+    # run until both engines hold work and e0 has shipped a shadow
+    drive(cp, clk, dt=0.02,
+          until=lambda: len(fleet.inflight) == 2
+          and any(fleet.balancer.shadow.values()))
+    on_e0 = [rid for rid, (_, h, _) in fleet.inflight.items()
+             if h == "e0"]
+    assert on_e0
+    # e0 wedges: no more ticks, so no more heartbeats
+    drive(cp, clk, dt=0.1, skip_services={"e0"},
+          until=lambda: not fleet.handles["e0"].healthy)
+    lost = fleet.telemetry.heartbeat_events()
+    assert lost and lost[0].engine == "e0"
+    assert lost[0].kind == "heartbeat_loss"
+    assert lost[0].timeout_s == pytest.approx(0.5)
+    # the survivor finishes everything, bit-exact (slots=1 oracle)
+    drive(cp, clk, dt=0.02, skip_services={"e0"},
+          until=lambda: t0.done and t1.done)
+    assert t0.output == reference_output([3, 5, 7], 24)
+    assert t1.output == reference_output([4, 5, 7], 24)
+    assert_conserved(fleet)
+    cp.stop()
+
+
+# -- socket transport: real threads, real clock -----------------------------
+# CI runs these under pytest-timeout (the concurrency leg); locally they
+# are bounded by serve()'s own wall timeouts.
+
+def _drain_threaded(cp, tickets, timeout_s=120.0):
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < timeout_s:
+        if all(t.done for t in tickets):
+            return
+        time.sleep(0.01)
+    states = {t.rid: t.state.value for t in tickets}
+    raise AssertionError(f"timeout; states={states}")
+
+
+def test_socket_transport_frames_roundtrip():
+    tp = SocketTransport()
+    got = []
+    tp.register("a", lambda b: got.append(("a", b)))
+    tp.register("b", lambda b: got.append(("b", b)))
+    big = bytes(range(256)) * 4096          # multi-read frame (1 MiB)
+    assert tp.send("a", "b", b"hello")
+    assert tp.send("b", "a", big)
+    deadline = time.perf_counter() + 10.0
+    while len(got) < 2 and time.perf_counter() < deadline:
+        time.sleep(0.005)
+    assert sorted(got)[0] == ("a", big)
+    assert sorted(got)[1] == ("b", b"hello")
+    assert not tp.send("a", "nobody", b"x")  # unknown peer: refused
+    tp.close()
+
+
+def test_socket_fleet_serves_concurrently_with_faults():
+    """Loopback-socket fleet under a lossy/laggy fault hook (every
+    17th frame dropped, every 23rd delayed): every request still
+    completes with exactly its requested token stream."""
+    fleet = mk_fleet(3)
+    cp = ControlPlane(fleet, transport=SocketTransport(),
+                      rpc_timeout_s=0.2, hb_timeout_s=30.0)
+    count = {"n": 0}
+
+    def fault(src, dst, payload):
+        count["n"] += 1                # GIL-atomic enough for a test
+        if count["n"] % 17 == 0:
+            return "drop"
+        if count["n"] % 23 == 0:
+            return ("delay", 0.05)
+        return None
+
+    cp.transport.fault = fault
+    cp.start(threads=True)
+    try:
+        specs = [greedy_spec(f"r{i}", [3 + i, 5, 7], max_new=8)
+                 for i in range(6)]
+        tickets = [cp.submit(s) for s in specs]
+        _drain_threaded(cp, tickets)
+        for i, t in enumerate(tickets):
+            assert t.state is RequestState.DONE
+            assert t.output == reference_output([3 + i, 5, 7], 8), t.rid
+    finally:
+        cp.transport.fault = None
+        cp.stop()
+    assert_conserved(fleet)
+
+
+def test_socket_peer_death_mid_flight_fails_over():
+    """Kill one service dead (thread stopped, endpoint closed, zero
+    cleanup) while its slot decodes and placements are in flight: the
+    heartbeat detector must notice, re-place the work, and every
+    request must finish exactly once, bit-exact."""
+    fleet = mk_fleet(3)
+    cp = ControlPlane(fleet, transport=SocketTransport(),
+                      sync_every=2, hb_timeout_s=0.6, rpc_timeout_s=0.2)
+    cp.start(threads=True)
+    try:
+        specs = [greedy_spec(f"r{i}", [3 + i, 5, 7], max_new=24)
+                 for i in range(6)]
+        tickets = [cp.submit(s) for s in specs]
+        deadline = time.perf_counter() + 60.0
+        while time.perf_counter() < deadline:
+            with fleet._lock:
+                victimized = any(h == "e0"
+                                 for _, h, _ in fleet.inflight.values())
+            if victimized:
+                break
+            time.sleep(0.01)
+        assert victimized, "e0 never took work"
+        cp.kill_service("e0")
+        _drain_threaded(cp, tickets)
+        assert not fleet.handles["e0"].healthy
+        lost = fleet.telemetry.heartbeat_events()
+        assert any(ev.engine == "e0" for ev in lost)
+        for i, t in enumerate(tickets):
+            assert t.state is RequestState.DONE
+            assert t.output == reference_output([3 + i, 5, 7], 24), t.rid
+    finally:
+        cp.stop()
+    assert_conserved(fleet)
+
+
+def test_threaded_submit_and_ticket_result_from_user_thread():
+    """result() in service mode must wait, not drive: callers block on
+    the service loops from any thread."""
+    fleet = mk_fleet(2)
+    cp = ControlPlane(fleet)
+    cp.start(threads=True)
+    try:
+        ticket = cp.submit(greedy_spec("r0", [3, 5, 7], max_new=8))
+        out = ticket.result(max_steps=100_000)
+        assert out == reference_output([3, 5, 7], 8)
+        # concurrent result() calls from a second user thread
+        t2 = cp.submit(greedy_spec("r1", [4, 5, 7], max_new=8))
+        got = {}
+        th = threading.Thread(
+            target=lambda: got.update(r1=t2.result(max_steps=100_000)))
+        th.start()
+        th.join(timeout=60.0)
+        assert got["r1"] == reference_output([4, 5, 7], 8)
+    finally:
+        cp.stop()
